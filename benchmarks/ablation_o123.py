@@ -1,0 +1,45 @@
+"""Paper Fig. 11: optimization-version breakdown.
+
+  O1: static full-graph-level CSR kernel
+  O2: static per-subgraph kernels (CSR intra + COO inter)
+  O3: subgraph-level *adaptive* kernels (full AdaptGear)
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit, emit
+from repro.core import adaptgear, decompose, selector as sel_mod
+from repro.graphs import graph as G
+
+DATASETS = ["cora", "citeseer", "pubmed"]
+
+
+def run(scale: float = 0.08, feat: int = 32, verbose: bool = True):
+    rows = []
+    for name in DATASETS:
+        g = G.synth_dataset(name, scale=scale, seed=0, max_feat=feat)
+        dec = decompose.decompose(g, comm_size=16, method="louvain")
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((dec.n_pad, feat)), jnp.float32)
+
+        t_o1 = timeit(jax.jit(
+            lambda x: adaptgear.aggregate_full_static(dec, x, "ell")), x)
+        t_o2 = timeit(jax.jit(
+            lambda x: adaptgear.aggregate(dec, x, "ell", "coo")), x)
+        sel = sel_mod.AdaptiveSelector(dec, warmup_iters=1)
+        choice = sel.probe(x, iters=1).choice
+        t_o3 = timeit(jax.jit(
+            lambda x: adaptgear.aggregate(dec, x, *choice)), x)
+        rows.append(dict(dataset=name, o1_us=t_o1 * 1e6, o2_us=t_o2 * 1e6,
+                         o3_us=t_o3 * 1e6, choice=choice))
+        if verbose:
+            emit(f"fig11_{name}", t_o3 * 1e6,
+                 f"o1={t_o1*1e6:.0f};o2={t_o2*1e6:.0f};o3={t_o3*1e6:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

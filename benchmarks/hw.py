@@ -1,0 +1,9 @@
+"""Hardware model constants (target: TPU v5e) used by the roofline analysis
+and the selector's analytic cost model."""
+
+PEAK_FLOPS_BF16 = 197e12       # per chip, bf16
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW_PER_LINK = 50e9         # bytes/s per link
+VMEM_BYTES = 16 * 2**20        # ~16 MiB usable VMEM (v5e ~128MB CMEM? use 16MiB/core working spec)
+CHIPS_PER_POD = 256
+MXU_DIM = 128

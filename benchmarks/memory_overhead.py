@@ -1,0 +1,58 @@
+"""Paper Fig. 12: memory overhead of storing the decomposed subgraph
+topology vs total training memory (features + activations + params + grads
++ optimizer moments)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from repro.core import decompose
+from repro.graphs import graph as G
+
+DATASETS = ["cora", "citeseer", "pubmed", "proteins_full"]
+
+
+def fmt_bytes(fmt) -> int:
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(fmt)
+               if hasattr(a, "size"))
+
+
+def selected_topology_bytes(dec, intra_k: str, inter_k: str) -> int:
+    """Bytes of the formats the selector actually keeps on device."""
+    intra = {"block_diag": [dec.intra_bd], "ell": [dec.intra_ell],
+             "coo": [dec.intra_coo]}[intra_k]
+    inter = {"bell": [dec.inter_bell, dec.inter_bell_t],
+             "ell": [dec.inter_ell, dec.inter_coo],   # ell fwd + coo-T bwd
+             "coo": [dec.inter_coo]}[inter_k]
+    return sum(fmt_bytes(f) for f in intra + inter)
+
+
+def run(scale: float = 0.05, hidden: int = 16, verbose: bool = True):
+    from repro.core import selector as sel_mod
+    rows = []
+    for name in DATASETS:
+        g = G.synth_dataset(name, scale=scale, seed=0)
+        dec = decompose.decompose(g, comm_size=16, method="louvain")
+        # topology bytes for the SELECTED pair only — what lives on device
+        # during training (paper Fig. 12 counts the kept subgraph tensors)
+        ik, ek = sel_mod.select_by_cost_model(dec, hidden, hw=sel_mod.CPU_HW)
+        topo = selected_topology_bytes(dec, ik, ek)
+        feat = g.features.size * 4
+        nf = g.features.shape[1]
+        # GCN training footprint: features + 2x activations + params(+grads,
+        # +2 Adam moments)
+        act = dec.n_pad * hidden * 4 * 2 * 2
+        params = (nf * hidden + hidden * g.n_classes) * 4 * 4
+        total = feat + act + params + topo
+        frac = topo / total
+        rows.append(dict(dataset=name, topo_mb=topo / 2**20,
+                         total_mb=total / 2**20, frac=frac))
+        if verbose:
+            emit(f"fig12_{name}", 0.0,
+                 f"topo={topo/2**20:.2f}MB;total={total/2**20:.2f}MB;"
+                 f"frac={frac*100:.2f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,210 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""§Perf hillclimbing: hypothesis -> change -> measure -> validate, for the
+three selected (arch x shape) cells (see EXPERIMENTS.md §Perf for the
+selection rationale):
+
+  qwen2_5_14b  x train_4k    -- most collective-bound cell
+  whisper_large_v3 x prefill_32k -- worst roofline fraction
+  deepseek_v3_671b x train_4k -- most representative of the paper's
+                                 technique (density-adaptive MoE dispatch)
+
+Each variant re-lowers the cell through the scan-corrected cost pipeline
+(benchmarks/roofline.py) with config/sharding overrides.  The flash variant
+uses measured attention-core isolation: costs are re-measured with
+attn_core="identity" and the Pallas flash kernel's analytic FLOPs/HBM bytes
+(kernels/flash_attention.py, validated against the oracle in tests) are
+added back — because XLA on the CPU dry-run cannot express VMEM-resident
+attention, while the TPU kernel does exactly that.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterations --out results/perf.json
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from benchmarks import hw                                 # noqa: E402
+from benchmarks.roofline import (corrected_costs, model_flops)  # noqa: E402
+from repro import configs                                 # noqa: E402
+from repro.kernels.flash_attention import (flash_flops,   # noqa: E402
+                                           flash_hbm_bytes)
+from repro.launch import mesh as mesh_mod                 # noqa: E402
+
+N_CHIPS = 256
+
+
+def attn_shape(cfg, shape_name):
+    sh = configs.SHAPES[shape_name]
+    if sh["mode"] == "decode":
+        sq, skv = 1, sh["seq"]
+    else:
+        sq = skv = sh["seq"]
+    return sh["batch"], sq, skv
+
+
+def flash_cell_costs(cfg, shape_name, train: bool) -> dict:
+    """Analytic per-device cost of running every attention core through the
+    Pallas flash kernel (GQA-aware; MLA uses qk_dim/v_dim head geometry)."""
+    B, sq, skv = attn_shape(cfg, shape_name)
+    if cfg.attn_type == "mla":
+        hq, hkv, d = cfg.n_heads, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim
+    else:
+        hq, hkv, d = cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    if cfg.family == "encdec":
+        layers = []
+        layers.append(("enc", cfg.encoder_layers, cfg.encoder_seq,
+                       cfg.encoder_seq, False))
+        layers.append(("dec_self", cfg.n_layers, sq, sq, True))
+        layers.append(("dec_cross", cfg.n_layers, sq, cfg.encoder_seq, False))
+    elif cfg.layer_pattern == "jamba":
+        layers = [("attn", cfg.n_layers // 8, sq, skv, True)]
+    elif cfg.layer_pattern == "rwkv":
+        layers = []
+    else:
+        layers = [("attn", cfg.n_layers, sq, skv, True)]
+    fl = by = 0.0
+    mult = 3.0 if train else 1.0   # bwd = 2x fwd with flash recompute
+    for _, n, s_q, s_kv, causal in layers:
+        fl += n * mult * flash_flops(B, hq, s_q, s_kv, d, causal=causal)
+        by += n * mult * flash_hbm_bytes(B, hq, hkv, s_q, s_kv, d)
+    return dict(flops=fl / N_CHIPS, bytes=by / N_CHIPS, coll=0.0)
+
+
+def terms_of(costs: dict) -> dict:
+    return dict(compute=costs["flops"] / hw.PEAK_FLOPS_BF16,
+                memory=costs["bytes"] / hw.HBM_BW,
+                collective=costs["coll"] / hw.ICI_BW_PER_LINK)
+
+
+def run_cell(arch: str, shape_name: str, variants: list[dict], mesh,
+             out_rows: list):
+    cfg = configs.get_config(arch)
+    sh = configs.SHAPES[shape_name]
+    mf = model_flops(cfg, sh["mode"], sh["seq"], sh["batch"]) / N_CHIPS
+    print(f"\n=== {arch} x {shape_name} ===", flush=True)
+    prev_dom = None
+    for v in variants:
+        extra = dict(v.get("extra", {}))
+        rules = v.get("rules")
+        if v.get("flash"):
+            # measured isolation: identity-core probe + analytic flash cost
+            ident = corrected_costs(arch, shape_name, mesh,
+                                    extra={**extra, "attn_core": "identity"},
+                                    rules_overrides=rules)
+            fc = flash_cell_costs(
+                cfg if "n_heads" not in extra else
+                __import__("dataclasses").replace(
+                    cfg, n_heads=extra["n_heads"],
+                    kv_heads=extra.get("kv_heads", cfg.kv_heads)),
+                shape_name, train=(sh["mode"] == "train"))
+            costs = {k: ident[k] + fc[k] for k in ("flops", "bytes", "coll")}
+        else:
+            costs = corrected_costs(arch, shape_name, mesh, extra=extra,
+                                    rules_overrides=rules)
+        t = terms_of(costs)
+        dom = max(t, key=t.get)
+        frac = (mf / hw.PEAK_FLOPS_BF16) / max(max(t.values()), 1e-30)
+        row = dict(arch=arch, shape=shape_name, variant=v["name"],
+                   hypothesis=v["hypothesis"], **{f"t_{k}_s": tv
+                                                  for k, tv in t.items()},
+                   dominant=dom, roofline_fraction=frac,
+                   flops_per_dev=costs["flops"], bytes_per_dev=costs["bytes"],
+                   coll_bytes_per_dev=costs["coll"])
+        out_rows.append(row)
+        print(f"  {v['name']:28s} c={t['compute']:.3e} m={t['memory']:.3e} "
+              f"x={t['collective']:.3e} dom={dom:10s} frac={frac:.2%}",
+              flush=True)
+        prev_dom = dom
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/perf.json")
+    ap.add_argument("--cell", default=None,
+                    help="qwen | whisper | dsv3 (default: all)")
+    args = ap.parse_args()
+    mesh = mesh_mod.make_production_mesh(multi_pod=False)
+    rows: list[dict] = []
+
+    cells = {
+        "qwen": ("qwen2_5_14b", "train_4k", [
+            dict(name="v0_baseline",
+                 hypothesis="baseline: 40 heads !% 16 -> attention runs "
+                            "head-replicated; expect collective-dominant"),
+            dict(name="v1_pad_heads_48_16",
+                 hypothesis="pad heads 40->48, kv 8->16 (+20% attn params) "
+                            "=> head-dim TP becomes divisible; the S^2 "
+                            "score tensors shard 16-way; predict collective "
+                            "term drops ~10x and memory ~2x",
+                 extra=dict(n_heads=48, kv_heads=16)),
+            dict(name="v2_pad_heads_flash",
+                 hypothesis="Pallas flash attention keeps scores in VMEM: "
+                            "predict memory term falls from S^2 (~1e13 B) "
+                            "to QKVO streaming (~1e10 B) -> compute-bound",
+                 extra=dict(n_heads=48, kv_heads=16), flash=True),
+            dict(name="v3_flash_remat_full",
+                 hypothesis="with memory no longer dominant, full remat "
+                            "trades flops for bytes; predict <5% change in "
+                            "the dominant term (stop-rule probe)",
+                 extra=dict(n_heads=48, kv_heads=16, remat="full"),
+                 flash=True),
+        ]),
+        "whisper": ("whisper_large_v3", "prefill_32k", [
+            dict(name="v0_baseline",
+                 hypothesis="decoder self-attn at 32k dominates: S^2 scores "
+                            "~32768^2*20H -> memory-bound"),
+            dict(name="v1_flash",
+                 hypothesis="flash substitution removes enc 1500^2, dec "
+                            "32k^2 and cross 32kx1500 score traffic; "
+                            "predict memory term drops >10x",
+                 flash=True),
+            dict(name="v2_flash_pad_heads",
+                 hypothesis="20 heads !% 16: pad to 32 (+60% attn flops) to "
+                            "unlock head TP; predict collective down but "
+                            "compute up — net win only if collective "
+                            "dominated after v1",
+                 extra=dict(n_heads=32, kv_heads=32), flash=True),
+        ]),
+        "dsv3": ("deepseek_v3_671b", "train_4k", [
+            dict(name="v0_baseline_sparse",
+                 hypothesis="baseline uses AdaptGear's sparse dispatch "
+                            "(density 8/256=3%); memory-bound via MLA "
+                            "S^2 + dispatch buffers"),
+            dict(name="v1_dense_dispatch",
+                 hypothesis="paper-technique validation: dense all-expert "
+                            "path at 3% density should explode compute "
+                            "~E/topk=32x — confirms the selector's choice",
+                 extra=dict(moe_dispatch="dense")),
+            dict(name="v2_capacity_1_0",
+                 hypothesis="capacity factor 1.25->1.0 shrinks dispatch "
+                            "buffers and expert GEMMs 20%; predict memory "
+                            "term down ~5-10% (MoE share of bytes)",
+                 extra=dict(capacity_factor=1.0)),
+            dict(name="v3_flash_mla",
+                 hypothesis="flash for the MLA core (128 heads, qk 192): "
+                            "removes S^2 score traffic; predict memory "
+                            "term drops >5x, dominant flips",
+                 flash=True),
+            dict(name="v4_flash_capacity_1_0",
+                 hypothesis="combine v2+v3; predict additive small gain on "
+                            "top of v3",
+                 extra=dict(capacity_factor=1.0), flash=True),
+        ]),
+    }
+    targets = [args.cell] if args.cell else list(cells)
+    for key in targets:
+        arch, shape, variants = cells[key]
+        run_cell(arch, shape, variants, mesh, rows)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

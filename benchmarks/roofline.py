@@ -1,0 +1,242 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Roofline analysis (§Roofline of EXPERIMENTS.md).
+
+Derives, per (architecture x input shape) on the single-pod 16x16 mesh:
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / ICI link bw   (per chip)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+from summing operand sizes of all-gather/all-reduce/reduce-scatter/
+all-to-all/collective-permute in the compiled HLO text.
+
+SCAN CORRECTION.  XLA's cost analysis counts a while-loop body ONCE, and the
+production configs scan over layers.  We therefore lower each cell at 2-3
+small UNROLLED layer counts (same remat, same shardings, scan_layers=False),
+solve the linear system for (base, per-layer) costs, and compose to the full
+depth.  This is exact for layer-local costs (XLA optimizations do not cross
+layer boundaries in these graphs) and is validated against a directly
+unrolled mid-size model in tests.
+
+MODEL_FLOPS uses 6*N*D (training) / 2*N*D (inference) with N = active
+non-embedding params (MoE counts shared + top_k/E of routed experts).
+
+  PYTHONPATH=src python -m benchmarks.roofline --out results/roofline.json
+  PYTHONPATH=src python -m benchmarks.roofline --arch rwkv6_7b --shape train_4k
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+
+import numpy as np   # noqa: E402
+
+from benchmarks import hw                      # noqa: E402
+from repro import configs                      # noqa: E402
+from repro.launch import mesh as mesh_mod      # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# active-parameter counting (for MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def active_params(cfg) -> float:
+    """Non-embedding params touched per token (MoE: shared + top_k routed)."""
+    import jax
+    from repro.models import lm
+
+    def layer_params(kind):
+        shapes = jax.eval_shape(
+            lambda: lm.init_layer(jax.random.PRNGKey(0), cfg, kind))
+        return shapes
+
+    total = 0.0
+    for kind, n in cfg.layer_groups():
+        shapes = layer_params(kind)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+            keys = "/".join(str(getattr(p, "key", "")) for p in path)
+            size = float(np.prod(leaf.shape))
+            if "w_gate" in keys or "w_up" in keys or "w_down" in keys:
+                # routed experts in an (E, ., .) stack -> top_k/E active
+                if len(leaf.shape) == 3 and leaf.shape[0] == cfg.n_experts \
+                        and cfg.n_experts:
+                    size *= cfg.top_k / cfg.n_experts
+            total += size * n
+    # lm head is a real matmul per token
+    total += cfg.d_model * cfg.padded_vocab
+    if cfg.mtp:
+        total += 2 * cfg.d_model * cfg.d_model
+    return total
+
+
+def model_flops(cfg, mode: str, seq: int, batch: int) -> float:
+    n_act = active_params(cfg)
+    if mode == "train":
+        return 6.0 * n_act * seq * batch
+    if mode == "prefill":
+        return 2.0 * n_act * seq * batch
+    return 2.0 * n_act * batch      # decode: one token per sequence
+
+
+# ---------------------------------------------------------------------------
+# scan-corrected costs via small unrolled probes
+# ---------------------------------------------------------------------------
+
+def _probe(arch, shape_name, mesh, overrides, extra=None,
+           rules_overrides=None):
+    from repro.launch.dryrun import dryrun_cell
+    base = dict(scan_layers=False, mtp=False)
+    base.update(overrides)
+    base.update(extra or {})
+    r = dryrun_cell(arch, shape_name, mesh, verbose=False,
+                    model_overrides=base, rules_overrides=rules_overrides)
+    assert r["status"] == "ok", r
+    return dict(flops=r["flops"], bytes=r["bytes_accessed"],
+                coll=float(r["collective_bytes"]["total"]),
+                mem=r["memory"])
+
+
+def _lin(a, b):
+    """per-unit cost from two probes differing by one unit."""
+    return {k: b[k] - a[k] for k in ("flops", "bytes", "coll")}
+
+
+def _compose(base_probe, units):
+    """base_probe costs minus probe-units plus full-depth units."""
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        out[k] = base_probe[k] + sum(per[k] * extra for per, extra in units)
+    return out
+
+
+def corrected_costs(arch: str, shape_name: str, mesh, extra: dict | None = None,
+                    rules_overrides: dict | None = None) -> dict:
+    """Compose full-depth costs from small unrolled probes.  ``extra``
+    model-config overrides and ``rules_overrides`` sharding-rule overrides
+    define §Perf variants (head padding, dispatch path, remat policy...)."""
+    cfg = configs.get_config(arch)
+    L = cfg.n_layers
+    kw = dict(extra=extra, rules_overrides=rules_overrides)
+    if cfg.family == "encdec":
+        p11 = _probe(arch, shape_name, mesh,
+                     dict(n_layers=1, encoder_layers=1), **kw)
+        p21 = _probe(arch, shape_name, mesh,
+                     dict(n_layers=1, encoder_layers=2), **kw)
+        p12 = _probe(arch, shape_name, mesh,
+                     dict(n_layers=2, encoder_layers=1), **kw)
+        enc = _lin(p11, p21)
+        dec = _lin(p11, p12)
+        return _compose(p11, [(enc, cfg.encoder_layers - 1), (dec, L - 1)])
+    if cfg.layer_pattern == "jamba":
+        p1 = _probe(arch, shape_name, mesh, dict(n_layers=8), **kw)
+        p2 = _probe(arch, shape_name, mesh, dict(n_layers=16), **kw)
+        per = _lin(p1, p2)
+        return _compose(p1, [(per, L // 8 - 1)])
+    if cfg.n_experts and cfg.first_k_dense:
+        pa = _probe(arch, shape_name, mesh,
+                    dict(n_layers=2, first_k_dense=1), **kw)
+        pb = _probe(arch, shape_name, mesh,
+                    dict(n_layers=3, first_k_dense=1), **kw)
+        pc = _probe(arch, shape_name, mesh,
+                    dict(n_layers=3, first_k_dense=2), **kw)
+        moe = _lin(pa, pb)
+        dense = {k: pc[k] - pb[k] + moe[k] for k in moe}
+        return _compose(pa, [(dense, cfg.first_k_dense - 1),
+                             (moe, (L - cfg.first_k_dense) - 1)])
+    # uniform decoder (dense / uniform-moe / rwkv)
+    p1 = _probe(arch, shape_name, mesh, dict(n_layers=1, first_k_dense=0), **kw)
+    p2 = _probe(arch, shape_name, mesh, dict(n_layers=2, first_k_dense=0), **kw)
+    per = _lin(p1, p2)
+    return _compose(p1, [(per, L - 1)])
+
+
+# ---------------------------------------------------------------------------
+# the three terms
+# ---------------------------------------------------------------------------
+
+def roofline_row(arch: str, shape_name: str, mesh, n_chips: int = 256) -> dict:
+    cfg = configs.get_config(arch)
+    ok, reason = configs.shape_applicable(cfg, shape_name)
+    if not ok:
+        return dict(arch=arch, shape=shape_name, status="skipped",
+                    reason=reason)
+    sh = configs.SHAPES[shape_name]
+    costs = corrected_costs(arch, shape_name, mesh)
+    # cost_analysis is per-device (the SPMD-partitioned program)
+    t_compute = costs["flops"] / hw.PEAK_FLOPS_BF16
+    t_memory = costs["bytes"] / hw.HBM_BW
+    t_coll = costs["coll"] / hw.ICI_BW_PER_LINK
+    terms = dict(compute=t_compute, memory=t_memory, collective=t_coll)
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, sh["mode"], sh["seq"], sh["batch"]) / n_chips
+    useful = mf / max(costs["flops"], 1.0)
+    frac = (mf / hw.PEAK_FLOPS_BF16) / max(max(terms.values()), 1e-30)
+    return dict(arch=arch, shape=shape_name, status="ok", mode=sh["mode"],
+                flops_per_dev=costs["flops"], bytes_per_dev=costs["bytes"],
+                coll_bytes_per_dev=costs["coll"],
+                t_compute_s=t_compute, t_memory_s=t_memory,
+                t_collective_s=t_coll, dominant=dominant,
+                model_flops_per_dev=mf, useful_flop_ratio=useful,
+                roofline_fraction=frac)
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_flop_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.2%} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    mesh = mesh_mod.make_production_mesh(multi_pod=False)
+    archs = [args.arch] if args.arch else configs.ARCHS
+    shapes = [args.shape] if args.shape else list(configs.SHAPES)
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            try:
+                r = roofline_row(arch, shape, mesh)
+            except Exception as e:
+                import traceback
+                traceback.print_exc()
+                r = dict(arch=arch, shape=shape, status="FAILED",
+                         error=str(e)[-500:])
+            rows.append(r)
+            if r["status"] == "ok":
+                print(f"{arch:20s} {shape:12s} dom={r['dominant']:10s} "
+                      f"c={r['t_compute_s']:.2e} m={r['t_memory_s']:.2e} "
+                      f"x={r['t_collective_s']:.2e} "
+                      f"useful={r['useful_flop_ratio']:.2f} "
+                      f"frac={r['roofline_fraction']:.1%}", flush=True)
+            else:
+                print(f"{arch:20s} {shape:12s} {r['status']}", flush=True)
+    print()
+    print(fmt_table(rows))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Batched LM serving demo on the assigned-architecture stack: prefill a
+batch of prompts, greedy-decode continuations.
+
+  PYTHONPATH=src python examples/serve_lm.py --arch rwkv6_7b --gen 24
+"""
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2_1_8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+    out = serve.serve(args.arch, reduced=True, batch=args.batch,
+                      prompt_len=args.prompt_len, gen=args.gen)
+    print("generated token ids:\n", out["tokens"])
+
+
+if __name__ == "__main__":
+    main()

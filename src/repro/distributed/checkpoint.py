@@ -1,0 +1,140 @@
+"""Fault-tolerant checkpointing.
+
+Design (multi-host ready, exercised single-host in tests):
+  * atomic: write to ``step_<N>.tmp/``, fsync, rename to ``step_<N>/`` —
+    a crash mid-write never corrupts the restore set
+  * async: a background thread serializes device_get'd arrays so the train
+    loop only blocks for the host copy, not the disk write
+  * integrity: every array file carries a crc32 in the manifest; restore
+    validates and falls back to the previous step on mismatch
+  * resharding restore: arrays are saved as full (host-replicated) numpy;
+    ``restore`` accepts a target sharding tree and uses
+    jax.device_put(..., sharding) so the same checkpoint restores onto any
+    mesh (elastic scaling path)
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import zlib
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+        self.wait()   # never two writers
+        if self.async_write and not blocking:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_tree)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree) -> None:
+        tmp = os.path.join(self.dir, f"step_{step:012d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:012d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat, _ = _flatten_with_paths(host_tree)
+        manifest = {"step": step, "arrays": {}}
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **{k: v for k, v in flat})
+        with open(os.path.join(tmp, "arrays.npz"), "rb") as f:
+            crc = zlib.crc32(f.read())
+        manifest["npz_crc32"] = crc
+        manifest["keys"] = [k for k, _ in flat]
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:012d}"),
+                          ignore_errors=True)
+
+    # -- restore ----------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _valid(self, step: int) -> bool:
+        d = os.path.join(self.dir, f"step_{step:012d}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            with open(os.path.join(d, "arrays.npz"), "rb") as f:
+                crc = zlib.crc32(f.read())
+            return crc == manifest["npz_crc32"]
+        except (OSError, KeyError, json.JSONDecodeError):
+            return False
+
+    def latest_valid_step(self) -> int | None:
+        for s in reversed(self.all_steps()):
+            if self._valid(s):
+                return s
+        return None
+
+    def restore(self, tree_like: Any, step: int | None = None,
+                shardings: Any = None) -> tuple[Any, int]:
+        """Restore into the structure of ``tree_like``; optionally place onto
+        ``shardings`` (a matching tree of NamedSharding) — this is the
+        elastic/re-mesh path."""
+        if step is None:
+            step = self.latest_valid_step()
+            if step is None:
+                raise FileNotFoundError(f"no valid checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:012d}")
+        data = np.load(os.path.join(d, "arrays.npz"))
+        flat, treedef = _flatten_with_paths(tree_like)
+        leaves = []
+        shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                      else [None] * len(flat))
+        for (key, like), shd in zip(flat, shard_flat):
+            arr = data[key]
+            assert arr.shape == tuple(like.shape), (key, arr.shape, like.shape)
+            if shd is not None:
+                leaves.append(jax.device_put(arr, shd))
+            else:
+                leaves.append(jax.numpy.asarray(arr, dtype=like.dtype))
+        return jax.tree.unflatten(treedef, leaves), step

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: blocked-ELL SpMM with scalar-prefetch block indices
+(inter-community subgraph).
+
+Paper mapping (§3.2 'CSR-based kernel' for low-density subgraphs): on CUDA a
+CTA covers several destination vertices, threads walk the CSR neighbor lists
+and gather source features from global memory.  A TPU has no per-thread
+gather; the idiomatic equivalent is *block-level* indirection: store the
+inter-community adjacency as a CSR over (B, B) tiles, pad each block-row to K
+tiles (blocked-ELL), and let the BlockSpec index_map -- fed by scalar-prefetch
+-- DMA exactly the (B, Ft) feature tile named by each stored block.
+
+Grid = (block-rows, feature-tiles, K); K is the innermost reduction
+("arbitrary") dimension accumulated in a VMEM scratch and flushed at k==K-1.
+Padding tiles are all-zero and point at block-column 0, so no masking is
+needed inside the kernel (no data-dependent control flow on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, a_ref, x_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], x_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("f_tile", "interpret"))
+def bell_spmm(blocks: jax.Array, col_idx: jax.Array, x: jax.Array, *,
+              f_tile: int = 512, interpret: bool = True) -> jax.Array:
+    """Y = A_bell @ x.
+
+    blocks: (nbr, K, B, B); col_idx: (nbr, K) int32; x: (nbc*B, F).
+    Returns (nbr*B, F).
+    """
+    nbr, K, B, _ = blocks.shape
+    F = x.shape[-1]
+    f_tile = min(f_tile, F)
+    assert F % f_tile == 0, (F, f_tile)
+    xb = x.reshape(-1, B, F)
+    grid = (nbr, F // f_tile, K)
+    gs = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, B, B), lambda i, j, k, idx: (i, k, 0, 0)),
+            pl.BlockSpec((None, B, f_tile), lambda i, j, k, idx: (idx[i, k], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((None, B, f_tile), lambda i, j, k, idx: (i, 0, j)),
+        scratch_shapes=[pltpu.VMEM((B, f_tile), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        _kernel,
+        grid_spec=gs,
+        out_shape=jax.ShapeDtypeStruct((nbr, B, F), x.dtype),
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel", "arbitrary"))
+        ) if not interpret else None,
+    )(col_idx, blocks, xb)
+    return out.reshape(nbr * B, F)

@@ -1,0 +1,123 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Responsibilities:
+  * feature-dim padding to lane-aligned tiles (128) and unpadding,
+  * interpret-mode selection (interpret=True on CPU, compiled on TPU),
+  * custom VJPs: aggregation Y = A @ X is linear in X, so dX = A^T @ dY.
+    The transposed operand is either computed on the fly (block-diagonal:
+    swap the last two axes) or passed in as a preprocessed format
+    (blocked-ELL: the transpose is materialized once during decomposition,
+    matching the paper's one-shot preprocessing stage).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import formats
+from repro.kernels import ref
+from repro.kernels.block_diag_spmm import block_diag_spmm
+from repro.kernels.bell_spmm import bell_spmm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+LANE = 128
+
+
+def _pad_feat(x: jax.Array, tile: int) -> tuple[jax.Array, int]:
+    F = x.shape[-1]
+    Fp = ((F + tile - 1) // tile) * tile
+    if Fp != F:
+        x = jnp.pad(x, ((0, 0), (0, Fp - F)))
+    return x, F
+
+
+def _f_tile(F: int, cap: int = 512) -> int:
+    t = min(cap, ((F + LANE - 1) // LANE) * LANE)
+    # pick the largest tile <= cap that divides the padded F
+    Fp = ((F + LANE - 1) // LANE) * LANE
+    while Fp % t:
+        t -= LANE
+    return max(t, LANE)
+
+
+# --- block-diagonal (intra-community dense kernel) --------------------------
+
+@jax.custom_vjp
+def block_diag_matvec(blocks: jax.Array, x: jax.Array) -> jax.Array:
+    return _bd_fwd_impl(blocks, x)
+
+
+def _bd_fwd_impl(blocks, x):
+    t = _f_tile(x.shape[-1])
+    xp, F = _pad_feat(x, t)
+    y = block_diag_spmm(blocks, xp, f_tile=t, interpret=_interpret())
+    return y[:, :F]
+
+
+def _bd_fwd(blocks, x):
+    return _bd_fwd_impl(blocks, x), (blocks, x.shape)
+
+
+def _bd_bwd(res, dy):
+    blocks, _ = res
+    dx = _bd_fwd_impl(jnp.swapaxes(blocks, -1, -2), dy)
+    return None, dx  # graph topology is not trained
+
+
+block_diag_matvec.defvjp(_bd_fwd, _bd_bwd)
+
+
+# --- blocked-ELL (inter-community sparse kernel) -----------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def bell_matvec(bell: formats.BlockELL, bell_t: formats.BlockELL,
+                x: jax.Array) -> jax.Array:
+    return _bell_fwd_impl(bell, x)
+
+
+def _bell_fwd_impl(bell: formats.BlockELL, x):
+    t = _f_tile(x.shape[-1])
+    xp, F = _pad_feat(x, t)
+    n_cpad = bell.n_cols
+    if xp.shape[0] < n_cpad:
+        xp = jnp.pad(xp, ((0, n_cpad - xp.shape[0]), (0, 0)))
+    y = bell_spmm(bell.blocks, bell.col_idx, xp, f_tile=t,
+                  interpret=_interpret())
+    return y[:, :F]
+
+
+def _bell_fwd(bell, bell_t, x):
+    return _bell_fwd_impl(bell, x), (bell_t, x.shape[0])
+
+
+def _bell_bwd(res, dy):
+    bell_t, n = res
+    dx = _bell_fwd_impl(bell_t, dy)[:n]
+    return None, None, dx
+
+
+bell_matvec.defvjp(_bell_fwd, _bell_bwd)
+
+
+# --- ELL gather (XLA vertex-parallel path) -----------------------------------
+
+def ell_matvec(ell: formats.ELL, x: jax.Array) -> jax.Array:
+    """Pure-XLA padded-neighbor gather; natively differentiable (the gather
+    transposes to a scatter-add, matching the CSR->COO duality)."""
+    return ref.ell_spmm(ell.indices, ell.vals, x)
+
+
+# --- COO segment-sum (edge-parallel / atomics analogue) ----------------------
+
+def coo_matvec(coo: formats.COO, x: jax.Array) -> jax.Array:
+    return ref.coo_spmm(coo.rows, coo.cols, coo.vals, x, coo.n_rows)
+
+
+KERNELS_INTRA = ("block_diag", "ell", "coo")
+KERNELS_INTER = ("bell", "ell", "coo")

@@ -1,0 +1,173 @@
+"""Chunked-parallel RWKV-6 linear recurrence (Finch, arXiv:2404.05892).
+
+The sequential recurrence
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t ;   o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+is O(T) steps of rank-1 updates -- hostile to the MXU.  The chunked form
+(borrowed from the GLA family) turns it into per-chunk matmuls:
+
+with in-chunk cumulative log-decay  c_t = sum_{s<=t} log w_s  (c_0 = 0 at the
+chunk start):
+    intra:  o_t += sum_{j<t} (r_t e^{c_{t-1}-c_j}) . k_j  v_j  +  (r_t.(u*k_t)) v_t
+    inter:  o_t += (r_t e^{c_{t-1}}) S_prev
+    carry:  S'   = e^{c_C} (x)_k S_prev + sum_j e^{c_C - c_j} k_j v_j^T
+
+All exponents are differences c_a - c_b with a >= b, hence <= 0: every factor
+is in (0, 1] and fp32-safe as long as |c| stays < ~80 within one chunk.  The
+model clamps the per-step decay rate (blocks.py) so chunk<=64 is safe.
+
+Two implementations:
+  * rwkv6_chunked       -- pure-jnp (oracle-adjacent; used for autodiff)
+  * rwkv6_chunked_pallas -- Pallas TPU kernel: grid (B*H, T/C) with the chunk
+    dim sequential ("arbitrary") and the (dh, dh) state held in VMEM scratch
+    across grid steps.  Forward-only (inference/serving path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _chunk_math(r, k, v, lw, u, S):
+    """One chunk for all (B, H). r/k/v/lw: (B,H,C,dh) fp32; S: (B,H,dh,dh)."""
+    C = r.shape[2]
+    c_inc = jnp.cumsum(lw, axis=2)                      # c_t (inclusive)
+    c_exc = c_inc - lw                                  # c_{t-1} (exclusive)
+    r_dec = r * jnp.exp(c_exc)                          # r_t e^{c_{t-1}}
+    k_dec = k * jnp.exp(c_inc[:, :, -1:, :] - c_inc)    # k_j e^{c_C - c_j}
+
+    # intra-chunk: A[t, j] = (r_t e^{c_{t-1}}) . (k_j e^{-c_j}), j < t.
+    # Using the safe factorization (r_t e^{c_{t-1}-c_C'}) with c at chunk end
+    # would distort the strict lower triangle; instead compute pairwise with
+    # k_j e^{c_{t-1}-c_j} via the two decayed tensors sharing e^{c_C}:
+    #   r_dec . (k_dec e^{-c_C}) = r_t k_j e^{c_{t-1} - c_j}   (exact)
+    # and e^{-c_C} folds into a single broadcast (safe: applied after the
+    # masked matmul where every surviving term already carries e^{c_C-c_j}).
+    A = jnp.einsum("bhtd,bhjd->bhtj", r_dec,
+                   k * jnp.exp(-c_inc))                 # may be large individually
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+    A = jnp.where(mask, A, 0.0)
+    diag = jnp.einsum("bhtd,bhtd->bht", r, u[None, :, None, :] * k)
+    o = jnp.einsum("bhtj,bhjd->bhtd", A, v)
+    o += diag[..., None] * v
+    o += jnp.einsum("bhtd,bhde->bhte", r_dec, S)
+    S_new = jnp.exp(c_inc[:, :, -1, :])[..., None] * S + \
+        jnp.einsum("bhjd,bhje->bhde", k_dec, v)
+    return o, S_new
+
+
+def rwkv6_chunked(r, k, v, w, u, *, chunk: int = 32, state=None):
+    """Pure-jnp chunked evaluation.  r,k,v,w: (B,H,T,dh); u: (H,dh).
+    Returns (o: (B,H,T,dh) fp32->input dtype, S: (B,H,dh,dh) fp32)."""
+    B, H, T, dh = r.shape
+    assert T % chunk == 0, (T, chunk)
+    n_chunks = T // chunk
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))
+    if state is None:
+        state = jnp.zeros((B, H, dh, dh), jnp.float32)
+
+    def to_chunks(a):
+        return a.reshape(B, H, n_chunks, chunk, dh).transpose(2, 0, 1, 3, 4)
+
+    rc, kc, vc, lc = map(to_chunks, (rf, kf, vf, lw))
+
+    def step(S, inp):
+        rr, kk, vv, ll = inp
+        o, S = _chunk_math(rr, kk, vv, ll, u.astype(jnp.float32), S)
+        return S, o
+
+    S, os = jax.lax.scan(step, state, (rc, kc, vc, lc))
+    o = os.transpose(1, 2, 0, 3, 4).reshape(B, H, T, dh)
+    return o.astype(r.dtype), S
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _pallas_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref):
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[...].astype(jnp.float32)       # (C, dh)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    lw = lw_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)       # (1, dh)
+    S = s_ref[...]                           # (dh, dh)
+
+    C = r.shape[0]
+    c_inc = jnp.cumsum(lw, axis=0)
+    c_exc = c_inc - lw
+    r_dec = r * jnp.exp(c_exc)
+    k_idec = k * jnp.exp(-c_inc)
+    A = jnp.dot(r_dec, k_idec.T, preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    A = jnp.where(jj < ii, A, 0.0)
+    diag = jnp.sum(r * (u * k), axis=-1)     # (C,)
+    o = jnp.dot(A, v, preferred_element_type=jnp.float32)
+    o += diag[:, None] * v
+    o += jnp.dot(r_dec, S, preferred_element_type=jnp.float32)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+    k_dec = k * jnp.exp(c_inc[-1:, :] - c_inc)
+    s_ref[...] = jnp.exp(c_inc[-1, :])[:, None] * S + \
+        jnp.dot(k_dec.T, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_chunked_pallas(r, k, v, w, u, *, chunk: int = 32,
+                         interpret: bool = True):
+    """Forward-only Pallas evaluation. Shapes as rwkv6_chunked; state starts
+    at zero (serving prefill).  Grid: (B*H parallel, T/C sequential)."""
+    B, H, T, dh = r.shape
+    assert T % chunk == 0
+    n_chunks = T // chunk
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))
+
+    def flat(a):
+        return a.reshape(B * H, T, dh)
+
+    rf, kf, vf, lwf = flat(r), flat(k), flat(v), flat(lw)
+    uf = jnp.broadcast_to(u[None, :, None, :], (B, H, 1, dh)).reshape(B * H, 1, dh)
+
+    grid = (B * H, n_chunks)
+    out = pl.pallas_call(
+        _pallas_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, dh), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((None, chunk, dh), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((None, chunk, dh), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((None, chunk, dh), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((None, 1, dh), lambda i, t: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, chunk, dh), lambda i, t: (i, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T, dh), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "arbitrary"))
+        ) if not interpret else None,
+    )(rf, kf, vf, lwf, uf)
+    return out.reshape(B, H, T, dh)
+
+
+def rwkv6_hbm_bytes(B, H, T, dh, bytes_el: int = 4) -> int:
+    """Streaming floor of the Pallas kernel: r/k/v/w in + o out, once."""
+    return 5 * B * H * T * dh * bytes_el
+
+
+def rwkv6_flops(B, H, T, dh, chunk: int = 32) -> float:
+    """Per chunk: two (C,C)x(C,dh)-class matmuls + two (C,dh)x(dh,dh) state
+    ops => 2*C^2*dh + 4*C*dh^2 flops; T/C chunks."""
+    per_chunk = 2.0 * chunk * chunk * dh + 4.0 * chunk * dh * dh
+    return B * H * (T // chunk) * per_chunk

@@ -1,0 +1,241 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, and extract the
+roofline inputs (FLOPs / bytes from cost_analysis, collective bytes from the
+HLO text) without ever allocating real tensors.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                        # all cells, single-pod
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod            # all cells, both meshes
+  PYTHONPATH=src python -m repro.launch.dryrun --arch rwkv6-7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --out results/dryrun.json
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro import configs                       # noqa: E402
+from repro.launch import mesh as mesh_mod       # noqa: E402
+from repro.launch import sharding, specs        # noqa: E402
+from repro.models import lm                     # noqa: E402
+from repro.optim import adamw                   # noqa: E402
+from repro.train import steps                   # noqa: E402
+
+
+# -- HLO collective-bytes extraction -----------------------------------------
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:\S+\s*=\s*)?"
+    r"((?:[a-z0-9-]+)?(?:f|bf|s|u|pred)\d+(?:\[[\d,]*\])?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+
+_SHAPE_RE = re.compile(r"(f|bf|s|u|pred)(\d+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f32": 4, "f64": 8, "f16": 2, "bf16": 2, "s32": 4, "s64": 8,
+                "s8": 1, "u8": 1, "u32": 4, "pred8": 1}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one HLO shape like 'bf16[256,4096]' (tuples summed)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        kind, bits, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * (int(bits) // 8)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO, by kind.
+    (Output bytes approximate the wire traffic within a small constant
+    factor per algorithm; we report them per kind so the roofline's
+    collective term can weight them.)"""
+    out: dict[str, int] = {}
+    count: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(
+            r"^(?:\S+\s*=\s*)?((?:\([^)]*\)|\S+?))\s*"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)", s)
+        if not m:
+            continue
+        shape_str, kind = m.groups()
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + b
+        count[kind] = count.get(kind, 0) + 1
+    out["total"] = sum(v for k, v in out.items())
+    out["counts"] = count
+    return out
+
+
+# -- one cell -----------------------------------------------------------------
+
+def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
+                model_overrides: dict | None = None,
+                rules_overrides: dict | None = None) -> dict:
+    cfg = configs.get_config(arch)
+    if model_overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **model_overrides)
+    ok, reason = configs.shape_applicable(cfg, shape_name)
+    if not ok:
+        return dict(arch=arch, shape=shape_name, status="skipped",
+                    reason=reason)
+    sh = configs.SHAPES[shape_name]
+    mode = sh["mode"]
+    t0 = time.perf_counter()
+
+    # long-context decode with batch 1 cannot shard the batch: shard the
+    # KV/sequence axis over the batch mesh axes instead
+    shard_seq = (mode == "decode" and sh["batch"] <
+                 np.prod([mesh.shape[a] for a in mesh.axis_names
+                          if a != "model"]))
+    rules = sharding.default_rules(mesh, shard_seq=shard_seq)
+    if rules_overrides:
+        rules.update(rules_overrides)
+
+    pspecs = sharding.tree_shardings(specs.params_shapes(cfg),
+                                     lm.param_specs(cfg), mesh, rules)
+
+    with mesh:
+        if mode == "train":
+            batch_specs = specs.train_batch_specs(cfg, sh["seq"], sh["batch"])
+            bshard = sharding.batch_specs(batch_specs, mesh, rules)
+            opt_shapes = specs.opt_state_shapes(cfg)
+            ospecs = dict(m=pspecs, v=pspecs,
+                          step=jax.sharding.NamedSharding(
+                              mesh, jax.sharding.PartitionSpec()))
+            opt_cfg = adamw.OptConfig()
+            fn = steps.make_train_step(cfg, opt_cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(pspecs, ospecs, bshard),
+                out_shardings=(pspecs, ospecs, None),
+            ).lower(specs.params_shapes(cfg), opt_shapes, batch_specs)
+        elif mode == "prefill":
+            batch_specs = specs.prefill_batch_specs(cfg, sh["seq"], sh["batch"])
+            bshard = sharding.batch_specs(batch_specs, mesh, rules)
+            fn = steps.make_prefill_step(cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(pspecs, bshard), out_shardings=None,
+            ).lower(specs.params_shapes(cfg), batch_specs)
+        else:  # decode
+            cache_shapes, tok_spec, pos_spec = specs.decode_specs(
+                cfg, sh["seq"], sh["batch"])
+            cspecs = sharding.tree_shardings(cache_shapes,
+                                             lm.cache_specs(cfg), mesh, rules)
+            tshard = sharding.batch_specs(dict(t=tok_spec), mesh, rules)["t"]
+            fn = steps.make_serve_step(cfg)
+            lowered = jax.jit(
+                fn, in_shardings=(pspecs, cspecs, tshard, None),
+                out_shardings=(None, None, cspecs),
+            ).lower(specs.params_shapes(cfg), cache_shapes, tok_spec, pos_spec)
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    result = dict(
+        arch=arch, shape=shape_name, status="ok", mode=mode,
+        mesh="x".join(str(mesh.shape[a]) for a in mesh.axis_names),
+        n_devices=n_dev,
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=coll,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=getattr(mem, "argument_size_in_bytes", 0),
+            output_bytes=getattr(mem, "output_size_in_bytes", 0),
+            temp_bytes=getattr(mem, "temp_size_in_bytes", 0),
+            generated_code_bytes=getattr(mem, "generated_code_size_in_bytes", 0),
+        ),
+    )
+    if verbose:
+        tb = result["memory"]["temp_bytes"] / n_dev / 2**30
+        print(f"  {arch:20s} {shape_name:12s} mesh={result['mesh']:8s} "
+              f"flops={result['flops']:.3e} bytes={result['bytes_accessed']:.3e} "
+              f"coll={coll['total']:.3e}B temp/dev={tb:.2f}GiB "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s", flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="also run the 2x16x16 multi-pod mesh")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the SPerf execution profile (head padding, "
+                         "flash/mamba Pallas cores, size-adaptive ZeRO-1)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else configs.ARCHS
+    shapes = [args.shape] if args.shape else list(configs.SHAPES)
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(mesh_mod.make_production_mesh(multi_pod=False))
+    if args.multi_pod or args.multi_pod_only:
+        meshes.append(mesh_mod.make_production_mesh(multi_pod=True))
+
+    results = []
+    for mesh in meshes:
+        print(f"== mesh {dict(mesh.shape)} ==", flush=True)
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    mo, ro = None, None
+                    if args.optimized:
+                        from repro.launch.profiles import optimized_overrides
+                        cfg = configs.get_config(arch)
+                        mo, ro = optimized_overrides(
+                            cfg, configs.SHAPES[shape]["mode"],
+                            mesh.shape["model"])
+                        # Pallas cores can't lower on the CPU dry-run host;
+                        # keep their XLA stand-ins for compile coverage
+                        mo = {k: v for k, v in mo.items()
+                              if k not in ("attn_core", "mamba_core", "wkv_core")}
+                    results.append(dryrun_cell(arch, shape, mesh,
+                                               model_overrides=mo,
+                                               rules_overrides=ro))
+                except Exception as e:  # a failure here is a bug in our system
+                    traceback.print_exc()
+                    results.append(dict(arch=arch, shape=shape,
+                                        mesh=str(dict(mesh.shape)),
+                                        status="FAILED", error=str(e)[-2000:]))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_fail = sum(r["status"] == "FAILED" for r in results)
+    print(f"\n== dry-run summary: {n_ok} ok / {n_skip} skipped / {n_fail} FAILED ==")
+    for r in results:
+        if r["status"] == "FAILED":
+            print(f"  FAILED {r['arch']} {r['shape']}: {r['error'][:300]}")
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

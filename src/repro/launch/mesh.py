@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS so importing this module never touches jax device state
+(the dry-run sets XLA_FLAGS before any jax initialization; smoke tests and
+benchmarks must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (data, model); 2x16x16 = 512 chips across
+    two pods (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Elastic-scaling entry point: build any (data, model[, pod]) mesh from
+    the currently visible devices (used by distributed/elastic.py when the
+    healthy device set changes)."""
+    return jax.make_mesh(shape, axes)
+
+
+def host_local_mesh():
+    """Single-process debug mesh over whatever devices exist."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,136 @@
+"""Logical-axis -> PartitionSpec resolution.
+
+Parameters/caches/batches carry *logical* axis names (see layers/nn.py
+docstring).  ``RULES`` maps logical names to mesh axes; ``spec_for`` resolves
+one tensor, checking divisibility and never using a mesh axis twice within a
+tensor (both would be sharding errors at lower time).  Non-divisible dims
+fall back to replication -- e.g. kv_heads=8 cannot shard over model=16, so
+KV projections replicate over model while the fused q/o projections still
+TP-shard (head-padding to lift this is a §Perf hillclimb lever).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# default logical->physical rules for the 2-D / 3-D production mesh.
+# "embed" FSDP-shards over the data axis (ZeRO-3 style: all-gathered per
+# layer under scan, overlapped by the XLA latency-hiding scheduler).
+def default_rules(mesh: Mesh, *, shard_seq: bool = False) -> dict:
+    has_pod = "pod" in mesh.axis_names
+    batch = ("pod", "data") if has_pod else ("data",)
+    return {
+        "embed": ("data",),
+        "mlp": ("model",),
+        "qkv": ("model",),
+        "kv": ("model",),
+        "heads": ("model",),
+        "vocab": ("model",),
+        "expert": ("model",),
+        "layer": None,
+        "batch": batch,
+        "seq": ("model",) if shard_seq else None,
+        # decode KV/sequence axis: sharded over the batch axes when the
+        # batch itself is too small to fill them (long-context decode)
+        "kv_seq": batch if shard_seq else None,
+    }
+
+
+def spec_for(shape: tuple[int, ...], logical: tuple, rules: dict,
+             mesh: Mesh) -> P:
+    axes: list = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical):
+        target = rules.get(name) if name is not None else None
+        if target is None:
+            axes.append(None)
+            continue
+        tgt = (target,) if isinstance(target, str) else tuple(target)
+        tgt = tuple(a for a in tgt if a in mesh.axis_names and a not in used)
+        size = math.prod(mesh.shape[a] for a in tgt) if tgt else 1
+        if tgt and dim % size == 0:
+            axes.append(tgt if len(tgt) > 1 else tgt[0])
+            used.update(tgt)
+        else:
+            axes.append(None)
+    return P(*axes)
+
+
+def _is_logical(t) -> bool:
+    return isinstance(t, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in t)
+
+
+def tree_shardings(tree_shapes: Any, tree_logical: Any, mesh: Mesh,
+                   rules: dict | None = None) -> Any:
+    """Resolve a pytree of ShapeDtypeStructs (or arrays) + matching logical
+    spec tree into NamedShardings."""
+    rules = rules or default_rules(mesh)
+
+    def resolve(x, logical):
+        if x is None or logical is None:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, spec_for(x.shape, logical, rules, mesh))
+
+    return jax.tree.map(resolve, tree_shapes, tree_logical,
+                        is_leaf=lambda t: t is None or _is_logical(t))
+
+
+def batch_specs(batch_shapes: dict, mesh: Mesh,
+                rules: dict | None = None) -> dict:
+    """Shardings for an input batch: dim0 of every array is the global batch
+    (except 'positions' (3,B,S) and scalars)."""
+    rules = rules or default_rules(mesh)
+    out = {}
+    for k, v in batch_shapes.items():
+        if v is None:
+            out[k] = NamedSharding(mesh, P())
+            continue
+        if k == "positions" and len(v.shape) == 3:
+            logical = (None, "batch", None)
+        elif len(v.shape) == 0:
+            logical = ()
+        else:
+            logical = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, spec_for(v.shape, logical, rules, mesh))
+    return out
+
+
+def count_unsharded_fallbacks(tree_shapes, tree_logical, mesh,
+                              rules=None) -> list[str]:
+    """Diagnostics: which logical axes silently fell back to replication
+    (reported by the dry-run so nothing is truncated silently)."""
+    rules = rules or default_rules(mesh)
+    notes = []
+
+    def walk(path, x, logical):
+        if x is None or logical is None:
+            return
+        for dim, name in zip(x.shape, logical):
+            if name is None:
+                continue
+            target = rules.get(name)
+            if target is None:
+                continue
+            tgt = (target,) if isinstance(target, str) else tuple(target)
+            tgt = tuple(a for a in tgt if a in mesh.axis_names)
+            size = math.prod(mesh.shape[a] for a in tgt) if tgt else 1
+            if size > 1 and dim % size != 0:
+                notes.append(f"{path}: {name}={dim} !% {size} -> replicated")
+
+    def rec(path, a, b):
+        if b is None or _is_logical(b):
+            walk(path, a, b)
+        elif isinstance(b, dict):
+            for k in b:
+                rec(f"{path}/{k}", a[k] if a is not None else None, b[k])
+        elif isinstance(b, (list, tuple)):
+            for i, bb in enumerate(b):
+                rec(f"{path}[{i}]", a[i] if a is not None else None, bb)
+
+    rec("", tree_shapes, tree_logical)
+    return sorted(set(notes))

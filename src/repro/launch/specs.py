@@ -1,0 +1,72 @@
+"""ShapeDtypeStruct stand-ins for every model input: shardable, weak-type
+correct, zero device allocation — what the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import lm
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: lm.ModelConfig, seq: int, batch: int) -> dict:
+    dt = cfg.jdtype
+    out = {}
+    if cfg.family == "encdec":
+        out["enc_embeds"] = SDS((batch, cfg.encoder_seq, cfg.d_model), dt)
+        out["tokens"] = SDS((batch, seq), jnp.int32)
+    elif cfg.input_mode == "embeds":
+        out["embeds"] = SDS((batch, seq, cfg.d_model), dt)
+        if cfg.mrope_sections is not None:
+            out["positions"] = SDS((3, batch, seq), jnp.int32)
+    else:
+        out["tokens"] = SDS((batch, seq), jnp.int32)
+    out["labels"] = SDS((batch, seq), jnp.int32)
+    return out
+
+
+def prefill_batch_specs(cfg: lm.ModelConfig, seq: int, batch: int) -> dict:
+    out = train_batch_specs(cfg, seq, batch)
+    out.pop("labels")
+    return out
+
+
+def decode_specs(cfg: lm.ModelConfig, s_max: int, batch: int):
+    """(caches, tokens, pos) ShapeDtypeStructs for serve_step."""
+    caches = jax.eval_shape(lambda: lm.init_cache(cfg, batch, s_max))
+    if cfg.input_mode == "embeds":
+        tokens = SDS((batch, 1, cfg.d_model), cfg.jdtype)
+    else:
+        tokens = SDS((batch, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return caches, tokens, pos
+
+
+def params_shapes(cfg: lm.ModelConfig):
+    return jax.eval_shape(lambda: lm.init_params(jax.random.PRNGKey(0), cfg))
+
+
+def opt_state_shapes(cfg: lm.ModelConfig):
+    from repro.optim import adamw
+    p = params_shapes(cfg)
+    return jax.eval_shape(lambda: adamw.init_state(
+        jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), p)))
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """Everything the dry-run needs for one (arch, shape) cell."""
+    cfg = configs.get_config(arch)
+    sh = configs.SHAPES[shape_name]
+    mode = sh["mode"]
+    out = dict(cfg=cfg, mode=mode, seq=sh["seq"], batch=sh["batch"])
+    if mode == "train":
+        out["batch_specs"] = train_batch_specs(cfg, sh["seq"], sh["batch"])
+    elif mode == "prefill":
+        out["batch_specs"] = prefill_batch_specs(cfg, sh["seq"], sh["batch"])
+    else:
+        caches, tokens, pos = decode_specs(cfg, sh["seq"], sh["batch"])
+        out.update(cache_specs=caches, token_specs=tokens, pos_specs=pos)
+    return out

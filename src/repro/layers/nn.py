@@ -1,0 +1,71 @@
+"""Framework-free neural net primitives: inits, norms, embeddings.
+
+Parameters are plain dicts of jnp arrays; every init_* has a matching
+spec_* returning a pytree of logical-axis tuples with the same structure
+(consumed by repro.launch.sharding to build PartitionSpecs).
+Logical axes used across the codebase:
+  "embed"   -- d_model           (FSDP-sharded over the data axis)
+  "mlp"     -- d_ff / head*dh    (TP-sharded over the model axis)
+  "heads"   -- attention head dim (TP over model when divisible)
+  "kv_heads"-- kv head dim
+  "vocab"   -- vocabulary        (TP over model)
+  "expert"  -- MoE expert dim    (EP over model)
+  "layer"   -- scan-stacked layer dim (never sharded in the 2-D mesh)
+  None      -- replicated
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def trunc_normal(key, shape, std: float = 0.02, dtype=jnp.float32):
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype) * std
+
+
+def lecun_normal(key, shape, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    return jax.random.normal(key, shape, dtype) * math.sqrt(1.0 / fan_in)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array) -> jax.Array:
+    """One-hot matmul lookup: on TPU this beats gather for sharded vocab
+    tables (the matmul reduces over the vocab-sharded dim with a
+    reduce-scatter instead of gathering the table)."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embed_lookup_onehot(table: jax.Array, ids: jax.Array) -> jax.Array:
+    oh = jax.nn.one_hot(ids, table.shape[0], dtype=table.dtype)
+    return oh @ table
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Mean CE over mask; logits (..., V) in any dtype, computed in fp32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,57 @@
+"""Rotary position embeddings: standard RoPE and multi-modal M-RoPE
+(Qwen2-VL, arXiv:2409.12191 §2.1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int. Rotates pairs (even, odd
+    halves convention, matching Llama/Qwen)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                         # (d/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections: tuple[int, ...],
+                theta: float = 10000.0) -> jax.Array:
+    """M-RoPE: positions (3, B, S) for (temporal, height, width); the head
+    dim's frequency bands are partitioned by ``sections`` (in d/2 units,
+    e.g. (16, 24, 24) for D=128) and each band rotates by its own position
+    stream.  For pure text the three streams are identical and M-RoPE
+    reduces exactly to RoPE."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                          # (d/2,)
+    assert sum(sections) == d // 2, (sections, d)
+    band = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                      total_repeat_length=d // 2)         # (d/2,) in {0,1,2}
+    pos = positions.astype(jnp.float32)[band]             # (d/2, B, S)
+    pos = jnp.moveaxis(pos, 0, -1)                        # (B, S, d/2)
+    ang = pos * freqs                                     # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style fixed sinusoidal embeddings, (n, d)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    out = jnp.zeros((n, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out

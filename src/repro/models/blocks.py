@@ -1,0 +1,796 @@
+"""Transformer-family building blocks: GQA/MLA attention, dense & MoE FFN,
+Mamba (selective SSM), RWKV-6 time/channel mix.
+
+Every block provides:
+  init_X(key, ...) -> params          (dict of arrays)
+  spec_X(...)      -> logical specs   (same tree, tuples of logical axes)
+  X_apply(params, x, ...)             (full-sequence / training mode)
+  X_decode(params, x, cache, pos)     (single-token with cache) where relevant
+
+All matmul-heavy math runs in the model dtype with fp32 accumulation
+(preferred_element_type), softmax/norm statistics in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import nn, rope as rope_mod
+from repro.kernels import ref as kref
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, dtype):
+    return nn.lecun_normal(key, shape).astype(dtype)
+
+
+def einsum(s, *xs):
+    return jnp.einsum(s, *xs, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Attention (MHA / GQA, optional QKV bias, optional M-RoPE)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    mrope_sections: tuple | None = None   # qwen2-vl
+    causal: bool = True
+    use_rope: bool = True
+    # "softmax": XLA unfused attention (baseline); "identity": zero-cost
+    # stand-in used by the roofline's attention-core isolation probes
+    # (§Perf flash substitution); the Pallas flash kernel is the TPU path.
+    attn_core: str = "softmax"
+
+
+def init_attention(key, cfg: AttnConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    H, KV, dh, d = cfg.n_heads, cfg.kv_heads, cfg.head_dim, cfg.d_model
+    p = dict(
+        wq=_dense(ks[0], (d, H * dh), dtype),
+        wk=_dense(ks[1], (d, KV * dh), dtype),
+        wv=_dense(ks[2], (d, KV * dh), dtype),
+        wo=_dense(ks[3], (H * dh, d), dtype),
+    )
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dtype)
+        p["bk"] = jnp.zeros((KV * dh,), dtype)
+        p["bv"] = jnp.zeros((KV * dh,), dtype)
+    return p
+
+
+def spec_attention(cfg: AttnConfig):
+    s = dict(wq=("embed", "qkv"), wk=("embed", "kv"), wv=("embed", "kv"),
+             wo=("qkv", "embed"))
+    if cfg.qkv_bias:
+        s.update(bq=("qkv",), bk=("kv",), bv=("kv",))
+    return s
+
+
+def _qkv(params, cfg: AttnConfig, x, positions):
+    B, S, _ = x.shape
+    q = einsum("bsd,dh->bsh", x, params["wq"]).astype(x.dtype)
+    k = einsum("bsd,dh->bsh", x, params["wk"]).astype(x.dtype)
+    v = einsum("bsd,dh->bsh", x, params["wv"]).astype(x.dtype)
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.kv_heads, cfg.head_dim)
+    if cfg.use_rope:
+        if cfg.mrope_sections is not None:
+            q = rope_mod.apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = rope_mod.apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = rope_mod.apply_rope(q, positions, cfg.rope_theta)
+            k = rope_mod.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_apply(params, cfg: AttnConfig, x, positions,
+                    kv_override=None):
+    """Full-sequence attention. positions: (B,S) or (3,B,S) for M-RoPE.
+    kv_override: (k, v) for cross-attention (whisper decoder)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(params, cfg, x, positions)
+    if kv_override is not None:
+        k, v = kv_override
+    if cfg.attn_core == "identity":
+        g = cfg.n_heads // cfg.kv_heads
+        vm = jnp.mean(v, axis=1, keepdims=True)          # (B,1,Hkv,dh)
+        out = jnp.broadcast_to(jnp.repeat(vm, g, axis=2),
+                               (B, S, cfg.n_heads, v.shape[-1]))
+        out = out.reshape(B, S, -1)
+    elif (cfg.attn_core == "flash" and cfg.causal and kv_override is None
+          and S % 128 == 0):
+        from repro.kernels.flash_attention import flash_attention_trainable
+        out = flash_attention_trainable(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True)
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    else:
+        out = kref.mha(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                       v.transpose(0, 2, 1, 3), causal=cfg.causal)
+        out = out.transpose(0, 2, 1, 3).reshape(B, S, -1)
+    return einsum("bsh,hd->bsd", out, params["wo"]).astype(x.dtype)
+
+
+def attention_decode(params, cfg: AttnConfig, x, cache, pos):
+    """Single-step decode. x: (B, 1, d); cache: {k, v: (B, Smax, KV, dh)};
+    pos: scalar int32 current position."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    q, k_new, v_new = _qkv(params, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    Smax = k.shape[1]
+    mask = (jnp.arange(Smax) <= pos)[None, None, None, :]     # (1,1,1,Smax)
+    qh = q.transpose(0, 2, 1, 3)                              # (B,H,1,dh)
+    kh = k.transpose(0, 2, 1, 3).astype(x.dtype)
+    vh = v.transpose(0, 2, 1, 3).astype(x.dtype)
+    H, KV = cfg.n_heads, cfg.kv_heads
+    g = H // KV
+    qg = qh.reshape(B, KV, g, 1, cfg.head_dim)
+    logits = einsum("bhgqd,bhtd->bhgqt", qg.astype(jnp.float32),
+                    kh.astype(jnp.float32)) * (cfg.head_dim ** -0.5)
+    logits = jnp.where(mask[:, :, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = einsum("bhgqt,bhtd->bhgqd", p, vh.astype(jnp.float32))
+    out = out.reshape(B, H, 1, cfg.head_dim).transpose(0, 2, 1, 3)
+    out = out.reshape(B, 1, H * cfg.head_dim).astype(x.dtype)
+    y = einsum("bsh,hd->bsd", out, params["wo"]).astype(x.dtype)
+    return y, dict(k=k, v=v)
+
+
+def init_attn_cache(cfg: AttnConfig, batch: int, s_max: int, dtype):
+    shp = (batch, s_max, cfg.kv_heads, cfg.head_dim)
+    return dict(k=jnp.zeros(shp, dtype), v=jnp.zeros(shp, dtype))
+
+
+def spec_attn_cache(cfg: AttnConfig):
+    return dict(k=("batch", "kv_seq", "kv", None),
+                v=("batch", "kv_seq", "kv", None))
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2/V3)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MLAConfig:
+    d_model: int
+    n_heads: int
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+    rope_theta: float = 1e4
+    attn_core: str = "softmax"    # see AttnConfig.attn_core
+
+    @property
+    def qk_dim(self):
+        return self.qk_nope_dim + self.qk_rope_dim
+
+
+def init_mla(key, cfg: MLAConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    H = cfg.n_heads
+    return dict(
+        wq_a=_dense(ks[0], (cfg.d_model, cfg.q_lora_rank), dtype),
+        q_norm=jnp.ones((cfg.q_lora_rank,), dtype),
+        wq_b=_dense(ks[1], (cfg.q_lora_rank, H * cfg.qk_dim), dtype),
+        wkv_a=_dense(ks[2], (cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim), dtype),
+        kv_norm=jnp.ones((cfg.kv_lora_rank,), dtype),
+        wkv_b=_dense(ks[3], (cfg.kv_lora_rank, H * (cfg.qk_nope_dim + cfg.v_dim)), dtype),
+        wo=_dense(ks[4], (H * cfg.v_dim, cfg.d_model), dtype),
+    )
+
+
+def spec_mla(cfg: MLAConfig):
+    return dict(wq_a=("embed", None), q_norm=(None,), wq_b=(None, "qkv"),
+                wkv_a=("embed", None), kv_norm=(None,), wkv_b=(None, "qkv"),
+                wo=("qkv", "embed"))
+
+
+def _mla_qkv(params, cfg: MLAConfig, x, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = nn.rms_norm(einsum("bsd,dr->bsr", x, params["wq_a"]).astype(x.dtype),
+                     params["q_norm"])
+    q = einsum("bsr,rh->bsh", cq, params["wq_b"]).astype(x.dtype)
+    q = q.reshape(B, S, H, cfg.qk_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = rope_mod.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = einsum("bsd,dr->bsr", x, params["wkv_a"]).astype(x.dtype)
+    c_kv, k_rope = jnp.split(kv, [cfg.kv_lora_rank], axis=-1)
+    c_kv = nn.rms_norm(c_kv, params["kv_norm"])
+    k_rope = rope_mod.apply_rope(k_rope[:, :, None, :], positions,
+                                 cfg.rope_theta)    # (B,S,1,rope)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand_kv(params, cfg: MLAConfig, c_kv):
+    """Naive (paper-faithful baseline) expansion of latent cache to full
+    per-head K_nope/V.  The absorbed variant (beyond-paper §Perf) folds
+    wkv_b into the query/output projections instead."""
+    B, S, _ = c_kv.shape
+    H = cfg.n_heads
+    kv = einsum("bsr,rh->bsh", c_kv, params["wkv_b"]).astype(c_kv.dtype)
+    kv = kv.reshape(B, S, H, cfg.qk_nope_dim + cfg.v_dim)
+    return jnp.split(kv, [cfg.qk_nope_dim], axis=-1)     # k_nope, v
+
+
+def mla_apply(params, cfg: MLAConfig, x, positions):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, positions)
+    k_nope, v = _mla_expand_kv(params, cfg, c_kv)
+    if cfg.attn_core == "identity":
+        vm = jnp.mean(v, axis=1, keepdims=True)
+        out = jnp.broadcast_to(vm, (B, S, H, cfg.v_dim))
+    elif cfg.attn_core == "flash" and S % 128 == 0:
+        from repro.kernels.flash_attention import flash_attention_trainable
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope, (B, S, H, cfg.qk_rope_dim))], axis=-1)
+        out = flash_attention_trainable(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True, scale=cfg.qk_dim ** -0.5)
+        out = out.transpose(0, 2, 1, 3)
+    else:
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope, (B, S, H, cfg.qk_rope_dim))], axis=-1)
+        out = kref.mha(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                       v.transpose(0, 2, 1, 3), causal=True,
+                       scale=cfg.qk_dim ** -0.5)
+        out = out.transpose(0, 2, 1, 3)
+    out = out.reshape(B, S, H * cfg.v_dim)
+    return einsum("bsh,hd->bsd", out, params["wo"]).astype(x.dtype)
+
+
+def init_mla_cache(cfg: MLAConfig, batch: int, s_max: int, dtype):
+    return dict(c_kv=jnp.zeros((batch, s_max, cfg.kv_lora_rank), dtype),
+                k_rope=jnp.zeros((batch, s_max, cfg.qk_rope_dim), dtype))
+
+
+def spec_mla_cache(cfg: MLAConfig):
+    return dict(c_kv=("batch", "kv_seq", None), k_rope=("batch", "kv_seq", None))
+
+
+def mla_decode(params, cfg: MLAConfig, x, cache, pos, absorbed: bool = False):
+    """Single-step MLA decode against the compressed latent cache."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(params, cfg, x, positions)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new[:, :, 0, :].astype(cache["k_rope"].dtype),
+        pos, axis=1)
+    Smax = c_kv.shape[1]
+    mask = (jnp.arange(Smax) <= pos)[None, None, None, :]
+    scale = cfg.qk_dim ** -0.5
+    if absorbed:
+        # Absorb wkv_b into q and out: logits_nope = (q_nope W_k^T) . c_kv
+        wkv = params["wkv_b"].reshape(cfg.kv_lora_rank, H,
+                                      cfg.qk_nope_dim + cfg.v_dim)
+        w_k = wkv[:, :, : cfg.qk_nope_dim]           # (r, H, nope)
+        w_v = wkv[:, :, cfg.qk_nope_dim:]            # (r, H, v)
+        q_lat = einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       w_k.astype(jnp.float32))       # (B,1,H,r)
+        logits = (einsum("bqhr,btr->bhqt", q_lat, c_kv.astype(jnp.float32))
+                  + einsum("bqhn,btn->bhqt", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+        logits = jnp.where(mask, logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        ctx = einsum("bhqt,btr->bqhr", p, c_kv.astype(jnp.float32))
+        out = einsum("bqhr,rhv->bqhv", ctx, w_v.astype(jnp.float32))
+    else:
+        k_nope, v = _mla_expand_kv(params, cfg, c_kv.astype(x.dtype))
+        logits = (einsum("bqhn,bthn->bhqt", q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32))
+                  + einsum("bqhn,btn->bhqt", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+        logits = jnp.where(mask, logits, -1e30)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = einsum("bhqt,bthv->bqhv", p, v.astype(jnp.float32))
+    out = out.reshape(B, 1, H * cfg.v_dim).astype(x.dtype)
+    y = einsum("bsh,hd->bsd", out, params["wo"]).astype(x.dtype)
+    return y, dict(c_kv=c_kv, k_rope=k_rope)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32,
+             gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = dict(w_up=_dense(ks[0], (d_model, d_ff), dtype),
+             w_down=_dense(ks[1], (d_ff, d_model), dtype))
+    if gated:
+        p["w_gate"] = _dense(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def spec_mlp(gated: bool = True):
+    s = dict(w_up=("embed", "mlp"), w_down=("mlp", "embed"))
+    if gated:
+        s["w_gate"] = ("embed", "mlp")
+    return s
+
+
+def mlp_apply(params, x, gated: bool = True):
+    up = einsum("bsd,df->bsf", x, params["w_up"]).astype(x.dtype)
+    if gated:
+        gate = einsum("bsd,df->bsf", x, params["w_gate"]).astype(x.dtype)
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return einsum("bsf,fd->bsd", h, params["w_down"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (DeepSeek-style: shared experts + routed top-k, capacity dispatch)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0            # shared experts (DeepSeekMoE)
+    d_ff_shared: int = 0         # total shared width (n_shared * d_ff_expert typically)
+    capacity_factor: float = 1.25
+    # AdaptGear hook: "dense" computes every expert for every token (the
+    # dense-block kernel analogue; wins when E is tiny / density high),
+    # "sparse" does capacity sort-scatter dispatch, "adaptive" picks by the
+    # analytic density rule (top_k/E), mirroring core/selector.py.
+    dispatch: str = "adaptive"
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff_expert
+    ek = jax.random.split(ks[0], 3)
+    p = dict(
+        router=_dense(ks[1], (d, E), jnp.float32),     # router kept fp32
+        w_gate=_dense(ek[0], (E, d, f), dtype),
+        w_up=_dense(ek[1], (E, d, f), dtype),
+        w_down=_dense(ek[2], (E, f, d), dtype),
+    )
+    if cfg.n_shared:
+        p["shared"] = init_mlp(ks[2], d, cfg.d_ff_shared, dtype)
+    return p
+
+
+def spec_moe(cfg: MoEConfig):
+    s = dict(router=("embed", None),
+             w_gate=("expert", "embed", None),
+             w_up=("expert", "embed", None),
+             w_down=("expert", None, "embed"))
+    if cfg.n_shared:
+        s["shared"] = spec_mlp()
+    return s
+
+
+def moe_density(cfg: MoEConfig) -> float:
+    return cfg.top_k / cfg.n_experts
+
+
+def choose_moe_path(cfg: MoEConfig, n_tokens: int) -> str:
+    """AdaptGear cost-model rule for MoE: dense path FLOPs scale with E,
+    sparse path with top_k + dispatch overhead.  Dense wins only when the
+    token-expert 'adjacency' is dense (few experts) or the token count is
+    too small to amortize sort/scatter."""
+    if cfg.dispatch != "adaptive":
+        return cfg.dispatch
+    dense_cost = float(cfg.n_experts)
+    sparse_cost = cfg.top_k + 0.5 + 1e4 / max(n_tokens, 1)  # dispatch overhead
+    return "dense" if dense_cost <= sparse_cost else "sparse"
+
+
+def _moe_gates(params, cfg: MoEConfig, x2d):
+    logits = einsum("nd,de->ne", x2d.astype(jnp.float32), params["router"])
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(gates, cfg.top_k)        # (N, k)
+    top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch-style)
+    me = gates.mean(0)
+    ce = jnp.zeros((cfg.n_experts,), jnp.float32).at[top_idx.reshape(-1)].add(
+        1.0 / top_idx.size)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+    return top_vals, top_idx, aux
+
+
+def moe_apply_dense(params, cfg: MoEConfig, x2d):
+    """Dense path: every expert for every token, masked combine."""
+    top_vals, top_idx, aux = _moe_gates(params, cfg, x2d)
+    N = x2d.shape[0]
+    combine = jnp.zeros((N, cfg.n_experts), jnp.float32)
+    combine = combine.at[jnp.arange(N)[:, None], top_idx].add(top_vals)
+    gate = einsum("nd,edf->enf", x2d, params["w_gate"]).astype(x2d.dtype)
+    up = einsum("nd,edf->enf", x2d, params["w_up"]).astype(x2d.dtype)
+    h = jax.nn.silu(gate) * up
+    y = einsum("enf,efd->end", h, params["w_down"])
+    out = einsum("end,ne->nd", y, combine).astype(x2d.dtype)
+    return out, aux
+
+
+def moe_apply_sparse(params, cfg: MoEConfig, x2d):
+    """Sort-based capacity dispatch (token-choice, dropping).
+
+    N*k assignments are sorted by expert id; position-in-expert comes from
+    the sorted rank minus the expert's start offset; tokens beyond capacity
+    C are dropped (standard GShard/Switch semantics)."""
+    N, d = x2d.shape
+    E, k = cfg.n_experts, cfg.top_k
+    top_vals, top_idx, aux = _moe_gates(params, cfg, x2d)
+    C = max(int(math.ceil(N * k / E * cfg.capacity_factor)), 1)
+
+    e_flat = top_idx.reshape(-1)                       # (N*k,)
+    t_flat = jnp.repeat(jnp.arange(N), k)              # (N*k,)
+    w_flat = top_vals.reshape(-1)
+
+    order = jnp.argsort(e_flat)                        # stable
+    e_sorted = e_flat[order]
+    # start offset of each expert within the sorted list
+    starts = jnp.searchsorted(e_sorted, jnp.arange(E))  # (E,)
+    pos = jnp.arange(N * k) - starts[e_sorted]          # rank within expert
+    keep = pos < C
+
+    # scatter tokens into the (E, C, d) dispatch buffer
+    buf = jnp.zeros((E, C, d), x2d.dtype)
+    src = x2d[t_flat[order]]
+    buf = buf.at[e_sorted, jnp.where(keep, pos, 0)].add(
+        jnp.where(keep[:, None], src, 0))
+
+    gate = einsum("ecd,edf->ecf", buf, params["w_gate"]).astype(x2d.dtype)
+    up = einsum("ecd,edf->ecf", buf, params["w_up"]).astype(x2d.dtype)
+    h = jax.nn.silu(gate) * up
+    y = einsum("ecf,efd->ecd", h, params["w_down"]).astype(x2d.dtype)
+
+    # gather back + weighted combine
+    out_e = y[e_sorted, jnp.where(keep, pos, 0)]        # (N*k, d)
+    out_e = jnp.where(keep[:, None], out_e, 0) * w_flat[order][:, None]
+    out = jnp.zeros((N, d), jnp.float32).at[t_flat[order]].add(
+        out_e.astype(jnp.float32))
+    return out.astype(x2d.dtype), aux
+
+
+def moe_apply(params, cfg: MoEConfig, x):
+    B, S, d = x.shape
+    x2d = x.reshape(B * S, d)
+    path = choose_moe_path(cfg, B * S)
+    if path == "dense":
+        out, aux = moe_apply_dense(params, cfg, x2d)
+    else:
+        out, aux = moe_apply_sparse(params, cfg, x2d)
+    if cfg.n_shared:
+        out = out + mlp_apply(params["shared"], x).reshape(B * S, d)
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM; Jamba's recurrent layer)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MambaConfig:
+    d_model: int
+    d_inner: int          # expansion * d_model (Jamba: 2x)
+    d_state: int = 16
+    d_conv: int = 4
+    dt_rank: int = 0      # 0 -> ceil(d_model/16)
+    # "xla": associative_scan baseline; "identity": roofline isolation
+    # stand-in (skip the recurrence); "pallas": VMEM-resident scan kernel
+    scan_core: str = "xla"
+
+    @property
+    def rank(self):
+        return self.dt_rank or -(-self.d_model // 16)
+
+
+def init_mamba(key, cfg: MambaConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    di, ds, r = cfg.d_inner, cfg.d_state, cfg.rank
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return dict(
+        in_proj=_dense(ks[0], (cfg.d_model, 2 * di), dtype),
+        conv_w=_dense(ks[1], (cfg.d_conv, di), dtype),
+        conv_b=jnp.zeros((di,), dtype),
+        x_proj=_dense(ks[2], (di, r + 2 * ds), dtype),
+        dt_proj=_dense(ks[3], (r, di), dtype),
+        dt_bias=jnp.zeros((di,), dtype),
+        A_log=jnp.log(A),
+        D=jnp.ones((di,), jnp.float32),
+        out_proj=_dense(ks[4], (di, cfg.d_model), dtype),
+    )
+
+
+def spec_mamba(cfg: MambaConfig):
+    return dict(in_proj=("embed", "mlp"), conv_w=(None, "mlp"),
+                conv_b=("mlp",), x_proj=("mlp", None), dt_proj=(None, "mlp"),
+                dt_bias=("mlp",), A_log=("mlp", None), D=("mlp",),
+                out_proj=("mlp", "embed"))
+
+
+def _mamba_inner(params, cfg: MambaConfig, xz, conv_state=None):
+    """Shared pre-scan compute. xz: (B, T, 2*d_inner)."""
+    x, z = jnp.split(xz, 2, axis=-1)
+    B, T, di = x.shape
+    # causal depthwise conv1d
+    if conv_state is None:
+        pad = jnp.zeros((B, cfg.d_conv - 1, di), x.dtype)
+        xp = jnp.concatenate([pad, x], axis=1)
+    else:
+        xp = jnp.concatenate([conv_state, x], axis=1)
+    new_conv_state = xp[:, -(cfg.d_conv - 1):, :]
+    x = sum(xp[:, i:i + T, :] * params["conv_w"][i] for i in range(cfg.d_conv))
+    x = jax.nn.silu(x + params["conv_b"])
+    proj = einsum("btd,dr->btr", x, params["x_proj"]).astype(x.dtype)
+    dt, Bc, Cc = jnp.split(proj, [cfg.rank, cfg.rank + cfg.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        einsum("btr,rd->btd", dt, params["dt_proj"]) + params["dt_bias"])
+    return x, z, dt.astype(jnp.float32), Bc, Cc, new_conv_state
+
+
+def mamba_apply(params, cfg: MambaConfig, x, return_state: bool = False):
+    """Full-sequence selective scan via associative_scan (baseline; the
+    Pallas VMEM-resident kernel is scan_core="pallas").  With
+    ``return_state`` also returns the decode cache (final h + conv tail)."""
+    xz = einsum("btd,de->bte", x, params["in_proj"]).astype(x.dtype)
+    xs, z, dt, Bc, Cc, conv_state = _mamba_inner(params, cfg, xz)
+    A = -jnp.exp(params["A_log"])                          # (di, ds)
+    if cfg.scan_core == "identity":
+        # roofline isolation: everything but the recurrence
+        y = xs.astype(jnp.float32) * params["D"]
+    elif cfg.scan_core == "pallas":
+        from repro.kernels.mamba_scan import mamba_scan_trainable
+        y = mamba_scan_trainable(xs.astype(jnp.float32), dt,
+                                 Bc.astype(jnp.float32),
+                                 Cc.astype(jnp.float32), A, params["D"])
+        y = y.astype(jnp.float32)
+    else:
+        dA = jnp.exp(dt[..., None] * A)                    # (B,T,di,ds)
+        dBx = (dt * xs.astype(jnp.float32))[..., None] * \
+            Bc.astype(jnp.float32)[:, :, None, :]
+
+        def combine(a, b):
+            a1, b1 = a
+            a2, b2 = b
+            return a2 * a1, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        y = einsum("btds,bts->btd", hs, Cc.astype(jnp.float32))
+        y = y + xs.astype(jnp.float32) * params["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = einsum("btd,de->bte", y, params["out_proj"]).astype(x.dtype)
+    if not return_state:
+        return out
+    # final recurrent state for decode handoff (recomputed sequentially for
+    # the pallas/identity cores; exact for the xla core)
+    if cfg.scan_core == "xla":
+        h_last = hs[:, -1]
+    else:
+        A_ = -jnp.exp(params["A_log"])
+        dA_ = jnp.exp(dt[..., None] * A_)
+        dBx_ = (dt * xs.astype(jnp.float32))[..., None] *             Bc.astype(jnp.float32)[:, :, None, :]
+
+        def comb(a, b):
+            a1, b1 = a
+            a2, b2 = b
+            return a2 * a1, a2 * b1 + b2
+
+        _, hs_ = jax.lax.associative_scan(comb, (dA_, dBx_), axis=1)
+        h_last = hs_[:, -1]
+    return out, dict(h=h_last, conv=conv_state.astype(x.dtype))
+
+
+def init_mamba_cache(cfg: MambaConfig, batch: int, dtype):
+    return dict(h=jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+                conv=jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype))
+
+
+def spec_mamba_cache(cfg: MambaConfig):
+    return dict(h=("batch", "mlp", None), conv=("batch", None, "mlp"))
+
+
+def mamba_decode(params, cfg: MambaConfig, x, cache):
+    """Single-token recurrent step. x: (B, 1, d)."""
+    xz = einsum("btd,de->bte", x, params["in_proj"]).astype(x.dtype)
+    xs, z, dt, Bc, Cc, new_conv = _mamba_inner(params, cfg, xz, cache["conv"])
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A)                   # (B,di,ds)
+    dBx = (dt[:, 0] * xs[:, 0].astype(jnp.float32))[..., None] * \
+        Bc[:, 0].astype(jnp.float32)[:, None, :]
+    h = dA * cache["h"] + dBx
+    y = einsum("bds,bs->bd", h, Cc[:, 0].astype(jnp.float32))
+    y = y + xs[:, 0].astype(jnp.float32) * params["D"]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = einsum("bd,de->be", y, params["out_proj"]).astype(x.dtype)
+    return out[:, None, :], dict(h=h, conv=new_conv.astype(cache["conv"].dtype))
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 (Finch): time-mix with data-dependent decay + channel-mix
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    head_dim: int = 64
+    d_ff: int = 0                 # channel-mix width (3.5x d_model default)
+    lora_rank: int = 64           # decay LoRA rank
+    chunk: int = 64               # chunked-parallel block length
+    # "xla": chunked pure-jnp; "pallas": VMEM-resident kernel;
+    # "identity": roofline isolation stand-in (skip the WKV recurrence)
+    wkv_core: str = "xla"
+
+    @property
+    def n_heads(self):
+        return self.d_model // self.head_dim
+
+
+def init_rwkv6(key, cfg: RWKV6Config, dtype=jnp.float32):
+    ks = jax.random.split(key, 10)
+    d, H, dh = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return dict(
+        # token-shift interpolation weights (static; the full RWKV6 uses
+        # data-dependent token-shift — we keep per-channel static mu)
+        mu_r=jnp.full((d,), 0.5, dtype), mu_k=jnp.full((d,), 0.5, dtype),
+        mu_v=jnp.full((d,), 0.5, dtype), mu_w=jnp.full((d,), 0.5, dtype),
+        mu_g=jnp.full((d,), 0.5, dtype),
+        wr=_dense(ks[0], (d, d), dtype),
+        wk=_dense(ks[1], (d, d), dtype),
+        wv=_dense(ks[2], (d, d), dtype),
+        wg=_dense(ks[3], (d, d), dtype),
+        # data-dependent decay: w_t = exp(-exp(w0 + lora(x)))
+        w0=jnp.zeros((d,), jnp.float32),
+        w_lora_a=_dense(ks[4], (d, cfg.lora_rank), dtype),
+        w_lora_b=_dense(ks[5], (cfg.lora_rank, d), dtype),
+        u=nn.trunc_normal(ks[6], (H, dh)).astype(jnp.float32),   # bonus
+        ln_x=jnp.ones((d,), dtype),                               # group-norm scale
+        wo=_dense(ks[7], (d, d), dtype),
+    )
+
+
+def spec_rwkv6(cfg: RWKV6Config):
+    return dict(mu_r=(None,), mu_k=(None,), mu_v=(None,), mu_w=(None,),
+                mu_g=(None,),
+                wr=("embed", "mlp"), wk=("embed", "mlp"), wv=("embed", "mlp"),
+                wg=("embed", "mlp"), w0=(None,), w_lora_a=("embed", None),
+                w_lora_b=(None, "mlp"), u=(None, None), ln_x=(None,),
+                wo=("mlp", "embed"))
+
+
+def _rwkv6_rkvwg(params, cfg: RWKV6Config, x, x_prev):
+    """Token-shift mixes x_t with x_{t-1}; x_prev: (B,1,d) last token of the
+    previous segment (zeros at sequence start)."""
+    B, T, d = x.shape
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)     # shifted
+    def mix(mu):
+        return x + (xs - x) * mu
+    r = einsum("btd,de->bte", mix(params["mu_r"]), params["wr"]).astype(x.dtype)
+    k = einsum("btd,de->bte", mix(params["mu_k"]), params["wk"]).astype(x.dtype)
+    v = einsum("btd,de->bte", mix(params["mu_v"]), params["wv"]).astype(x.dtype)
+    g = einsum("btd,de->bte", mix(params["mu_g"]), params["wg"]).astype(x.dtype)
+    lora = einsum("btd,dr->btr", jnp.tanh(
+        einsum("btd,dr->btr", mix(params["mu_w"]), params["w_lora_a"]).astype(x.dtype)),
+        params["w_lora_b"])
+    # decay rate clamped to exp(0.405)=1.5 => w >= exp(-1.5): keeps the
+    # chunked kernel's e^{+-c} factors fp32-safe for chunk<=64 (see
+    # kernels/rwkv6_chunked.py docstring).
+    rate = jnp.clip(params["w0"] + lora.astype(jnp.float32), -20.0, 0.405)
+    w = jnp.exp(-jnp.exp(rate))                                   # (B,T,d) in (0,1)
+    H, dh = cfg.n_heads, cfg.head_dim
+    shp = (B, H, T, dh)
+    resh = lambda a: a.reshape(B, T, H, dh).transpose(0, 2, 1, 3)
+    return resh(r), resh(k), resh(v), resh(w.astype(jnp.float32)), g
+
+
+def rwkv6_time_mix(params, cfg: RWKV6Config, x, x_prev=None, state=None,
+                   use_chunked: bool = True):
+    """Full-sequence RWKV6 attention-free mixing.  Returns (out, (x_last,
+    S_last)) so segments/decode can be chained."""
+    B, T, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, d), x.dtype)
+    r, k, v, w, g = _rwkv6_rkvwg(params, cfg, x, x_prev)
+    if cfg.wkv_core == "identity" and use_chunked:
+        # roofline isolation: everything but the recurrence
+        o = v.astype(jnp.float32)
+        S = state if state is not None else jnp.zeros(
+            (B, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32)
+    elif (cfg.wkv_core == "pallas" and use_chunked and state is None
+          and T % cfg.chunk == 0 and T > cfg.chunk):
+        from repro.kernels.rwkv6_chunked import rwkv6_chunked_pallas
+        o = rwkv6_chunked_pallas(r, k, v, w, params["u"], chunk=cfg.chunk,
+                                 interpret=jax.default_backend() != "tpu")
+        o = o.astype(jnp.float32)
+        S = jnp.zeros((B, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                      jnp.float32)
+    elif use_chunked and T % cfg.chunk == 0 and T > cfg.chunk:
+        from repro.kernels.rwkv6_chunked import rwkv6_chunked
+        o, S = rwkv6_chunked(r, k, v, w, params["u"],
+                             chunk=cfg.chunk, state=state)
+    else:
+        o, S = _rwkv6_sequential(r, k, v, w, params["u"], state)
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, d)
+    # per-head group norm
+    H, dh = cfg.n_heads, cfg.head_dim
+    oh = o.reshape(B, T, H, dh).astype(jnp.float32)
+    mu = oh.mean(-1, keepdims=True)
+    var = oh.var(-1, keepdims=True)
+    o = ((oh - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, T, d)
+    o = (o * params["ln_x"]).astype(x.dtype)
+    o = o * jax.nn.silu(g)
+    out = einsum("btd,de->bte", o, params["wo"]).astype(x.dtype)
+    return out, (x[:, -1:], S)
+
+
+def _rwkv6_sequential(r, k, v, w, u, state):
+    B, H, T, dh = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, dh, dh), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhd,bhde->bhe", rt,
+                         S + u.astype(jnp.float32)[:, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    inputs = tuple(jnp.moveaxis(a.astype(jnp.float32), 2, 0)
+                   for a in (r, k, v, w))
+    S, outs = jax.lax.scan(step, state, inputs)
+    return jnp.moveaxis(outs, 0, 2), S
+
+
+def init_rwkv6_cm(key, cfg: RWKV6Config, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    ff = cfg.d_ff or int(3.5 * d)
+    return dict(mu_k=jnp.full((d,), 0.5, dtype), mu_r=jnp.full((d,), 0.5, dtype),
+                wk=_dense(ks[0], (d, ff), dtype), wv=_dense(ks[1], (ff, d), dtype),
+                wr=_dense(jax.random.fold_in(ks[0], 1), (d, d), dtype))
+
+
+def spec_rwkv6_cm(cfg: RWKV6Config):
+    return dict(mu_k=(None,), mu_r=(None,), wk=("embed", "mlp"),
+                wv=("mlp", "embed"), wr=("embed", "mlp"))
+
+
+def rwkv6_channel_mix(params, x, x_prev=None):
+    B, T, d = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, d), x.dtype)
+    xs = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    xk = x + (xs - x) * params["mu_k"]
+    xr = x + (xs - x) * params["mu_r"]
+    kk = einsum("btd,df->btf", xk, params["wk"]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = einsum("btf,fd->btd", kk, params["wv"]).astype(x.dtype)
+    rr = jax.nn.sigmoid(einsum("btd,de->bte", xr, params["wr"]).astype(x.dtype))
+    return rr * vv, x[:, -1:]

@@ -1,0 +1,835 @@
+"""Unified LM-family model: decoder-only (dense / MoE / MLA / hybrid /
+attention-free) and encoder-decoder (whisper), with scan-over-layers,
+configurable remat, and logical sharding specs for every parameter.
+
+A model is a sequence of homogeneous *layer groups*; each group is
+scan-stacked (params carry a leading layer dim) so the HLO stays small for
+61-layer models and the stacked dim doubles as a pipeline-stage axis.
+
+Layer kinds:
+  attn_mlp / attn_moe : GQA attention + dense or MoE FFN   (pre-RMSNorm)
+  mla_mlp  / mla_moe  : multi-head latent attention variant
+  rwkv                : RWKV-6 time-mix + channel-mix
+  jamba_period        : 8-layer Jamba period (7x mamba + 1x attn,
+                        alternating MLP/MoE)
+  enc / dec           : whisper encoder / decoder layers (LayerNorm + GELU)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import nn, rope as rope_mod
+from repro.models import blocks as blk
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "decoder"          # decoder | encdec
+    n_layers: int = 2
+    d_model: int = 128
+    n_heads: int = 4
+    kv_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 256
+    vocab: int = 1000
+    vocab_pad_to: int = 128
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    tie_embeddings: bool = True
+    dtype: str = "float32"
+    norm_eps: float = 1e-6
+
+    attn_type: str = "gqa"           # gqa | mla
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    first_k_dense: int = 0
+    capacity_factor: float = 1.25
+    moe_dispatch: str = "adaptive"   # AdaptGear hook
+    aux_loss_coef: float = 0.01
+
+    # hybrid / attention-free
+    layer_pattern: str = "uniform"   # uniform | jamba | rwkv
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+
+    # modality / structure
+    input_mode: str = "tokens"       # tokens | embeds (vlm & audio stubs)
+    mrope_sections: tuple | None = None
+    encoder_layers: int = 0
+    encoder_seq: int = 1500
+
+    # deepseek-v3 multi-token prediction
+    mtp: bool = False
+    mtp_weight: float = 0.3
+
+    # execution
+    attn_core: str = "softmax"       # softmax | flash | identity
+    mamba_core: str = "xla"          # xla | pallas | identity
+    wkv_core: str = "xla"            # xla | pallas | identity
+    remat: str = "dots"              # none | full | dots
+    scan_layers: bool = True
+    subquadratic: bool = False       # eligible for long_500k
+    rwkv_chunk: int = 32
+
+    @property
+    def jdtype(self):
+        return dict(float32=jnp.float32, bfloat16=jnp.bfloat16,
+                    float16=jnp.float16)[self.dtype]
+
+    @property
+    def padded_vocab(self) -> int:
+        p = self.vocab_pad_to
+        return ((self.vocab + p - 1) // p) * p
+
+    def attn_cfg(self, causal=True, use_rope=True) -> blk.AttnConfig:
+        return blk.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads, kv_heads=self.kv_heads,
+            head_dim=self.head_dim, qkv_bias=self.qkv_bias,
+            rope_theta=self.rope_theta, mrope_sections=self.mrope_sections,
+            causal=causal, use_rope=use_rope, attn_core=self.attn_core)
+
+    def mla_cfg(self) -> blk.MLAConfig:
+        return blk.MLAConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            q_lora_rank=self.q_lora_rank, kv_lora_rank=self.kv_lora_rank,
+            qk_nope_dim=self.qk_nope_dim, qk_rope_dim=self.qk_rope_dim,
+            v_dim=self.v_head_dim, rope_theta=self.rope_theta,
+            attn_core=self.attn_core)
+
+    def moe_cfg(self) -> blk.MoEConfig:
+        return blk.MoEConfig(
+            d_model=self.d_model, n_experts=self.n_experts, top_k=self.top_k,
+            d_ff_expert=self.d_ff_expert, n_shared=self.n_shared_experts,
+            d_ff_shared=self.n_shared_experts * self.d_ff_expert,
+            capacity_factor=self.capacity_factor, dispatch=self.moe_dispatch)
+
+    def mamba_cfg(self) -> blk.MambaConfig:
+        return blk.MambaConfig(d_model=self.d_model,
+                               d_inner=self.mamba_expand * self.d_model,
+                               d_state=self.mamba_d_state,
+                               scan_core=self.mamba_core)
+
+    def rwkv_cfg(self) -> blk.RWKV6Config:
+        return blk.RWKV6Config(d_model=self.d_model, head_dim=64,
+                               d_ff=self.d_ff, chunk=self.rwkv_chunk,
+                               wkv_core=self.wkv_core)
+
+    def layer_groups(self) -> list[tuple[str, int]]:
+        """[(kind, n_layers_in_group), ...] in execution order."""
+        if self.family == "encdec":
+            return [("enc", self.encoder_layers), ("dec", self.n_layers)]
+        if self.layer_pattern == "rwkv":
+            return [("rwkv", self.n_layers)]
+        if self.layer_pattern == "jamba":
+            assert self.n_layers % 8 == 0
+            return [("jamba_period", self.n_layers // 8)]
+        mixer = "mla" if self.attn_type == "mla" else "attn"
+        if self.n_experts:
+            groups = []
+            if self.first_k_dense:
+                groups.append((f"{mixer}_mlp", self.first_k_dense))
+            groups.append((f"{mixer}_moe", self.n_layers - self.first_k_dense))
+            return groups
+        return [(f"{mixer}_mlp", self.n_layers)]
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / spec / apply
+# ---------------------------------------------------------------------------
+
+def _norm_init(d, dtype, with_bias=False):
+    p = dict(scale=jnp.ones((d,), dtype))
+    if with_bias:
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def _norm_spec(with_bias=False):
+    s = dict(scale=(None,))
+    if with_bias:
+        s["bias"] = (None,)
+    return s
+
+
+def _norm_apply(p, x, eps):
+    if "bias" in p:
+        return nn.layer_norm(x, p["scale"], p["bias"], eps)
+    return nn.rms_norm(x, p["scale"], eps)
+
+
+def init_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    dt = cfg.jdtype
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    if kind in ("attn_mlp", "attn_moe", "mla_mlp", "mla_moe"):
+        mixer, ffn = kind.split("_")
+        p = dict(norm1=_norm_init(d, dt), norm2=_norm_init(d, dt))
+        if mixer == "attn":
+            p["attn"] = blk.init_attention(ks[0], cfg.attn_cfg(), dt)
+        else:
+            p["attn"] = blk.init_mla(ks[0], cfg.mla_cfg(), dt)
+        if ffn == "mlp":
+            p["ffn"] = blk.init_mlp(ks[1], d, cfg.d_ff, dt)
+        else:
+            p["ffn"] = blk.init_moe(ks[1], cfg.moe_cfg(), dt)
+        return p
+    if kind == "rwkv":
+        rc = cfg.rwkv_cfg()
+        return dict(norm1=_norm_init(d, dt), norm2=_norm_init(d, dt),
+                    tm=blk.init_rwkv6(ks[0], rc, dt),
+                    cm=blk.init_rwkv6_cm(ks[1], rc, dt))
+    if kind == "jamba_period":
+        mc, moec = cfg.mamba_cfg(), cfg.moe_cfg()
+        sub = {}
+        for i in range(8):
+            kk = jax.random.split(ks[i % 8], 4)
+            mix = ("attn" if i == 3 else "mamba")
+            layer = dict(norm1=_norm_init(d, dt), norm2=_norm_init(d, dt))
+            if mix == "attn":
+                layer["mixer"] = blk.init_attention(kk[0], cfg.attn_cfg(), dt)
+            else:
+                layer["mixer"] = blk.init_mamba(kk[0], mc, dt)
+            if i % 2 == 1:
+                layer["ffn"] = blk.init_moe(kk[1], moec, dt)
+            else:
+                layer["ffn"] = blk.init_mlp(kk[1], d, cfg.d_ff, dt)
+            sub[f"l{i}"] = layer
+        return sub
+    if kind == "enc":
+        return dict(norm1=_norm_init(d, dt, True), norm2=_norm_init(d, dt, True),
+                    attn=blk.init_attention(ks[0], cfg.attn_cfg(causal=False, use_rope=False), dt),
+                    ffn=blk.init_mlp(ks[1], d, cfg.d_ff, dt, gated=False))
+    if kind == "dec":
+        return dict(norm1=_norm_init(d, dt, True), norm2=_norm_init(d, dt, True),
+                    norm3=_norm_init(d, dt, True),
+                    attn=blk.init_attention(ks[0], cfg.attn_cfg(causal=True, use_rope=False), dt),
+                    cross=blk.init_attention(ks[1], cfg.attn_cfg(causal=False, use_rope=False), dt),
+                    ffn=blk.init_mlp(ks[2], d, cfg.d_ff, dt, gated=False))
+    raise ValueError(kind)
+
+
+def spec_layer(cfg: ModelConfig, kind: str):
+    if kind in ("attn_mlp", "attn_moe", "mla_mlp", "mla_moe"):
+        mixer, ffn = kind.split("_")
+        return dict(
+            norm1=_norm_spec(), norm2=_norm_spec(),
+            attn=(blk.spec_attention(cfg.attn_cfg()) if mixer == "attn"
+                  else blk.spec_mla(cfg.mla_cfg())),
+            ffn=(blk.spec_mlp() if ffn == "mlp" else blk.spec_moe(cfg.moe_cfg())),
+        )
+    if kind == "rwkv":
+        rc = cfg.rwkv_cfg()
+        return dict(norm1=_norm_spec(), norm2=_norm_spec(),
+                    tm=blk.spec_rwkv6(rc), cm=blk.spec_rwkv6_cm(rc))
+    if kind == "jamba_period":
+        sub = {}
+        for i in range(8):
+            layer = dict(norm1=_norm_spec(), norm2=_norm_spec())
+            layer["mixer"] = (blk.spec_attention(cfg.attn_cfg()) if i == 3
+                              else blk.spec_mamba(cfg.mamba_cfg()))
+            layer["ffn"] = (blk.spec_moe(cfg.moe_cfg()) if i % 2 == 1
+                            else blk.spec_mlp())
+            sub[f"l{i}"] = layer
+        return sub
+    if kind == "enc":
+        return dict(norm1=_norm_spec(True), norm2=_norm_spec(True),
+                    attn=blk.spec_attention(cfg.attn_cfg(causal=False)),
+                    ffn=blk.spec_mlp(gated=False))
+    if kind == "dec":
+        return dict(norm1=_norm_spec(True), norm2=_norm_spec(True),
+                    norm3=_norm_spec(True),
+                    attn=blk.spec_attention(cfg.attn_cfg()),
+                    cross=blk.spec_attention(cfg.attn_cfg(causal=False)),
+                    ffn=blk.spec_mlp(gated=False))
+    raise ValueError(kind)
+
+
+def layer_apply(params, cfg: ModelConfig, kind: str, x, positions,
+                enc_out=None, rwkv_carry=None):
+    """Full-sequence layer. Returns (x, aux_loss)."""
+    eps = cfg.norm_eps
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn_mlp", "attn_moe", "mla_mlp", "mla_moe"):
+        mixer, ffn = kind.split("_")
+        h = _norm_apply(params["norm1"], x, eps)
+        if mixer == "attn":
+            h = blk.attention_apply(params["attn"], cfg.attn_cfg(), h, positions)
+        else:
+            h = blk.mla_apply(params["attn"], cfg.mla_cfg(), h, positions)
+        x = x + h
+        h = _norm_apply(params["norm2"], x, eps)
+        if ffn == "mlp":
+            h = blk.mlp_apply(params["ffn"], h)
+        else:
+            h, aux = blk.moe_apply(params["ffn"], cfg.moe_cfg(), h)
+        return x + h, aux
+    if kind == "rwkv":
+        rc = cfg.rwkv_cfg()
+        h = _norm_apply(params["norm1"], x, eps)
+        h, _ = blk.rwkv6_time_mix(params["tm"], rc, h)
+        x = x + h
+        h = _norm_apply(params["norm2"], x, eps)
+        h, _ = blk.rwkv6_channel_mix(params["cm"], h)
+        return x + h, aux
+    if kind == "jamba_period":
+        total_aux = aux
+        for i in range(8):
+            lp = params[f"l{i}"]
+            h = _norm_apply(lp["norm1"], x, eps)
+            if i == 3:
+                h = blk.attention_apply(lp["mixer"], cfg.attn_cfg(), h, positions)
+            else:
+                h = blk.mamba_apply(lp["mixer"], cfg.mamba_cfg(), h)
+            x = x + h
+            h = _norm_apply(lp["norm2"], x, eps)
+            if i % 2 == 1:
+                h, a = blk.moe_apply(lp["ffn"], cfg.moe_cfg(), h)
+                total_aux = total_aux + a
+            else:
+                h = blk.mlp_apply(lp["ffn"], h)
+            x = x + h
+        return x, total_aux
+    if kind == "enc":
+        h = _norm_apply(params["norm1"], x, eps)
+        h = blk.attention_apply(params["attn"], cfg.attn_cfg(causal=False, use_rope=False),
+                                h, positions)
+        x = x + h
+        h = _norm_apply(params["norm2"], x, eps)
+        return x + blk.mlp_apply(params["ffn"], h, gated=False), aux
+    if kind == "dec":
+        acfg = cfg.attn_cfg(causal=True, use_rope=False)
+        ccfg = cfg.attn_cfg(causal=False, use_rope=False)
+        h = _norm_apply(params["norm1"], x, eps)
+        h = blk.attention_apply(params["attn"], acfg, h, positions)
+        x = x + h
+        h = _norm_apply(params["norm2"], x, eps)
+        kx = blk.einsum("bsd,dh->bsh", enc_out, params["cross"]["wk"]).astype(x.dtype)
+        vx = blk.einsum("bsd,dh->bsh", enc_out, params["cross"]["wv"]).astype(x.dtype)
+        Bb, Se, _ = enc_out.shape
+        kx = kx.reshape(Bb, Se, cfg.kv_heads, cfg.head_dim)
+        vx = vx.reshape(Bb, Se, cfg.kv_heads, cfg.head_dim)
+        if ccfg.qkv_bias:
+            kx = kx + params["cross"]["bk"].reshape(cfg.kv_heads, cfg.head_dim)
+            vx = vx + params["cross"]["bv"].reshape(cfg.kv_heads, cfg.head_dim)
+        h = blk.attention_apply(params["cross"], ccfg, h, positions,
+                                kv_override=(kx, vx))
+        x = x + h
+        h = _norm_apply(params["norm3"], x, eps)
+        return x + blk.mlp_apply(params["ffn"], h, gated=False), aux
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# whole-model init / spec / forward
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dt = cfg.jdtype
+    keys = jax.random.split(key, 8)
+    V = cfg.padded_vocab
+    p = dict(embed=nn.trunc_normal(keys[0], (V, cfg.d_model)).astype(dt),
+             final_norm=_norm_init(cfg.d_model, dt,
+                                   with_bias=(cfg.family == "encdec")))
+    if not cfg.tie_embeddings:
+        p["lm_head"] = nn.trunc_normal(keys[1], (cfg.d_model, V)).astype(dt)
+    groups = []
+    for gi, (kind, n) in enumerate(cfg.layer_groups()):
+        gkey = jax.random.fold_in(keys[2], gi)
+        if cfg.scan_layers:
+            stack = jax.vmap(lambda k: init_layer(k, cfg, kind))(
+                jax.random.split(gkey, n))
+        else:
+            stack = [init_layer(k, cfg, kind)
+                     for k in jax.random.split(gkey, n)]
+        groups.append(stack)  # kind/n derivable from cfg.layer_groups()
+    p["groups"] = groups
+    if cfg.family == "encdec":
+        p["enc_final_norm"] = _norm_init(cfg.d_model, dt, with_bias=True)
+    if cfg.mtp:
+        p["mtp"] = dict(norm=_norm_init(cfg.d_model, dt),
+                        proj=nn.lecun_normal(keys[3],
+                                             (2 * cfg.d_model, cfg.d_model)).astype(dt),
+                        block=init_layer(keys[4], cfg, "attn_mlp"
+                                         if cfg.attn_type == "gqa" else "mla_mlp"))
+    return p
+
+
+def param_specs(cfg: ModelConfig):
+    s = dict(embed=("vocab", "embed"), final_norm=_norm_spec(cfg.family == "encdec"))
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ("embed", "vocab")
+    groups = []
+    for kind, n in cfg.layer_groups():
+        ls = spec_layer(cfg, kind)
+        if cfg.scan_layers:
+            ls = jax.tree.map(lambda t: ("layer",) + t, ls,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        else:
+            ls = [ls] * n
+        groups.append(ls)
+    s["groups"] = groups
+    if cfg.family == "encdec":
+        s["enc_final_norm"] = _norm_spec(True)
+    if cfg.mtp:
+        mkind = "attn_mlp" if cfg.attn_type == "gqa" else "mla_mlp"
+        s["mtp"] = dict(norm=_norm_spec(), proj=("embed", "embed"),
+                        block=spec_layer(cfg, mkind))
+    return s
+
+
+def _run_group(group_params, cfg: ModelConfig, kind: str, x, positions,
+               enc_out=None):
+    """Scan (or loop) a homogeneous layer group."""
+    def body_fn(x, layer_params):
+        y, aux = layer_apply(layer_params, cfg, kind, x, positions, enc_out)
+        return y, aux
+
+    if cfg.remat == "full":
+        body_fn = jax.checkpoint(body_fn)
+    elif cfg.remat == "dots":
+        body_fn = jax.checkpoint(
+            body_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if cfg.scan_layers:
+        x, auxs = jax.lax.scan(body_fn, x, group_params)
+        return x, auxs.sum()
+    aux_total = jnp.zeros((), jnp.float32)
+    for lp in group_params:
+        x, aux = body_fn(x, lp)
+        aux_total += aux
+    return x, aux_total
+
+
+def _logits(params, cfg: ModelConfig, h):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return blk.einsum("bsd,dv->bsv", h, head).astype(cfg.jdtype)
+
+
+def forward(params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, dict]:
+    """Training/prefill forward pass.  batch keys by input_mode/family:
+      tokens mode : tokens (B,S) [+ positions (3,B,S) for M-RoPE]
+      embeds mode : embeds (B,S,d)
+      encdec      : enc_embeds (B,Se,d) + tokens (B,S)
+    Returns (logits (B,S,Vp), aux dict)."""
+    dt = cfg.jdtype
+    if cfg.input_mode == "tokens":
+        x = nn.embed_lookup(params["embed"], batch["tokens"]).astype(dt)
+        B, S = batch["tokens"].shape
+    else:
+        x = batch["embeds"].astype(dt)
+        B, S = x.shape[:2]
+    if cfg.mrope_sections is not None:
+        positions = batch.get("positions")
+        if positions is None:
+            base = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            positions = jnp.broadcast_to(base[None], (3, B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    enc_out = None
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.family == "encdec":
+        enc = batch["enc_embeds"].astype(dt)
+        Se = enc.shape[1]
+        enc = enc + rope_mod.sinusoidal_positions(Se, cfg.d_model).astype(dt)
+        enc_positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+        x_dec = nn.embed_lookup(params["embed"], batch["tokens"]).astype(dt)
+        x_dec = x_dec + rope_mod.sinusoidal_positions(S, cfg.d_model).astype(dt)
+        for g, (kind, n) in zip(params["groups"], cfg.layer_groups()):
+            if kind == "enc":
+                enc, aux = _run_group(g, cfg, kind, enc, enc_positions)
+                aux_total += aux
+                enc = _norm_apply(params["enc_final_norm"], enc, cfg.norm_eps)
+                enc_out = enc
+            else:
+                x_dec, aux = _run_group(g, cfg, kind, x_dec, positions, enc_out)
+                aux_total += aux
+        h = _norm_apply(params["final_norm"], x_dec, cfg.norm_eps)
+        return _logits(params, cfg, h), dict(aux_loss=aux_total)
+
+    for g, (kind, n) in zip(params["groups"], cfg.layer_groups()):
+        x, aux = _run_group(g, cfg, kind, x, positions)
+        aux_total += aux
+    h = _norm_apply(params["final_norm"], x, cfg.norm_eps)
+    out = dict(aux_loss=aux_total)
+    if cfg.mtp and "tokens" in batch:
+        # DeepSeek-V3-style multi-token prediction: one extra block over
+        # [norm(h_t); norm(embed(tok_{t+1}))] predicting token t+2.
+        nxt = jnp.roll(batch["tokens"], -1, axis=1)
+        e2 = nn.embed_lookup(params["embed"], nxt).astype(dt)
+        hm = jnp.concatenate([_norm_apply(params["mtp"]["norm"], x, cfg.norm_eps),
+                              e2], axis=-1)
+        hm = blk.einsum("bsd,de->bse", hm, params["mtp"]["proj"]).astype(dt)
+        mkind = "attn_mlp" if cfg.attn_type == "gqa" else "mla_mlp"
+        hm, _ = layer_apply(params["mtp"]["block"], cfg, mkind, hm, positions)
+        hm = _norm_apply(params["final_norm"], hm, cfg.norm_eps)
+        out["mtp_logits"] = _logits(params, cfg, hm)
+    return _logits(params, cfg, h), out
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict) -> tuple[jax.Array, dict]:
+    logits, out = forward(params, cfg, batch)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    # mask out the padded vocab tail
+    loss = nn.softmax_cross_entropy(logits[..., : cfg.vocab], labels, mask)
+    total = loss + cfg.aux_loss_coef * out["aux_loss"]
+    metrics = dict(ce=loss, aux=out["aux_loss"])
+    if cfg.mtp and "mtp_logits" in out:
+        l2 = jnp.roll(labels, -1, axis=1)
+        mtp_loss = nn.softmax_cross_entropy(out["mtp_logits"][..., : cfg.vocab], l2, mask)
+        total = total + cfg.mtp_weight * mtp_loss
+        metrics["mtp"] = mtp_loss
+    return total, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode (serving) path
+# ---------------------------------------------------------------------------
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, s_max: int):
+    dt = cfg.jdtype
+    if kind in ("attn_mlp", "attn_moe"):
+        return blk.init_attn_cache(cfg.attn_cfg(), batch, s_max, dt)
+    if kind in ("mla_mlp", "mla_moe"):
+        return blk.init_mla_cache(cfg.mla_cfg(), batch, s_max, dt)
+    if kind == "rwkv":
+        rc = cfg.rwkv_cfg()
+        return dict(S=jnp.zeros((batch, rc.n_heads, rc.head_dim, rc.head_dim),
+                                jnp.float32),
+                    x_tm=jnp.zeros((batch, 1, cfg.d_model), dt),
+                    x_cm=jnp.zeros((batch, 1, cfg.d_model), dt))
+    if kind == "jamba_period":
+        sub = {}
+        for i in range(8):
+            if i == 3:
+                sub[f"l{i}"] = blk.init_attn_cache(cfg.attn_cfg(), batch, s_max, dt)
+            else:
+                sub[f"l{i}"] = blk.init_mamba_cache(cfg.mamba_cfg(), batch, dt)
+        return sub
+    if kind == "dec":
+        c = blk.init_attn_cache(cfg.attn_cfg(), batch, s_max, dt)
+        kv_shape = (batch, cfg.encoder_seq, cfg.kv_heads, cfg.head_dim)
+        c["cross_k"] = jnp.zeros(kv_shape, dt)
+        c["cross_v"] = jnp.zeros(kv_shape, dt)
+        return c
+    if kind == "enc":
+        return None
+    raise ValueError(kind)
+
+
+def spec_layer_cache(cfg: ModelConfig, kind: str):
+    if kind in ("attn_mlp", "attn_moe"):
+        return blk.spec_attn_cache(cfg.attn_cfg())
+    if kind in ("mla_mlp", "mla_moe"):
+        return blk.spec_mla_cache(cfg.mla_cfg())
+    if kind == "rwkv":
+        return dict(S=("batch", "heads", None, None), x_tm=("batch", None, None),
+                    x_cm=("batch", None, None))
+    if kind == "jamba_period":
+        return {f"l{i}": (blk.spec_attn_cache(cfg.attn_cfg()) if i == 3
+                          else blk.spec_mamba_cache(cfg.mamba_cfg()))
+                for i in range(8)}
+    if kind == "dec":
+        s = blk.spec_attn_cache(cfg.attn_cfg())
+        s["cross_k"] = ("batch", None, "kv", None)
+        s["cross_v"] = ("batch", None, "kv", None)
+        return s
+    if kind == "enc":
+        return None
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    caches = []
+    for kind, n in cfg.layer_groups():
+        if kind == "enc":
+            caches.append(None)
+            continue
+        one = init_layer_cache(cfg, kind, batch, s_max)
+        if cfg.scan_layers:
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), one))
+        else:
+            caches.append([init_layer_cache(cfg, kind, batch, s_max)
+                           for _ in range(n)])
+    return caches
+
+
+def cache_specs(cfg: ModelConfig):
+    out = []
+    for kind, n in cfg.layer_groups():
+        if kind == "enc":
+            out.append(None)
+            continue
+        s = spec_layer_cache(cfg, kind)
+        if cfg.scan_layers:
+            s = jax.tree.map(lambda t: (None,) + t, s,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        else:
+            s = [s] * n
+        out.append(s)
+    return out
+
+
+def layer_decode(params, cfg: ModelConfig, kind: str, x, cache, pos):
+    eps = cfg.norm_eps
+    if kind in ("attn_mlp", "attn_moe", "mla_mlp", "mla_moe"):
+        mixer, ffn = kind.split("_")
+        h = _norm_apply(params["norm1"], x, eps)
+        if mixer == "attn":
+            h, cache = blk.attention_decode(params["attn"], cfg.attn_cfg(), h,
+                                            cache, pos)
+        else:
+            h, cache = blk.mla_decode(params["attn"], cfg.mla_cfg(), h, cache,
+                                      pos, absorbed=True)
+        x = x + h
+        h = _norm_apply(params["norm2"], x, eps)
+        if ffn == "mlp":
+            h = blk.mlp_apply(params["ffn"], h)
+        else:
+            h, _ = blk.moe_apply(params["ffn"], cfg.moe_cfg(), h)
+        return x + h, cache
+    if kind == "rwkv":
+        rc = cfg.rwkv_cfg()
+        h = _norm_apply(params["norm1"], x, eps)
+        h_out, (x_tm, S) = blk.rwkv6_time_mix(params["tm"], rc, h,
+                                              x_prev=cache["x_tm"],
+                                              state=cache["S"],
+                                              use_chunked=False)
+        x = x + h_out
+        h = _norm_apply(params["norm2"], x, eps)
+        h_out, x_cm = blk.rwkv6_channel_mix(params["cm"], h,
+                                            x_prev=cache["x_cm"])
+        return x + h_out, dict(S=S, x_tm=x_tm.astype(cache["x_tm"].dtype),
+                               x_cm=x_cm.astype(cache["x_cm"].dtype))
+    if kind == "jamba_period":
+        new = {}
+        for i in range(8):
+            lp = params[f"l{i}"]
+            h = _norm_apply(lp["norm1"], x, eps)
+            if i == 3:
+                h, new[f"l{i}"] = blk.attention_decode(lp["mixer"],
+                                                       cfg.attn_cfg(), h,
+                                                       cache[f"l{i}"], pos)
+            else:
+                h, new[f"l{i}"] = blk.mamba_decode(lp["mixer"], cfg.mamba_cfg(),
+                                                   h, cache[f"l{i}"])
+            x = x + h
+            h = _norm_apply(lp["norm2"], x, eps)
+            if i % 2 == 1:
+                h, _ = blk.moe_apply(lp["ffn"], cfg.moe_cfg(), h)
+            else:
+                h = blk.mlp_apply(lp["ffn"], h)
+            x = x + h
+        return x, new
+    if kind == "dec":
+        acfg = cfg.attn_cfg(causal=True, use_rope=False)
+        ccfg = cfg.attn_cfg(causal=False, use_rope=False)
+        h = _norm_apply(params["norm1"], x, eps)
+        self_cache = dict(k=cache["k"], v=cache["v"])
+        h, self_cache = blk.attention_decode(params["attn"], acfg, h,
+                                             self_cache, pos)
+        x = x + h
+        h = _norm_apply(params["norm2"], x, eps)
+        B = x.shape[0]
+        positions = jnp.zeros((B, 1), jnp.int32)
+        h = blk.attention_apply(params["cross"], ccfg, h, positions,
+                                kv_override=(cache["cross_k"],
+                                             cache["cross_v"]))
+        x = x + h
+        h = _norm_apply(params["norm3"], x, eps)
+        x = x + blk.mlp_apply(params["ffn"], h, gated=False)
+        return x, dict(k=self_cache["k"], v=self_cache["v"],
+                       cross_k=cache["cross_k"], cross_v=cache["cross_v"])
+    raise ValueError(kind)
+
+
+def decode_step(params, cfg: ModelConfig, caches, tokens, pos):
+    """One decode step.  tokens: (B, 1) int32 (or embeds (B,1,d) in embeds
+    mode); pos: scalar int32 position of the new token.  Returns
+    (logits (B, 1, Vp), next_token (B, 1), new caches)."""
+    dt = cfg.jdtype
+    if cfg.input_mode == "tokens":
+        x = nn.embed_lookup(params["embed"], tokens).astype(dt)
+    else:
+        x = tokens.astype(dt)
+    if cfg.family == "encdec":
+        if cfg.scan_layers:
+            s_max = caches[-1]["k"].shape[2]
+        else:
+            s_max = caches[-1][0]["k"].shape[1]
+        x = x + jax.lax.dynamic_slice_in_dim(
+            rope_mod.sinusoidal_positions(s_max, cfg.d_model).astype(dt),
+            pos, 1, axis=0)
+
+    new_caches = []
+    for g, cache, (kind, n) in zip(params["groups"], caches,
+                                   cfg.layer_groups()):
+        if kind == "enc":
+            new_caches.append(None)
+            continue
+        if cfg.scan_layers:
+            def body_fn(x, inp):
+                lp, lc = inp
+                y, nc = layer_decode(lp, cfg, kind, x, lc, pos)
+                return y, nc
+            x, new_c = jax.lax.scan(body_fn, x, (g, cache))
+        else:
+            new_c = []
+            for lp, lc in zip(g, cache):
+                x, nc = layer_decode(lp, cfg, kind, x, lc, pos)
+                new_c.append(nc)
+        new_caches.append(new_c)
+    h = _norm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, h)
+    next_tok = jnp.argmax(logits[..., : cfg.vocab], axis=-1).astype(jnp.int32)
+    return logits, next_tok, new_caches
+
+
+# ---------------------------------------------------------------------------
+# cache-producing prefill (serving: prompt pass that hands off to decode)
+# ---------------------------------------------------------------------------
+
+def _pad_cache_seq(arr, s_max):
+    pad = s_max - arr.shape[1]
+    if pad <= 0:
+        return arr[:, :s_max]
+    return jnp.pad(arr, ((0, 0), (0, pad)) + ((0, 0),) * (arr.ndim - 2))
+
+
+def layer_prefill(params, cfg: ModelConfig, kind: str, x, positions, s_max,
+                  enc_out=None):
+    """Full-sequence layer that also emits its decode cache."""
+    eps = cfg.norm_eps
+    dt = cfg.jdtype
+    B, S, _ = x.shape
+    if kind in ("attn_mlp", "attn_moe"):
+        acfg = cfg.attn_cfg()
+        h = _norm_apply(params["norm1"], x, eps)
+        q, k, v = blk._qkv(params["attn"], acfg, h, positions)
+        o = blk.kref.mha(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3), causal=True)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+        h = blk.einsum("bsh,hd->bsd", o, params["attn"]["wo"]).astype(x.dtype)
+        x = x + h
+        cache = dict(k=_pad_cache_seq(k.astype(dt), s_max),
+                     v=_pad_cache_seq(v.astype(dt), s_max))
+        h = _norm_apply(params["norm2"], x, eps)
+        if kind.endswith("mlp"):
+            h = blk.mlp_apply(params["ffn"], h)
+        else:
+            h, _ = blk.moe_apply(params["ffn"], cfg.moe_cfg(), h)
+        return x + h, cache
+    if kind in ("mla_mlp", "mla_moe"):
+        mcfg = cfg.mla_cfg()
+        h = _norm_apply(params["norm1"], x, eps)
+        q_nope, q_rope, c_kv, k_rope = blk._mla_qkv(params["attn"], mcfg, h,
+                                                    positions)
+        cache = dict(c_kv=_pad_cache_seq(c_kv.astype(dt), s_max),
+                     k_rope=_pad_cache_seq(k_rope[:, :, 0, :].astype(dt),
+                                           s_max))
+        h2 = blk.mla_apply(params["attn"], mcfg, _norm_apply(params["norm1"],
+                                                             x, eps),
+                           positions)
+        x = x + h2
+        h = _norm_apply(params["norm2"], x, eps)
+        if kind.endswith("mlp"):
+            h = blk.mlp_apply(params["ffn"], h)
+        else:
+            h, _ = blk.moe_apply(params["ffn"], cfg.moe_cfg(), h)
+        return x + h, cache
+    if kind == "rwkv":
+        rc = cfg.rwkv_cfg()
+        h = _norm_apply(params["norm1"], x, eps)
+        h_out, (x_tm, S_state) = blk.rwkv6_time_mix(
+            params["tm"], rc, h, use_chunked=(cfg.wkv_core != "pallas"))
+        x = x + h_out
+        h = _norm_apply(params["norm2"], x, eps)
+        h_out, x_cm = blk.rwkv6_channel_mix(params["cm"], h)
+        x = x + h_out
+        return x, dict(S=S_state, x_tm=x_tm.astype(dt), x_cm=x_cm.astype(dt))
+    if kind == "jamba_period":
+        caches = {}
+        for i in range(8):
+            lp = params[f"l{i}"]
+            h = _norm_apply(lp["norm1"], x, eps)
+            if i == 3:
+                acfg = cfg.attn_cfg()
+                q, k, v = blk._qkv(lp["mixer"], acfg, h, positions)
+                o = blk.kref.mha(q.transpose(0, 2, 1, 3),
+                                 k.transpose(0, 2, 1, 3),
+                                 v.transpose(0, 2, 1, 3), causal=True)
+                o = o.transpose(0, 2, 1, 3).reshape(B, S, -1)
+                h = blk.einsum("bsh,hd->bsd", o,
+                               lp["mixer"]["wo"]).astype(x.dtype)
+                caches[f"l{i}"] = dict(k=_pad_cache_seq(k.astype(dt), s_max),
+                                       v=_pad_cache_seq(v.astype(dt), s_max))
+            else:
+                h, caches[f"l{i}"] = blk.mamba_apply(lp["mixer"],
+                                                     cfg.mamba_cfg(), h,
+                                                     return_state=True)
+            x = x + h
+            h = _norm_apply(lp["norm2"], x, eps)
+            if i % 2 == 1:
+                h, _ = blk.moe_apply(lp["ffn"], cfg.moe_cfg(), h)
+            else:
+                h = blk.mlp_apply(lp["ffn"], h)
+            x = x + h
+        return x, caches
+    raise ValueError(f"prefill unsupported for kind {kind}")
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, s_max: int):
+    """Prompt pass producing (logits, caches) for decode handoff.
+    Decoder-only families (token or embeds mode)."""
+    assert cfg.family == "decoder"
+    dt = cfg.jdtype
+    if cfg.input_mode == "tokens":
+        x = nn.embed_lookup(params["embed"], batch["tokens"]).astype(dt)
+        B, S = batch["tokens"].shape
+    else:
+        x = batch["embeds"].astype(dt)
+        B, S = x.shape[:2]
+    if cfg.mrope_sections is not None:
+        positions = batch.get("positions")
+        if positions is None:
+            base = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+            positions = jnp.broadcast_to(base[None], (3, B, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    caches = []
+    for g, (kind, n) in zip(params["groups"], cfg.layer_groups()):
+        if cfg.scan_layers:
+            def body_fn(x, lp):
+                y, c = layer_prefill(lp, cfg, kind, x, positions, s_max)
+                return y, c
+            x, cache = jax.lax.scan(body_fn, x, g)
+        else:
+            cache = []
+            for lp in g:
+                x, c = layer_prefill(lp, cfg, kind, x, positions, s_max)
+                cache.append(c)
+        caches.append(cache)
+    h = _norm_apply(params["final_norm"], x, cfg.norm_eps)
+    return _logits(params, cfg, h), caches

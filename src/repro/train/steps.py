@@ -1,0 +1,100 @@
+"""jit-able train / prefill / serve step factories.
+
+These are what the launcher jits with in/out shardings and what the dry-run
+lowers against ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression
+from repro.models import lm
+from repro.optim import adamw
+
+
+def make_train_step(cfg: lm.ModelConfig, opt_cfg: adamw.OptConfig,
+                    accum_steps: int = 1, grad_compression: str = "none"):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    accum_steps > 1 splits the global batch into microbatches scanned
+    sequentially (activation memory / collective-size lever)."""
+
+    def loss_for(params, batch):
+        return lm.loss_fn(params, cfg, batch)
+
+    def step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_for, has_aux=True)(params, batch)
+        else:
+            def micro(batch_slice):
+                return jax.value_and_grad(loss_for, has_aux=True)(
+                    params, batch_slice)
+
+            def split(k, x):
+                if x is None or x.ndim == 0:
+                    return x
+                if k == "positions":          # (3, B, S): batch is dim 1
+                    r = x.reshape(3, accum_steps, -1, *x.shape[2:])
+                    return jnp.moveaxis(r, 1, 0)
+                b = x.shape[0]
+                return x.reshape(accum_steps, b // accum_steps, *x.shape[1:])
+
+            micro_batches = {k: split(k, v) for k, v in batch.items()}
+
+            def body(acc, mb):
+                (loss, metrics), grads = micro(mb)
+                acc_loss, acc_metrics, acc_grads = acc
+                acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+                return (acc_loss + loss,
+                        jax.tree.map(jnp.add, acc_metrics, metrics),
+                        acc_grads), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+            first = jax.tree.map(lambda v: v[0], micro_batches)
+            (l0, m0), g0 = micro(first)
+            rest = jax.tree.map(lambda v: v[1:], micro_batches)
+            (loss, metrics, grads), _ = jax.lax.scan(
+                body, (l0, m0, jax.tree.map(lambda a, b: a.astype(jnp.float32) + b,
+                                            g0, zero_g)), rest)
+            inv = 1.0 / accum_steps
+            loss = loss * inv
+            metrics = jax.tree.map(lambda m: m * inv, metrics)
+            grads = jax.tree.map(lambda g: g * inv, grads)
+
+        if grad_compression != "none":
+            ef = opt_state.get("ef")
+            grads, ef = compression.compress(grads, grad_compression, ef)
+        new_params, new_opt, stats = adamw.update(params, grads, opt_state, opt_cfg)
+        if grad_compression != "none":
+            new_opt["ef"] = ef
+        metrics = dict(loss=loss, **metrics, **stats)
+        return new_params, new_opt, metrics
+
+    return step
+
+
+def make_prefill_step(cfg: lm.ModelConfig):
+    """Prompt-processing forward: logits for every position (the serving
+    prefill compute shape; cache-filling chunked prefill shares this math)."""
+
+    def step(params, batch):
+        logits, _ = lm.forward(params, cfg, batch)
+        return logits
+
+    return step
+
+
+def make_serve_step(cfg: lm.ModelConfig):
+    """One decode step: new token in, next token + updated caches out."""
+
+    def step(params, caches, tokens, pos):
+        logits, next_tok, caches = lm.decode_step(params, cfg, caches,
+                                                  tokens, pos)
+        return next_tok, logits, caches
+
+    return step

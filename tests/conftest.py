@@ -1,0 +1,16 @@
+import os
+import sys
+
+# tests see exactly 1 CPU device (the dry-run, and only the dry-run, forces
+# 512); make sure no leaked XLA_FLAGS changes that.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,168 @@
+"""LM block unit tests: decode-vs-forward consistency, GQA vs oracle, MoE
+path equivalence, numerical hygiene."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.models import blocks as B
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def x(rng):
+    return jnp.asarray(rng.standard_normal((2, 12, 64)), jnp.float32)
+
+
+@pytest.fixture
+def pos():
+    return jnp.broadcast_to(jnp.arange(12)[None], (2, 12))
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_gqa_matches_oracle(rng, x, pos, hq, hkv):
+    cfg = B.AttnConfig(d_model=64, n_heads=hq, kv_heads=hkv,
+                       head_dim=64 // hq, use_rope=False)
+    p = B.init_attention(KEY, cfg)
+    y = B.attention_apply(p, cfg, x, pos)
+    # manual oracle
+    q = (x @ p["wq"]).reshape(2, 12, hq, cfg.head_dim).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"]).reshape(2, 12, hkv, cfg.head_dim).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"]).reshape(2, 12, hkv, cfg.head_dim).transpose(0, 2, 1, 3)
+    o = ref.mha(q, k, v, causal=True)
+    y_ref = o.transpose(0, 2, 1, 3).reshape(2, 12, -1) @ p["wo"]
+    np.testing.assert_allclose(y, y_ref, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["attn", "mla", "mamba", "rwkv"])
+def test_decode_matches_forward(rng, kind):
+    x = jnp.asarray(rng.standard_normal((2, 8, 64)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    if kind == "attn":
+        cfg = B.AttnConfig(d_model=64, n_heads=4, kv_heads=2, head_dim=16)
+        p = B.init_attention(KEY, cfg)
+        y_full = B.attention_apply(p, cfg, x, pos)
+        cache = B.init_attn_cache(cfg, 2, 8, jnp.float32)
+        step = lambda xt, c, t: B.attention_decode(p, cfg, xt, c, t)
+    elif kind == "mla":
+        cfg = B.MLAConfig(d_model=64, n_heads=4, q_lora_rank=32,
+                          kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+                          v_dim=16)
+        p = B.init_mla(KEY, cfg)
+        y_full = B.mla_apply(p, cfg, x, pos)
+        cache = B.init_mla_cache(cfg, 2, 8, jnp.float32)
+        step = lambda xt, c, t: B.mla_decode(p, cfg, xt, c, t, absorbed=True)
+    elif kind == "mamba":
+        cfg = B.MambaConfig(d_model=64, d_inner=128, d_state=4)
+        p = B.init_mamba(KEY, cfg)
+        y_full = B.mamba_apply(p, cfg, x)
+        cache = B.init_mamba_cache(cfg, 2, jnp.float32)
+        step = lambda xt, c, t: B.mamba_decode(p, cfg, xt, c)
+    else:
+        cfg = B.RWKV6Config(d_model=64, head_dim=16, chunk=4)
+        p = B.init_rwkv6(KEY, cfg)
+        y_full, _ = B.rwkv6_time_mix(p, cfg, x)
+        cache = dict(x_prev=jnp.zeros((2, 1, 64)), S=None)
+
+        def step(xt, c, t):
+            y, (xp, S) = B.rwkv6_time_mix(p, cfg, xt, x_prev=c["x_prev"],
+                                          state=c["S"], use_chunked=False)
+            return y, dict(x_prev=xp, S=S)
+
+    ys = []
+    for t in range(8):
+        y, cache = step(x[:, t:t + 1], cache, t)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_dec, y_full, atol=2e-5, rtol=1e-4)
+
+
+def test_moe_dense_equals_sparse_no_drops(rng):
+    cfg = B.MoEConfig(d_model=16, n_experts=4, top_k=2, d_ff_expert=32,
+                      capacity_factor=8.0)
+    p = B.init_moe(KEY, cfg)
+    x = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    yd, _ = B.moe_apply_dense(p, cfg, x)
+    ys, _ = B.moe_apply_sparse(p, cfg, x)
+    np.testing.assert_allclose(yd, ys, atol=1e-4, rtol=1e-4)
+
+
+def test_moe_capacity_drops_bounded(rng):
+    """With capacity 1.0 some tokens may drop, but outputs stay finite and
+    dropped tokens produce exactly zero (plus shared-expert path if any)."""
+    cfg = B.MoEConfig(d_model=16, n_experts=4, top_k=1, d_ff_expert=32,
+                      capacity_factor=0.5)
+    p = B.init_moe(KEY, cfg)
+    x = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    y, aux = B.moe_apply_sparse(p, cfg, x)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(float(aux))
+
+
+def test_moe_adaptive_path_rule():
+    dense_cfg = B.MoEConfig(d_model=8, n_experts=2, top_k=1, d_ff_expert=8)
+    sparse_cfg = B.MoEConfig(d_model=8, n_experts=256, top_k=8, d_ff_expert=8)
+    assert B.choose_moe_path(dense_cfg, n_tokens=10_000) == "dense"
+    assert B.choose_moe_path(sparse_cfg, n_tokens=10_000) == "sparse"
+
+
+def test_rwkv_decay_clamp(rng):
+    """Extreme LoRA outputs must not produce w outside the fp32-safe band."""
+    cfg = B.RWKV6Config(d_model=64, head_dim=16)
+    p = B.init_rwkv6(KEY, cfg)
+    p = dict(p, w0=jnp.full((64,), 50.0))   # absurd decay request
+    x = jnp.asarray(rng.standard_normal((1, 8, 64)), jnp.float32)
+    y, _ = B.rwkv6_time_mix(p, cfg, x, use_chunked=False)
+    assert np.isfinite(np.asarray(y)).all()
+
+
+def test_mrope_reduces_to_rope_for_text():
+    from repro.layers import rope
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 6, 3, 16)), jnp.float32)
+    pos1 = jnp.broadcast_to(jnp.arange(6)[None], (2, 6))
+    pos3 = jnp.broadcast_to(pos1[None], (3, 2, 6))
+    y_rope = rope.apply_rope(x, pos1)
+    y_mrope = rope.apply_mrope(x, pos3, sections=(2, 3, 3))
+    np.testing.assert_allclose(y_rope, y_mrope, atol=1e-5)
+
+
+def test_rope_preserves_norm(rng):
+    from repro.layers import rope
+    x = jnp.asarray(rng.standard_normal((1, 5, 2, 32)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(5)[None], (1, 5))
+    y = rope.apply_rope(x, pos)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), atol=1e-4,
+                               rtol=1e-4)
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, 64), e=st.integers(2, 8), k=st.integers(1, 4),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_moe_dispatch_invariants(n, e, k, seed):
+    """MoE sparse dispatch invariants: finite outputs; zero input -> zero
+    routed output; combine weights are a convex combination (sum to 1 over
+    the selected experts) so outputs are bounded by expert output norms."""
+    if k > e:
+        return
+    rng = np.random.default_rng(seed)
+    cfg = B.MoEConfig(d_model=8, n_experts=e, top_k=k, d_ff_expert=16,
+                      capacity_factor=8.0)
+    p = B.init_moe(jax.random.PRNGKey(seed % 1000), cfg)
+    x = jnp.asarray(rng.standard_normal((n, 8)), jnp.float32)
+    y, aux = B.moe_apply_sparse(p, cfg, x)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(float(aux))
+    y0, _ = B.moe_apply_sparse(p, cfg, jnp.zeros((n, 8)))
+    assert np.abs(np.asarray(y0)).max() < 1e-5
+    # with no drops, sparse == dense (the invariant AdaptGear relies on:
+    # execution path changes speed, not math)
+    yd, _ = B.moe_apply_dense(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yd), atol=1e-3,
+                               rtol=1e-3)

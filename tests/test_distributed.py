@@ -1,0 +1,241 @@
+"""Sharding resolution, checkpointing, fault tolerance, elastic scaling,
+data pipeline determinism."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.data import pipeline as data_mod
+from repro.distributed import checkpoint as ckpt_mod
+from repro.distributed import compression, elastic, fault_tolerance as ft
+from repro.launch import sharding
+
+
+class FakeMesh:
+    """Duck-typed mesh for spec resolution tests (no 512 devices needed)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_spec_divisible():
+    rules = sharding.default_rules(MESH)
+    s = sharding.spec_for((1024, 4096), ("embed", "mlp"), rules, MESH)
+    assert s == P("data", "model")
+
+
+def test_spec_fallback_on_indivisible():
+    rules = sharding.default_rules(MESH)
+    # kv dim 8*128=1024 divisible, but a raw kv_heads=8 dim is not
+    s = sharding.spec_for((8, 128), ("kv", None), rules, MESH)
+    assert s == P(None, None)
+
+
+def test_spec_no_axis_reuse():
+    rules = sharding.default_rules(MESH)
+    s = sharding.spec_for((256, 512), ("mlp", "qkv"), rules, MESH)
+    # both want "model"; only the first gets it
+    assert s == P("model", None)
+
+
+def test_spec_multi_pod_batch():
+    rules = sharding.default_rules(MESH3)
+    s = sharding.spec_for((256, 4096), ("batch", None), rules, MESH3)
+    assert s == P(("pod", "data"), None)
+
+
+def test_fallback_diagnostics():
+    rules = sharding.default_rules(MESH)
+    shapes = dict(w=jax.ShapeDtypeStruct((8, 128), jnp.float32))
+    logical = dict(w=("kv", "embed"))
+    notes = sharding.count_unsharded_fallbacks(shapes, logical, MESH, rules)
+    assert any("kv=8" in n for n in notes)
+
+
+# -- checkpointing -------------------------------------------------------------
+
+def tree():
+    return dict(a=jnp.arange(12.0).reshape(3, 4),
+                nested=dict(b=jnp.ones((5,), jnp.int32)))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = ckpt_mod.CheckpointManager(str(tmp_path), async_write=False)
+    t = tree()
+    mgr.save(3, t, blocking=True)
+    restored, step = mgr.restore(t)
+    assert step == 3
+    np.testing.assert_array_equal(restored["a"], t["a"])
+    np.testing.assert_array_equal(restored["nested"]["b"], t["nested"]["b"])
+
+
+def test_checkpoint_corruption_falls_back(tmp_path):
+    mgr = ckpt_mod.CheckpointManager(str(tmp_path), async_write=False)
+    t = tree()
+    mgr.save(1, t, blocking=True)
+    mgr.save(2, jax.tree.map(lambda x: x + 1, t), blocking=True)
+    # corrupt step 2
+    with open(os.path.join(str(tmp_path), "step_000000000002",
+                           "arrays.npz"), "ab") as f:
+        f.write(b"garbage")
+    assert mgr.latest_valid_step() == 1
+    restored, step = mgr.restore(t)
+    assert step == 1
+    np.testing.assert_array_equal(restored["a"], t["a"])
+
+
+def test_checkpoint_gc_keeps_k(tmp_path):
+    mgr = ckpt_mod.CheckpointManager(str(tmp_path), keep=2, async_write=False)
+    for s in range(5):
+        mgr.save(s, tree(), blocking=True)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = ckpt_mod.CheckpointManager(str(tmp_path), async_write=True)
+    mgr.save(7, tree())
+    mgr.wait()
+    assert mgr.latest_valid_step() == 7
+
+
+# -- fault tolerance ------------------------------------------------------------
+
+def test_heartbeat_dead_host():
+    hb = ft.HeartbeatMonitor(timeout_s=10)
+    hb.beat(0, now=0.0)
+    hb.beat(1, now=0.0)
+    hb.beat(0, now=8.0)
+    assert hb.dead_hosts(now=15.0) == [1]
+    assert hb.alive_hosts(now=15.0) == [0]
+
+
+def test_straggler_detection():
+    det = ft.StragglerDetector(threshold=1.5, min_samples=3)
+    for _ in range(5):
+        for h in range(4):
+            det.observe(h, 1.0 if h != 2 else 3.0)
+    assert det.stragglers() == [2]
+
+
+def test_reassign_deterministic_and_complete():
+    m1 = ft.reassign_shards(16, [0, 1, 3])
+    m2 = ft.reassign_shards(16, [3, 0, 1])   # order must not matter
+    assert m1 == m2
+    covered = sorted(s for ss in m1.values() for s in ss)
+    assert covered == list(range(16))
+
+
+def test_retry_policy():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    pol = ft.RetryPolicy(max_retries=5, base_delay_s=0)
+    assert pol.run(flaky, _sleep=lambda s: None) == "ok"
+    assert len(calls) == 3
+
+
+# -- elastic ---------------------------------------------------------------------
+
+def test_best_mesh_shapes():
+    assert elastic.best_mesh_shape(512) == ((2, 16, 16), ("pod", "data", "model"))
+    assert elastic.best_mesh_shape(256) == ((16, 16), ("data", "model"))
+    assert elastic.best_mesh_shape(240) == ((15, 16), ("data", "model"))
+    shape, axes = elastic.best_mesh_shape(8)
+    assert np.prod(shape) <= 8
+
+
+def test_plan_rescale_keeps_batch_when_divisible():
+    plan = elastic.plan_rescale(256, 128, global_batch=256)
+    assert plan["global_batch"] == 256
+    plan = elastic.plan_rescale(256, 240, global_batch=256)
+    assert plan["global_batch"] % (np.prod(plan["mesh_shape"]) //
+                                   plan["mesh_shape"][-1]) == 0
+
+
+def test_elastic_restore_roundtrip(tmp_path):
+    """Checkpoint saved under one layout restores bit-exact under another."""
+    mgr = ckpt_mod.CheckpointManager(str(tmp_path), async_write=False)
+    t = dict(w=jnp.arange(64.0).reshape(8, 8))
+    mgr.save(1, t, blocking=True)
+    restored, _ = mgr.restore(t)   # same host, new placement is a no-op here
+    np.testing.assert_array_equal(restored["w"], t["w"])
+
+
+# -- data pipeline -----------------------------------------------------------------
+
+def test_pipeline_deterministic_and_restart_stable():
+    p = data_mod.TokenPipeline(vocab=100, seq=8, global_batch=4, n_shards=2)
+    b1 = p.batch(step=5, shard=1)
+    b2 = p.batch(step=5, shard=1)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    full = data_mod.TokenPipeline(vocab=100, seq=8, global_batch=4,
+                                  n_shards=2).batch(5, 1)
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_pipeline_shards_disjoint():
+    p = data_mod.TokenPipeline(vocab=1000, seq=16, global_batch=8, n_shards=4)
+    rows = [p.batch(0, s)["tokens"] for s in range(4)]
+    flat = np.stack([r.reshape(-1) for r in rows])
+    # different shards see different data (overwhelmingly)
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert not np.array_equal(flat[i], flat[j])
+
+
+def test_shard_takeover_consistency():
+    """Host B taking over shard 2 sees exactly what host A would have."""
+    p = data_mod.TokenPipeline(vocab=100, seq=8, global_batch=8, n_shards=4)
+    before = p.batch(step=9, shard=2)
+    after = p.batch(step=9, shard=2)   # recomputed anywhere, any time
+    np.testing.assert_array_equal(before["tokens"], after["tokens"])
+
+
+# -- compression ---------------------------------------------------------------------
+
+def test_compression_modes(rng):
+    g = dict(w=jnp.asarray(rng.standard_normal((32, 32)), jnp.float32))
+    out, _ = compression.compress(g, "none")
+    np.testing.assert_array_equal(out["w"], g["w"])
+    out, _ = compression.compress(g, "bf16")
+    assert np.abs(np.asarray(out["w"]) - np.asarray(g["w"])).max() < 1e-1
+    ef = compression.init_error_feedback(g)
+    out, ef2 = compression.compress(g, "topk_ef", ef, topk_frac=0.1)
+    nz = (np.asarray(out["w"]) != 0).mean()
+    assert nz <= 0.15
+    # error feedback carries the residual
+    np.testing.assert_allclose(np.asarray(out["w"]) + np.asarray(ef2["w"]),
+                               np.asarray(g["w"]), atol=1e-6)
+
+
+def test_elastic_restore_onto_new_mesh_layout(tmp_path):
+    """Train-state checkpoint restores bit-exact onto a different mesh
+    factorization (the elastic re-mesh path end-to-end on one host)."""
+    import jax
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+    mgr = ckpt_mod.CheckpointManager(str(tmp_path), async_write=False)
+    t = dict(w=jnp.arange(64.0).reshape(8, 8),
+             m=jnp.ones((8, 8)) * 0.5)
+    mgr.save(5, t, blocking=True)
+    # "new fleet": a (1,1) mesh with different axis naming
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = dict(w=NamedSharding(mesh, P("data", "model")),
+              m=NamedSharding(mesh, P(None, "model")))
+    restored, step = mgr.restore(t, shardings=sh)
+    assert step == 5
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(t["w"]))
+    assert restored["w"].sharding == sh["w"]

@@ -1,0 +1,126 @@
+"""REQUIRED per-architecture smoke tests: reduced same-family config, one
+forward/train step on CPU, asserting output shapes + no NaNs; plus a decode
+step for every decoder arch."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.optim import adamw
+from repro.train import steps as steps_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    batch = dict(labels=jnp.roll(toks, -1, 1))
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+        batch["tokens"] = toks
+    elif cfg.input_mode == "embeds":
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+        if cfg.mrope_sections is not None:
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(S)[None, None], (3, B, S)).astype(jnp.int32)
+    else:
+        batch["tokens"] = toks
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = configs.get_config(arch, reduced=True)
+    params = lm.init_params(KEY, cfg)
+    batch = make_batch(cfg)
+    logits, aux = jax.jit(lambda p, b: lm.forward(p, cfg, b))(params, batch)
+    B, S = batch["labels"].shape
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_train_step_decreases_loss(arch):
+    cfg = configs.get_config(arch, reduced=True)
+    params = lm.init_params(KEY, cfg)
+    opt_state = adamw.init_state(params)
+    opt_cfg = adamw.OptConfig(lr=5e-3, warmup_steps=1, total_steps=10)
+    step = jax.jit(steps_mod.make_train_step(cfg, opt_cfg))
+    batch = make_batch(cfg)
+    losses = []
+    for _ in range(8):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1]), arch
+    assert losses[-1] < losses[0], (arch, losses)
+
+
+@pytest.mark.parametrize("arch", [a for a in configs.ARCHS])
+def test_decode_step_smoke(arch):
+    cfg = configs.get_config(arch, reduced=True)
+    params = lm.init_params(KEY, cfg)
+    B, S_max = 2, 8
+    caches = lm.init_cache(cfg, B, S_max)
+    if cfg.input_mode == "embeds":
+        tok = jnp.zeros((B, 1, cfg.d_model), jnp.float32)
+    else:
+        tok = jnp.zeros((B, 1), jnp.int32)
+    step = jax.jit(steps_mod.make_serve_step(cfg))
+    nxt, logits, caches = step(params, caches, tok, jnp.int32(0))
+    assert nxt.shape == (B, 1)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all(), arch
+    assert (np.asarray(nxt) < cfg.vocab).all()
+    # second step with updated cache
+    nxt2, _, caches = step(params, caches, tok, jnp.int32(1))
+    assert np.isfinite(np.asarray(nxt2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["jamba_v0_1_52b", "rwkv6_7b"])
+def test_subquadratic_flag(arch):
+    cfg = configs.get_config(arch)
+    assert cfg.subquadratic
+    ok, _ = configs.shape_applicable(cfg, "long_500k")
+    assert ok
+
+
+def test_quadratic_archs_skip_long():
+    cfg = configs.get_config("qwen2_5_14b")
+    ok, reason = configs.shape_applicable(cfg, "long_500k")
+    assert not ok and reason
+
+
+DECODER_TOKEN_ARCHS = [a for a in configs.ARCHS
+                       if configs.get_config(a, reduced=True).family ==
+                       "decoder"
+                       and configs.get_config(a, reduced=True).input_mode ==
+                       "tokens"]
+
+
+@pytest.mark.parametrize("arch", DECODER_TOKEN_ARCHS)
+def test_prefill_then_decode_matches_forward(arch):
+    """Cache-producing prefill hands off to decode with teacher-forced
+    logits identical to the full forward pass."""
+    import dataclasses
+    cfg = dataclasses.replace(configs.get_config(arch, reduced=True),
+                              mtp=False)
+    rng = np.random.default_rng(0)
+    B, P, S = 2, 8, 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    params = lm.init_params(KEY, cfg)
+    full_logits, _ = lm.forward(params, cfg, dict(tokens=toks))
+    logits_pre, caches = lm.prefill(params, cfg, dict(tokens=toks[:, :P]),
+                                    s_max=S)
+    np.testing.assert_allclose(np.asarray(logits_pre, np.float32),
+                               np.asarray(full_logits[:, :P], np.float32),
+                               atol=1e-3, rtol=1e-3)
+    for t in range(P, S):
+        lg, _, caches = lm.decode_step(params, cfg, caches, toks[:, t:t + 1], t)
+        np.testing.assert_allclose(np.asarray(lg[:, 0], np.float32),
+                                   np.asarray(full_logits[:, t], np.float32),
+                                   atol=1e-3, rtol=1e-3, err_msg=f"{arch}@{t}")

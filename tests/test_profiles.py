@@ -1,0 +1,45 @@
+"""Optimized execution profiles (§Perf findings as launcher rules)."""
+import pytest
+
+from repro import configs
+from repro.launch import profiles
+
+
+def test_head_padding_rules():
+    qwen = configs.get_config("qwen2_5_14b")
+    pad = profiles.padded_heads(qwen, 16)
+    assert pad == dict(n_heads=48, kv_heads=16)
+    # already divisible: no padding
+    dsm = configs.get_config("deepseek_moe_16b")
+    assert profiles.padded_heads(dsm, 16) == {}
+    # MLA: untouched
+    v3 = configs.get_config("deepseek_v3_671b")
+    assert profiles.padded_heads(v3, 16) == {}
+    # gqa divisibility preserved
+    ilm = configs.get_config("internlm2_1_8b")
+    pad = profiles.padded_heads(ilm, 16)
+    nh = pad.get("n_heads", ilm.n_heads)
+    kv = pad.get("kv_heads", ilm.kv_heads)
+    assert nh % kv == 0 and nh % 16 == 0 and kv % 16 == 0
+
+
+def test_zero1_size_rule():
+    assert profiles.weights_fit_zero1(configs.get_config("internlm2_1_8b"), 16)
+    assert profiles.weights_fit_zero1(configs.get_config("qwen2_5_14b"), 16)
+    assert not profiles.weights_fit_zero1(
+        configs.get_config("deepseek_v3_671b"), 16)
+    assert not profiles.weights_fit_zero1(
+        configs.get_config("mistral_large_123b"), 16)
+
+
+def test_optimized_overrides_shapes():
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch)
+        mo, ro = profiles.optimized_overrides(cfg, "train", 16)
+        if "n_heads" in mo:
+            assert mo["n_heads"] % 16 == 0
+        if cfg.layer_pattern == "jamba":
+            assert mo.get("mamba_core") == "pallas"
+            assert ro is None            # v3 refutation: keep FSDP
+        if arch == "deepseek_v3_671b":
+            assert ro is None            # 671B needs FSDP

@@ -1,0 +1,80 @@
+"""Validates the roofline methodology itself: the HLO collective parser and
+the scan-correction composition (small-probe linear composition must equal a
+direct full-depth unrolled lowering)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+
+
+def test_collective_bytes_parser():
+    from repro.launch.dryrun import collective_bytes
+    hlo = """
+  %ag = bf16[256,4096] all-gather(bf16[16,4096] %x), dimensions={0}
+  %ar = f32[1024] all-reduce(f32[1024] %y), to_apply=%sum
+  %rs = f32[64,128] reduce-scatter(f32[1024,128] %z), dimensions={0}
+  %cp = s32[8] collective-permute(s32[8] %w)
+  %dot = f32[128,128] dot(f32[128,64] %a, f32[64,128] %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["counts"] == {"all-gather": 1, "all-reduce": 1,
+                             "reduce-scatter": 1, "collective-permute": 1}
+    assert out["all-gather"] == 256 * 4096 * 2
+    assert out["all-reduce"] == 1024 * 4
+    assert out["reduce-scatter"] == 64 * 128 * 4
+    assert out["collective-permute"] == 8 * 4
+    assert out["total"] == sum(out[k] for k in out["counts"])
+
+
+def test_flash_model_path_matches_softmax():
+    """attn_core='flash' (Pallas fwd + recompute bwd) must be numerically
+    identical to the XLA softmax path, through the full loss/grad."""
+    import jax.numpy as jnp
+    from repro.models import lm
+    rng = np.random.default_rng(0)
+    cfg0 = configs.get_config("internlm2_1_8b", reduced=True)
+    B, S = 2, 128
+    toks = jnp.asarray(rng.integers(0, cfg0.vocab, (B, S)), jnp.int32)
+    batch = dict(tokens=toks, labels=jnp.roll(toks, -1, 1))
+    p = lm.init_params(jax.random.PRNGKey(0), cfg0)
+    ref = None
+    for core in ("softmax", "flash"):
+        cfg = dataclasses.replace(cfg0, attn_core=core)
+        loss, _ = lm.loss_fn(p, cfg, batch)
+        g = jax.grad(lambda p: lm.loss_fn(p, cfg, batch)[0])(p)
+        gn = float(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(g))) ** 0.5
+        if ref is None:
+            ref = (float(loss), gn)
+        else:
+            assert abs(float(loss) - ref[0]) < 1e-4
+            assert abs(gn - ref[1]) / ref[1] < 1e-4
+
+
+@pytest.mark.slow
+def test_scan_correction_composes_exactly(monkeypatch):
+    """corrected_costs' small-probe composition == direct unrolled lowering
+    at full depth (uniform-decoder and first-k-dense MoE families)."""
+    from benchmarks.roofline import corrected_costs, _probe
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    monkeypatch.setitem(configs.SHAPES, "tiny",
+                        dict(seq=32, batch=2, mode="train"))
+
+    for arch, depth_field in [("internlm2_1_8b", None),
+                              ("deepseek_moe_16b", None)]:
+        reduced = configs.get_config(arch, reduced=True)
+        monkeypatch.setattr(configs, "get_config",
+                            lambda name, reduced_=False, _r=reduced: _r)
+        composed = corrected_costs(arch, "tiny", mesh)
+        direct = _probe(arch, "tiny", mesh, dict(n_layers=reduced.n_layers))
+        monkeypatch.undo()
+        monkeypatch.setitem(configs.SHAPES, "tiny",
+                            dict(seq=32, batch=2, mode="train"))
+        for k in ("flops", "coll"):
+            np.testing.assert_allclose(composed[k], direct[k], rtol=0.02,
+                                       err_msg=f"{arch}:{k}")
+        np.testing.assert_allclose(composed["bytes"], direct["bytes"],
+                                   rtol=0.10, err_msg=f"{arch}:bytes")

@@ -1,0 +1,93 @@
+"""End-to-end behaviour tests for the paper's system (AdaptGear)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import adaptgear, decompose, gnn
+from repro.graphs import graph as G
+from repro.kernels import ops
+
+
+@pytest.fixture(scope="module")
+def citeseer():
+    return G.synth_dataset("citeseer", scale=0.15, seed=0)
+
+
+@pytest.mark.parametrize("model", ["gcn", "gin", "gat", "sage"])
+def test_training_learns(citeseer, model):
+    cfg = gnn.GNNConfig(model=model, selector="fixed",
+                        fixed_kernels=("block_diag", "ell"), hidden=16)
+    res = gnn.train(citeseer, cfg, steps=25)
+    assert res.losses[-1] < res.losses[0] * 0.9, res.losses
+    assert np.isfinite(res.losses).all()
+    assert res.accuracy > 1.5 / citeseer.n_classes  # beats chance
+
+
+def test_all_kernel_pairs_same_loss_curve(citeseer):
+    """AdaptGear invariant: the kernel choice changes *speed*, never the
+    math — every (intra, inter) pair must produce the same training curve."""
+    curves = {}
+    for ik in ops.KERNELS_INTRA:
+        for ek in ops.KERNELS_INTER:
+            cfg = gnn.GNNConfig(model="gcn", selector="fixed",
+                                fixed_kernels=(ik, ek), hidden=8)
+            res = gnn.train(citeseer, cfg, steps=5)
+            curves[(ik, ek)] = res.losses
+    base = curves[("block_diag", "bell")]
+    for k, c in curves.items():
+        # different kernels sum edges in different orders; the fp drift is
+        # amplified by Adam across steps — exactness holds per-aggregation
+        # (test_decompose), curves agree to ~1%
+        np.testing.assert_allclose(c, base, atol=5e-3, rtol=1e-2,
+                                   err_msg=str(k))
+
+
+def test_feedback_selector_runs(citeseer):
+    cfg = gnn.GNNConfig(model="gcn", selector="feedback", warmup_iters=1)
+    res = gnn.train(citeseer, cfg, steps=5)
+    assert len(res.kernels) == cfg.n_layers   # per-layer selection
+    for ik, ek in res.kernels:
+        assert ik in ops.KERNELS_INTRA
+        assert ek in ops.KERNELS_INTER
+    n_cand = len(ops.KERNELS_INTRA) + len(ops.KERNELS_INTER)
+    assert len(res.probe_times) >= n_cand
+
+
+def test_cost_model_selector_runs(citeseer):
+    cfg = gnn.GNNConfig(model="gcn", selector="cost_model")
+    res = gnn.train(citeseer, cfg, steps=5)
+    assert np.isfinite(res.losses).all()
+
+
+def test_preprocessing_overhead_small(citeseer):
+    """Paper §6.3: preprocessing is a one-off, small vs training."""
+    cfg = gnn.GNNConfig(model="gcn", selector="fixed")
+    res = gnn.train(citeseer, cfg, steps=10)
+    assert res.preprocess_seconds < 30.0
+
+
+def test_memory_overhead_topology(citeseer):
+    """Paper Fig. 12: subgraph topology storage is small vs features."""
+    import jax
+    dec = decompose.decompose(citeseer, comm_size=16, method="bfs")
+    topo_bytes = 0
+    for fmt in (dec.intra_bd, dec.intra_coo, dec.intra_ell, dec.inter_bell,
+                dec.inter_bell_t, dec.inter_coo, dec.inter_ell):
+        topo_bytes += sum(a.size * a.dtype.itemsize
+                          for a in jax.tree.leaves(fmt)
+                          if hasattr(a, "size"))
+    feat_bytes = citeseer.features.size * 4
+    # all candidate formats together stay bounded; the *selected* pair alone
+    # is what the paper's 4.47% number refers to (see benchmarks)
+    assert topo_bytes < 50 * feat_bytes
+
+
+def test_lm_moe_adaptgear_hook():
+    """The MoE dispatch selector must route big-E configs to the sparse
+    path (DESIGN.md §4)."""
+    from repro import configs
+    from repro.models import blocks as B
+    moe16 = configs.get_config("deepseek_moe_16b").moe_cfg()
+    assert B.choose_moe_path(moe16, n_tokens=1 << 20) == "sparse"
+    v3 = configs.get_config("deepseek_v3_671b").moe_cfg()
+    assert B.choose_moe_path(v3, n_tokens=1 << 20) == "sparse"
