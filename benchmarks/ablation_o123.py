@@ -28,11 +28,11 @@ def run(scale: float = 0.08, feat: int = 32, verbose: bool = True):
         t_o1 = timeit(jax.jit(
             lambda x: adaptgear.aggregate_full_static(dec, x, "ell")), x)
         t_o2 = timeit(jax.jit(
-            lambda x: adaptgear.aggregate(dec, x, "ell", "coo")), x)
+            lambda x: adaptgear.aggregate(dec, x, ("ell", "coo"))), x)
         sel = sel_mod.AdaptiveSelector(dec, warmup_iters=1)
         choice = sel.probe(x, iters=1).choice
         t_o3 = timeit(jax.jit(
-            lambda x: adaptgear.aggregate(dec, x, *choice)), x)
+            lambda x: adaptgear.aggregate(dec, x, choice)), x)
         rows.append(dict(dataset=name, o1_us=t_o1 * 1e6, o2_us=t_o2 * 1e6,
                          o3_us=t_o3 * 1e6, choice=choice))
         if verbose:

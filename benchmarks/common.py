@@ -1,9 +1,16 @@
-"""Shared benchmark utilities: timing harness + CSV emission."""
+"""Shared benchmark utilities: timing harness + CSV emission + an optional
+machine-readable recorder (``BENCH_*.json``) so the perf trajectory can be
+accumulated across runs/commits."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
+
+# rows emitted since the last drain: list of dicts
+_RECORDS: list[dict] = []
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -21,3 +28,20 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+    _RECORDS.append(dict(name=name, us_per_call=us_per_call, derived=derived))
+
+
+def drain_records() -> list[dict]:
+    """Return and clear the rows emitted since the last drain."""
+    global _RECORDS
+    out, _RECORDS = _RECORDS, []
+    return out
+
+
+def write_bench_json(benchmark: str, rows: list[dict], out_dir: str) -> str:
+    """Write one benchmark's emitted rows as ``BENCH_<benchmark>.json``."""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{benchmark}.json")
+    with open(path, "w") as f:
+        json.dump(dict(benchmark=benchmark, rows=rows), f, indent=1)
+    return path

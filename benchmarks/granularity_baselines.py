@@ -26,21 +26,22 @@ DATASETS = ["cora", "citeseer", "pubmed"]
 
 def pcgcn_style_aggregate(dec, x):
     """Block-level execution: one call per diagonal block + one per block
-    row of the inter subgraph, then merge."""
+    row of each inter bucket, then merge."""
     B = dec.block_size
     nb = dec.n_pad // B
-    blocks = dec.intra_bd.blocks
+    blocks = dec.intra.formats["block_diag"].blocks
     xb = x.reshape(nb, B, -1)
     mm = jax.jit(lambda a, b: a @ b)
     parts = [mm(blocks[i], xb[i]) for i in range(nb)]        # launch per block
-    y_intra = jnp.stack(parts).reshape(dec.n_pad, -1)
-    bell = dec.inter_bell
+    y = jnp.stack(parts).reshape(dec.n_pad, -1)
     row_call = jax.jit(lambda blk, idx, xx: jnp.einsum(
         "kij,kjf->if", blk, xx.reshape(-1, B, xx.shape[-1])[idx]))
-    y_rows = [row_call(bell.blocks[i], bell.col_idx[i], x)
-              for i in range(bell.n_brow)]                    # launch per row
-    y_inter = jnp.concatenate(y_rows).reshape(dec.n_pad, -1)
-    return y_intra + y_inter
+    for sub in dec.inters:
+        bell = sub.formats["bell"][0]
+        y_rows = [row_call(bell.blocks[i], bell.col_idx[i], x)
+                  for i in range(bell.n_brow)]                # launch per row
+        y = y + jnp.concatenate(y_rows).reshape(dec.n_pad, -1)
+    return y
 
 
 def run(scale: float = 0.08, feat: int = 32, verbose: bool = True):
@@ -61,7 +62,7 @@ def run(scale: float = 0.08, feat: int = 32, verbose: bool = True):
         sel = sel_mod.AdaptiveSelector(dec, warmup_iters=1)
         choice = sel.probe(x, iters=1).choice
         t_ag = timeit(jax.jit(
-            lambda x: adaptgear.aggregate(dec, x, *choice)), x)
+            lambda x: adaptgear.aggregate(dec, x, choice)), x)
 
         row = dict(dataset=name, gnna_us=t_gnna * 1e6, pcgcn_us=t_pcgcn * 1e6,
                    adaptgear_us=t_ag * 1e6, choice=choice)
@@ -69,7 +70,7 @@ def run(scale: float = 0.08, feat: int = 32, verbose: bool = True):
         if verbose:
             emit(f"fig9_10_{name}", t_ag * 1e6,
                  f"vs_gnna={t_gnna/t_ag:.2f}x;vs_pcgcn={t_pcgcn/t_ag:.2f}x;"
-                 f"choice={choice[0]}+{choice[1]}")
+                 f"choice={'+'.join(choice)}")
     return rows
 
 

@@ -3,8 +3,6 @@ topology vs total training memory (features + activations + params + grads
 + optimizer moments)."""
 from __future__ import annotations
 
-import jax
-
 from benchmarks.common import emit
 from repro.core import decompose
 from repro.graphs import graph as G
@@ -12,19 +10,13 @@ from repro.graphs import graph as G
 DATASETS = ["cora", "citeseer", "pubmed", "proteins_full"]
 
 
-def fmt_bytes(fmt) -> int:
-    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(fmt)
-               if hasattr(a, "size"))
-
-
-def selected_topology_bytes(dec, intra_k: str, inter_k: str) -> int:
-    """Bytes of the formats the selector actually keeps on device."""
-    intra = {"block_diag": [dec.intra_bd], "ell": [dec.intra_ell],
-             "coo": [dec.intra_coo]}[intra_k]
-    inter = {"bell": [dec.inter_bell, dec.inter_bell_t],
-             "ell": [dec.inter_ell, dec.inter_coo],   # ell fwd + coo-T bwd
-             "coo": [dec.inter_coo]}[inter_k]
-    return sum(fmt_bytes(f) for f in intra + inter)
+def selected_topology_bytes(dec, plan_layer) -> int:
+    """Bytes of the format payloads the selected plan keeps on device
+    (a kernel's payload already includes its VJP operand, e.g. the
+    blocked-ELL transpose)."""
+    from repro.kernels.registry import payload_nbytes
+    return sum(payload_nbytes(sub.formats[k])
+               for sub, k in zip(dec.subgraphs, plan_layer))
 
 
 def run(scale: float = 0.05, hidden: int = 16, verbose: bool = True):
@@ -35,8 +27,9 @@ def run(scale: float = 0.05, hidden: int = 16, verbose: bool = True):
         dec = decompose.decompose(g, comm_size=16, method="louvain")
         # topology bytes for the SELECTED pair only — what lives on device
         # during training (paper Fig. 12 counts the kept subgraph tensors)
-        ik, ek = sel_mod.select_by_cost_model(dec, hidden, hw=sel_mod.CPU_HW)
-        topo = selected_topology_bytes(dec, ik, ek)
+        plan_layer = sel_mod.select_by_cost_model(dec, hidden,
+                                                  hw=sel_mod.CPU_HW)
+        topo = selected_topology_bytes(dec, plan_layer)
         feat = g.features.size * 4
         nf = g.features.shape[1]
         # GCN training footprint: features + 2x activations + params(+grads,

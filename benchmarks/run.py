@@ -3,6 +3,7 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
 
   PYTHONPATH=src python -m benchmarks.run            # all paper benchmarks
   PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+  PYTHONPATH=src python -m benchmarks.run --json out/   # also BENCH_*.json
 """
 from __future__ import annotations
 
@@ -16,11 +17,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark names")
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="also write machine-readable BENCH_<name>.json "
+                         "(per-row us_per_call) into DIR")
     args = ap.parse_args()
 
-    from benchmarks import (ablation_o123, density_analysis, end_to_end,
-                            format_crossover, granularity_baselines,
-                            memory_overhead, overhead)
+    from benchmarks import (ablation_o123, common, density_analysis,
+                            end_to_end, format_crossover,
+                            granularity_baselines, memory_overhead, overhead)
 
     scale = 0.04 if args.quick else 0.08
     jobs = {
@@ -45,12 +49,15 @@ def main() -> None:
     for name, job in jobs.items():
         if only and name not in only:
             continue
+        common.drain_records()
         try:
             job()
         except Exception:
             failures += 1
             traceback.print_exc()
             print(f"{name},NaN,FAILED")
+        if args.json:
+            common.write_bench_json(name, common.drain_records(), args.json)
     sys.exit(1 if failures else 0)
 
 

@@ -1,3 +1,25 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""AdaptGear core: adaptive subgraph-level GNN aggregation.
+
+Architecture (data flow, one arrow per module boundary):
+
+  graphs.Graph
+      |  core.decompose.decompose(..., inter_buckets=k)
+      v
+  Decomposed -- an ordered list of Subgraph density tiers: the intra
+      |         (block-diagonal) tier plus k inter-community buckets split
+      |         by block-row occupancy.  Each Subgraph eagerly materializes
+      |         one format payload per applicable kernel, built by the
+      |         kernel registry (kernels.registry.REGISTRY).
+      |  core.selector (feedback probe | analytic cost model), candidates
+      |  enumerated from the registry per subgraph
+      v
+  core.plan.KernelPlan -- per-layer x per-subgraph kernel names
+      |  core.adaptgear.aggregate / core.gnn.forward / train_step
+      v
+  Y = sum_s A_s @ X, each subgraph dispatched through its registered
+  kernel's matvec (Pallas MXU block kernels, XLA gather/segment paths).
+
+Adding a kernel = one KernelSpec registration (name, kinds, format builder,
+matvec, cost fn); decomposition, both selectors, dispatch, and the
+benchmarks pick it up with no further edits.
+"""

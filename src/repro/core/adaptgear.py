@@ -1,22 +1,29 @@
 """AdaptGear aggregation dispatch + GNN convolution layers (paper §3/§4).
 
 ``aggregate`` is the AG-equivalent of the paper's subgraph-level execution:
-Y = A_intra @ X  +  A_inter @ X, with an independently selected kernel per
-subgraph.  Layers are pure functions over explicit parameter pytrees
-(init_* / apply pattern; no framework dependency).
+Y = sum_s A_s @ X over the decomposition's subgraphs (intra tier + one or
+more inter density buckets), with an independently selected kernel per
+subgraph.  Dispatch goes through the kernel registry — there is no
+string-keyed if/elif chain here; a kernel choice is a registry name resolved
+to a spec whose ``matvec`` runs on the subgraph's materialized payload.
+Layers are pure functions over explicit parameter pytrees (init_* / apply
+pattern; no framework dependency).
 """
 from __future__ import annotations
 
 import math
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.decompose import Decomposed
-from repro.kernels import ops
+from repro.core import plan as plan_mod
+from repro.core.decompose import Decomposed, Subgraph
+from repro.kernels.registry import REGISTRY
 
 Params = Any
+
+DEFAULT_KERNELS = ("block_diag", "bell")
 
 
 # ---------------------------------------------------------------------------
@@ -36,46 +43,31 @@ def from_reordered(dec: Decomposed, xr: jax.Array) -> jax.Array:
     return xr[: dec.n][dec.perm]
 
 
-def aggregate_one(dec: Decomposed, x: jax.Array, which: str,
-                  kernel: str) -> jax.Array:
-    """Aggregate over a single subgraph with an explicit kernel.
+def aggregate_sub(sub: Subgraph, x: jax.Array, kernel: str) -> jax.Array:
+    """Aggregate over a single subgraph with an explicit registry kernel.
     x: (n_pad, F) in reordered space."""
-    if which == "intra":
-        if kernel == "block_diag":
-            return ops.block_diag_matvec(dec.intra_bd.blocks, x)
-        if kernel == "ell":
-            return ops.ell_matvec(dec.intra_ell, x)
-        if kernel == "coo":
-            return ops.coo_matvec(dec.intra_coo, x)
-    else:
-        if kernel == "bell":
-            return ops.bell_matvec(dec.inter_bell, dec.inter_bell_t, x)
-        if kernel == "ell":
-            return ops.ell_matvec(dec.inter_ell, x)
-        if kernel == "coo":
-            return ops.coo_matvec(dec.inter_coo, x)
-    raise ValueError(f"unknown ({which}, {kernel})")
+    return REGISTRY.get(kernel).matvec(sub.formats[kernel], x)
 
 
 def aggregate(dec: Decomposed, x: jax.Array,
-              intra_kernel: str = "block_diag",
-              inter_kernel: str = "bell") -> jax.Array:
-    """Y = A @ X via per-subgraph kernels (x reordered, (n_pad, F))."""
-    return (aggregate_one(dec, x, "intra", intra_kernel)
-            + aggregate_one(dec, x, "inter", inter_kernel))
+              kernels: Sequence[str] = DEFAULT_KERNELS) -> jax.Array:
+    """Y = A @ X via per-subgraph kernels (x reordered, (n_pad, F)).
+
+    ``kernels`` is one name per subgraph, or the ``(intra, inter)`` pair
+    shorthand broadcast over inter buckets."""
+    names = plan_mod.normalize_layer(dec, kernels)
+    y = aggregate_sub(dec.subgraphs[0], x, names[0])
+    for sub, k in zip(dec.subgraphs[1:], names[1:]):
+        y = y + aggregate_sub(sub, x, k)
+    return y
 
 
 def aggregate_full_static(dec: Decomposed, x: jax.Array,
                           kernel: str = "ell") -> jax.Array:
     """Baseline O1 (paper §6.2): a single static full-graph-level kernel —
-    GNNAdvisor/NeuGraph-style.  Uses intra+inter merged through one format."""
-    if kernel == "coo":
-        y = ops.coo_matvec(dec.intra_coo, x) + ops.coo_matvec(dec.inter_coo, x)
-        return y
-    if kernel == "ell":
-        return (ops.ell_matvec(dec.intra_ell, x)
-                + ops.ell_matvec(dec.inter_ell, x))
-    raise ValueError(kernel)
+    GNNAdvisor/NeuGraph-style.  Every subgraph runs the same format (the
+    plan layer validates applicability before anything executes)."""
+    return aggregate(dec, x, (kernel,) * len(dec.subgraphs))
 
 
 # ---------------------------------------------------------------------------
@@ -95,12 +87,12 @@ def init_gcn_conv(key, in_dim: int, out_dim: int) -> Params:
 
 
 def gcn_conv(params: Params, dec: Decomposed, x: jax.Array,
-             intra_kernel: str, inter_kernel: str) -> jax.Array:
+             kernels: Sequence[str]) -> jax.Array:
     """GCN layer: Y = Â (X W) + b  (Kipf & Welling; Â norm baked into the
     decomposition's edge values).  Transform-first ordering reduces the
     aggregated width when out_dim < in_dim — same trick DGL applies."""
     h = x @ params["w"]
-    h = aggregate(dec, h, intra_kernel, inter_kernel)
+    h = aggregate(dec, h, kernels)
     return h + params["b"]
 
 
@@ -112,9 +104,9 @@ def init_gin_conv(key, in_dim: int, hidden: int, out_dim: int) -> Params:
 
 
 def gin_conv(params: Params, dec: Decomposed, x: jax.Array,
-             intra_kernel: str, inter_kernel: str) -> jax.Array:
+             kernels: Sequence[str]) -> jax.Array:
     """GIN layer: MLP((1+eps) x + sum-agg(x)) (Xu et al.)."""
-    agg = aggregate(dec, x, intra_kernel, inter_kernel)
+    agg = aggregate(dec, x, kernels)
     h = (1.0 + params["eps"]) * x + agg
     h = jax.nn.relu(h @ params["w1"] + params["b1"])
     return h @ params["w2"] + params["b2"]
@@ -128,10 +120,9 @@ def init_sage_conv(key, in_dim: int, out_dim: int) -> Params:
 
 
 def sage_conv(params: Params, dec: Decomposed, x: jax.Array,
-              intra_kernel: str, inter_kernel: str,
-              inv_deg: jax.Array) -> jax.Array:
+              kernels: Sequence[str], inv_deg: jax.Array) -> jax.Array:
     """GraphSAGE mean-aggregator: W_s x + W_n mean_agg(x)."""
-    agg = aggregate(dec, x, intra_kernel, inter_kernel) * inv_deg[:, None]
+    agg = aggregate(dec, x, kernels) * inv_deg[:, None]
     return x @ params["w_self"] + agg @ params["w_neigh"] + params["b"]
 
 
@@ -148,12 +139,11 @@ def gat_conv(params: Params, dec: Decomposed, x: jax.Array,
     """Single-head GAT with subgraph-level execution.
 
     Attention logits e_ij = LeakyReLU(a_dst.h_i + a_src.h_j) must be
-    softmax-normalized over *all* in-neighbors of i — across both subgraphs —
-    so the two partial aggregations share row-max and row-sum statistics.
+    softmax-normalized over *all* in-neighbors of i — across every subgraph —
+    so the partial aggregations share row-max and row-sum statistics.
     The intra part is evaluated as dense masked per-block attention (an MXU
-    batched matmul, AdaptGear's dense-kernel path); the inter part as COO
-    edge softmax (segment ops, the edge-parallel path).
-    """
+    batched matmul, AdaptGear's dense-kernel path); each inter density bucket
+    as COO edge softmax (segment ops, the edge-parallel path)."""
     h = x @ params["w"]                                 # (n_pad, F)
     s_dst = h @ params["a_dst"]                         # (n_pad,)
     s_src = h @ params["a_src"]
@@ -161,36 +151,46 @@ def gat_conv(params: Params, dec: Decomposed, x: jax.Array,
     B = dec.block_size
     nb = dec.n_pad // B
     # -- intra: dense per-block logits
-    mask = dec.intra_bd.blocks != 0                     # (nb, B, B)
+    mask = dec.intra.formats["block_diag"].blocks != 0  # (nb, B, B)
     e_in = s_dst.reshape(nb, B)[:, :, None] + s_src.reshape(nb, B)[:, None, :]
     e_in = jax.nn.leaky_relu(e_in, negative_slope)
     e_in = jnp.where(mask, e_in, -jnp.inf)
-    # -- inter: per-edge logits
-    rows, cols = dec.inter_coo.rows, dec.inter_coo.cols
-    e_out = jax.nn.leaky_relu(s_dst[rows] + s_src[cols], negative_slope)
+    # -- inter buckets: per-edge logits (each bucket's COO is row-sorted)
+    edge_parts = []
+    for sub in dec.inters:
+        coo = sub.formats["coo"]
+        e_out = jax.nn.leaky_relu(s_dst[coo.rows] + s_src[coo.cols],
+                                  negative_slope)
+        edge_parts.append((coo.rows, coo.cols, e_out))
 
-    # -- joint row max
-    m_in = jnp.max(e_in, axis=-1).reshape(-1)           # (n_pad,) -inf if empty
-    m_out = jax.ops.segment_max(e_out, rows, num_segments=dec.n_pad,
-                                indices_are_sorted=True)
-    m = jnp.maximum(m_in, m_out)
+    # -- joint row max across all subgraphs
+    m = jnp.max(e_in, axis=-1).reshape(-1)              # (n_pad,) -inf if empty
+    for rows, _, e_out in edge_parts:
+        m_out = jax.ops.segment_max(e_out, rows, num_segments=dec.n_pad,
+                                    indices_are_sorted=True)
+        m = jnp.maximum(m, m_out)
     m = jnp.where(jnp.isfinite(m), m, 0.0)
 
     # -- exp + joint row sum
     p_in = jnp.where(mask, jnp.exp(e_in - m.reshape(nb, B)[:, :, None]), 0.0)
-    p_out = jnp.exp(e_out - m[rows])
-    z = (jnp.sum(p_in, axis=-1).reshape(-1)
-         + jax.ops.segment_sum(p_out, rows, num_segments=dec.n_pad,
-                               indices_are_sorted=True))
+    z = jnp.sum(p_in, axis=-1).reshape(-1)
+    p_outs = []
+    for rows, _, e_out in edge_parts:
+        p_out = jnp.exp(e_out - m[rows])
+        p_outs.append(p_out)
+        z = z + jax.ops.segment_sum(p_out, rows, num_segments=dec.n_pad,
+                                    indices_are_sorted=True)
     z = jnp.maximum(z, 1e-9)
 
     # -- weighted aggregation, subgraph-level kernels
     hb = h.reshape(nb, B, -1)
-    y_in = jnp.einsum("bij,bjf->bif", p_in, hb,
-                      preferred_element_type=jnp.float32).reshape(dec.n_pad, -1)
-    y_out = jax.ops.segment_sum(h[cols] * p_out[:, None], rows,
-                                num_segments=dec.n_pad, indices_are_sorted=True)
-    return ((y_in + y_out) / z[:, None]).astype(x.dtype) + params["b"]
+    y = jnp.einsum("bij,bjf->bif", p_in, hb,
+                   preferred_element_type=jnp.float32).reshape(dec.n_pad, -1)
+    for (rows, cols, _), p_out in zip(edge_parts, p_outs):
+        y = y + jax.ops.segment_sum(h[cols] * p_out[:, None], rows,
+                                    num_segments=dec.n_pad,
+                                    indices_are_sorted=True)
+    return (y / z[:, None]).astype(x.dtype) + params["b"]
 
 
 # ---------------------------------------------------------------------------
@@ -198,30 +198,30 @@ def gat_conv(params: Params, dec: Decomposed, x: jax.Array,
 # ---------------------------------------------------------------------------
 
 def aggregate_mean(dec: Decomposed, x: jax.Array, inv_deg: jax.Array,
-                   intra_kernel: str = "block_diag",
-                   inter_kernel: str = "bell") -> jax.Array:
+                   kernels: Sequence[str] = DEFAULT_KERNELS) -> jax.Array:
     """mean = sum x (1/deg): reuses the full adaptive sum machinery (the
     dense MXU path stays available)."""
-    return aggregate(dec, x, intra_kernel, inter_kernel) * inv_deg[:, None]
+    return aggregate(dec, x, kernels) * inv_deg[:, None]
 
 
 def aggregate_max(dec: Decomposed, x: jax.Array) -> jax.Array:
-    """aggregate-max over in-neighbors of both subgraphs.
+    """aggregate-max over in-neighbors of all subgraphs.
 
     max is not a matmul, so the dense-block MXU candidate does not exist on
     TPU (faithful hardware note: the paper's dense kernel is equivalent to
-    aggregation only for sum, §3.2); both subgraphs run the segment/gather
+    aggregation only for sum, §3.2); every subgraph runs the segment/gather
     paths, joined by an elementwise max.  Rows with no neighbors return 0
     (GNN convention)."""
     neg = jnp.float32(-3.4e38)
     # intra via masked ELL gather
-    ell = dec.intra_ell
+    ell = dec.intra.formats["ell"]
     g_in = jnp.where(ell.mask[..., None], x[ell.indices], neg)
-    m_in = jnp.max(g_in, axis=1)                         # (n_pad, F)
-    # inter via segment_max over edges
-    coo = dec.inter_coo
-    m_out = jax.ops.segment_max(x[coo.cols], coo.rows,
-                                num_segments=dec.n_pad,
-                                indices_are_sorted=True)
-    m = jnp.maximum(m_in, m_out)
+    m = jnp.max(g_in, axis=1)                            # (n_pad, F)
+    # inter buckets via segment_max over edges
+    for sub in dec.inters:
+        coo = sub.formats["coo"]
+        m_out = jax.ops.segment_max(x[coo.cols], coo.rows,
+                                    num_segments=dec.n_pad,
+                                    indices_are_sorted=True)
+        m = jnp.maximum(m, m_out)
     return jnp.where(m <= neg / 2, 0.0, m).astype(x.dtype)

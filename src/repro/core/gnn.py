@@ -6,8 +6,10 @@ plus GAT and GraphSAGE as extensions.  Training = full-graph node
 classification with Adam, the standard setting for the paper's datasets.
 
 The training loop integrates the paper's feedback-driven selector: the first
-``warmup_iters`` iterations time every (intra, inter) kernel candidate on the
-real graph, then the loop commits to the fastest jitted step function.
+``warmup_iters`` iterations time every registry kernel candidate per
+subgraph on the real graph, then the loop commits to the fastest jitted step
+function.  The committed choices form a KernelPlan (per-layer x
+per-subgraph) that forward/train_step are keyed by.
 """
 from __future__ import annotations
 
@@ -20,8 +22,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import adaptgear, decompose as dec_mod, selector as sel_mod
+from repro.core.plan import KernelPlan
 from repro.graphs import graph as graph_mod
-from repro.kernels import ops
 
 Params = Any
 
@@ -35,6 +37,7 @@ class GNNConfig:
     dropout: float = 0.0          # kept 0 for determinism in tests
     comm_size: int = 16
     reorder: str = "bfs"          # bfs | louvain
+    inter_buckets: int = 1        # density tiers for the inter subgraph
     selector: str = "feedback"    # feedback | cost_model | fixed
     fixed_kernels: tuple = ("block_diag", "bell")
     warmup_iters: int = 2
@@ -48,7 +51,8 @@ def prepare(graph: graph_mod.Graph, cfg: GNNConfig) -> dec_mod.Decomposed:
     vals = (graph_mod.gcn_norm_values(g.n, g.senders, g.receivers)
             if cfg.model == "gcn" else None)
     return dec_mod.decompose(g, comm_size=cfg.comm_size, method=cfg.reorder,
-                             edge_vals=vals)
+                             edge_vals=vals,
+                             inter_buckets=cfg.inter_buckets)
 
 
 def init_model(key, cfg: GNNConfig, in_dim: int, n_classes: int) -> Params:
@@ -79,29 +83,37 @@ def agg_widths(cfg: GNNConfig, in_dim: int, n_classes: int) -> list[int]:
     return dims[:-1]                         # gin/sage/gat aggregate inputs
 
 
+def _as_plan(dec: dec_mod.Decomposed, kernels, n_layers: int) -> KernelPlan:
+    if isinstance(kernels, KernelPlan):
+        if kernels.n_layers != n_layers:
+            raise ValueError(f"plan has {kernels.n_layers} layers, "
+                             f"model has {n_layers}")
+        return kernels
+    return KernelPlan.make(dec, kernels, n_layers=n_layers)
+
+
 def forward(params: Params, cfg: GNNConfig, dec: dec_mod.Decomposed,
             x: jax.Array, kernels,
             inv_deg: jax.Array | None = None) -> jax.Array:
-    if isinstance(kernels, tuple) and isinstance(kernels[0], str):
-        kernels = [kernels] * len(params)
+    plan = _as_plan(dec, kernels, len(params))
     h = x
     for i, layer in enumerate(params):
-        intra_k, inter_k = kernels[i]
+        names = plan.for_layer(i)
         if cfg.model == "gcn":
-            h = adaptgear.gcn_conv(layer, dec, h, intra_k, inter_k)
+            h = adaptgear.gcn_conv(layer, dec, h, names)
         elif cfg.model == "gin":
-            h = adaptgear.gin_conv(layer, dec, h, intra_k, inter_k)
+            h = adaptgear.gin_conv(layer, dec, h, names)
         elif cfg.model == "gat":
             h = adaptgear.gat_conv(layer, dec, h)
         elif cfg.model == "sage":
-            h = adaptgear.sage_conv(layer, dec, h, intra_k, inter_k, inv_deg)
+            h = adaptgear.sage_conv(layer, dec, h, names, inv_deg)
         if i != len(params) - 1:
             h = jax.nn.relu(h)
     return h
 
 
-def _loss(params, cfg, dec, x, labels, node_mask, kernels, inv_deg):
-    logits = forward(params, cfg, dec, x, kernels, inv_deg)
+def _loss(params, cfg, dec, x, labels, node_mask, plan, inv_deg):
+    logits = forward(params, cfg, dec, x, plan, inv_deg)
     logp = jax.nn.log_softmax(logits, axis=-1)
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
     nll = jnp.where(node_mask, nll, 0.0)
@@ -109,11 +121,12 @@ def _loss(params, cfg, dec, x, labels, node_mask, kernels, inv_deg):
 
 
 def make_train_step(cfg: GNNConfig, dec, kernels, inv_deg):
-    """SGD-with-Adam step over the full graph; jitted once per kernel pair."""
+    """SGD-with-Adam step over the full graph; jitted once per KernelPlan."""
+    plan = _as_plan(dec, kernels, cfg.n_layers)
 
     def step(params, opt, x, labels, node_mask):
         loss, grads = jax.value_and_grad(_loss)(
-            params, cfg, dec, x, labels, node_mask, kernels, inv_deg)
+            params, cfg, dec, x, labels, node_mask, plan, inv_deg)
         new_params, new_opt = _adam_update(params, grads, opt, cfg.lr)
         return new_params, new_opt, loss
 
@@ -142,10 +155,39 @@ def _adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8):
 class TrainResult:
     losses: list
     accuracy: float
-    kernels: tuple
+    kernels: list          # per-layer tuples (KernelPlan rows)
     probe_times: dict
     step_seconds: float
     preprocess_seconds: float
+    plan: Any = None       # the full KernelPlan
+
+
+def select_plan(dec: dec_mod.Decomposed, cfg: GNNConfig,
+                widths: list[int], dtype=jnp.float32
+                ) -> tuple[KernelPlan, dict]:
+    """Commit a KernelPlan with the configured selector mode.  ``dtype``
+    is the aggregation dtype — feedback probes must time the kernels that
+    will actually run."""
+    probe_times: dict = {}
+    if cfg.selector == "fixed":
+        plan = KernelPlan.make(dec, tuple(cfg.fixed_kernels),
+                               n_layers=len(widths))
+    elif cfg.selector == "cost_model":
+        hw = sel_mod.default_hw()
+        plan = KernelPlan.make(
+            dec, [sel_mod.select_by_cost_model(dec, w, dtype, hw=hw)
+                  for w in widths])
+    elif cfg.selector == "feedback":
+        # paper default: probe every registry candidate during warmup
+        sel = sel_mod.AdaptiveSelector(dec, warmup_iters=cfg.warmup_iters)
+        for w in sorted(set(widths)):
+            probe_x = jnp.ones((dec.n_pad, w), dtype)
+            res = sel.probe(probe_x, iters=cfg.warmup_iters)
+            probe_times.update({k + (w,): v for k, v in res.times.items()})
+        plan = KernelPlan.make(dec, [sel.choice(w) for w in widths])
+    else:
+        raise ValueError(f"unknown selector {cfg.selector!r}")
+    return plan, probe_times
 
 
 def train(graph: graph_mod.Graph, cfg: GNNConfig, steps: int = 50,
@@ -172,24 +214,10 @@ def train(graph: graph_mod.Graph, cfg: GNNConfig, steps: int = 50,
     opt = _adam_init(params)
 
     # --- kernel selection (per layer: aggregation width differs by layer)
-    probe_times: dict = {}
     widths = agg_widths(cfg, x.shape[-1], graph.n_classes)
-    if cfg.selector == "fixed":
-        kernels = [cfg.fixed_kernels] * cfg.n_layers
-    elif cfg.selector == "cost_model":
-        hw = (sel_mod.CPU_HW if jax.default_backend() == "cpu"
-              else sel_mod.HwModel())
-        kernels = [sel_mod.select_by_cost_model(dec, w, hw=hw)
-                   for w in widths]
-    else:  # feedback (paper default): probe during first iterations
-        sel = sel_mod.AdaptiveSelector(dec, warmup_iters=cfg.warmup_iters)
-        for w in sorted(set(widths)):
-            probe_x = jnp.ones((dec.n_pad, w), x.dtype)
-            res = sel.probe(probe_x, iters=cfg.warmup_iters)
-            probe_times.update({k + (w,): v for k, v in res.times.items()})
-        kernels = [sel.choice(w) for w in widths]
+    plan, probe_times = select_plan(dec, cfg, widths, dtype=x.dtype)
 
-    step_fn = make_train_step(cfg, dec, kernels, inv_deg)
+    step_fn = make_train_step(cfg, dec, plan, inv_deg)
 
     losses = []
     t_step0 = None
@@ -199,15 +227,15 @@ def train(graph: graph_mod.Graph, cfg: GNNConfig, steps: int = 50,
         params, opt, loss = step_fn(params, opt, x, labels_r, node_mask)
         losses.append(float(loss))
         if verbose and i % 10 == 0:
-            print(f"step {i:4d} loss {float(loss):.4f} kernels={kernels}")
+            print(f"step {i:4d} loss {float(loss):.4f} plan={plan.layers}")
     jax.block_until_ready(params)
     step_s = (time.perf_counter() - t_step0) / max(steps - 1, 1) if t_step0 else 0.0
 
-    logits = forward(params, cfg, dec, x, kernels, inv_deg)
+    logits = forward(params, cfg, dec, x, plan, inv_deg)
     pred = jnp.argmax(logits, -1)
     acc = float(jnp.where(node_mask, pred == labels_r, False).sum()
                 / node_mask.sum())
-    kernels = [tuple(k) for k in kernels]
-    return TrainResult(losses=losses, accuracy=acc, kernels=kernels,
+    return TrainResult(losses=losses, accuracy=acc,
+                       kernels=[tuple(k) for k in plan.layers],
                        probe_times=probe_times, step_seconds=step_s,
-                       preprocess_seconds=t_pre)
+                       preprocess_seconds=t_pre, plan=plan)

@@ -1,6 +1,7 @@
 """Adaptive kernel selector (paper §3.3).
 
-Two modes:
+Two modes, both enumerating candidates from the kernel registry per
+subgraph (intra tier + every inter density bucket):
 
 * ``feedback`` (paper-faithful): during the first few training iterations,
   time every candidate kernel on the *actual* decomposed input, then commit
@@ -11,12 +12,14 @@ Two modes:
 
 * ``cost_model`` (TPU adaptation, beyond-paper): an analytic two-term
   roofline estimate (compute term = FLOPs/peak, memory term = bytes/bw) per
-  candidate.  Used when wall-clock probing is impossible -- inside a traced
-  computation, or during the multi-pod dry-run where kernels are only
-  lowered, never run.  The model's constants can be calibrated from feedback
-  probes (``calibrate``), closing the loop between the two modes.
+  candidate, provided by each kernel's registry ``cost`` fn.  Used when
+  wall-clock probing is impossible -- inside a traced computation, or during
+  the multi-pod dry-run where kernels are only lowered, never run.  The
+  model's constants can be calibrated from feedback probes (``calibrate``),
+  closing the loop between the two modes.
 
-The selector returns *names*; dispatch lives in core/adaptgear.py.
+The selector returns per-subgraph kernel-name tuples (one KernelPlan layer);
+dispatch lives in core/adaptgear.py.
 """
 from __future__ import annotations
 
@@ -26,8 +29,8 @@ from dataclasses import dataclass, field, replace
 import jax
 import numpy as np
 
-from repro.core.decompose import Decomposed
-from repro.kernels import ops
+from repro.core.decompose import Decomposed, Subgraph
+from repro.kernels.registry import REGISTRY
 
 
 @dataclass(frozen=True)
@@ -54,108 +57,74 @@ CPU_HW = HwModel(name="cpu_interpret", peak_flops=5e10, hbm_bw=2e10,
                  launch_overhead_s=5e-5)
 
 
-def _bytes_el(dtype) -> int:
-    return np.dtype(dtype).itemsize
+def default_hw() -> HwModel:
+    return CPU_HW if jax.default_backend() == "cpu" else HwModel()
 
 
-def candidate_cost(dec: Decomposed, which: str, kernel: str, feat_dim: int,
+def candidate_cost(sub: Subgraph, kernel: str, feat_dim: int,
                    dtype=np.float32, hw: HwModel = HwModel()) -> float:
-    """Analytic seconds estimate for one (subgraph, kernel) candidate."""
-    be = _bytes_el(dtype)
-    F = feat_dim
-    n = dec.n_pad
-    B = dec.block_size
-    s = dec.stats
-    if which == "intra":
-        nnz = s["intra_edges"]
-        if kernel == "block_diag":
-            nb = n // B
-            flops = 2.0 * nb * B * B * F
-            bytes_ = nb * B * B * be + 2.0 * n * F * be
-            t = max(flops / (hw.peak_flops * hw.mxu_eff(B)), bytes_ / hw.hbm_bw)
-            return t + hw.launch_overhead_s
-        if kernel == "ell":
-            K = dec.intra_ell.max_deg
-            flops = 2.0 * n * K * F
-            bytes_ = n * K * (F * be + 4) + n * F * be
-            return max(flops / hw.peak_flops,
-                       bytes_ / (hw.hbm_bw * hw.gather_eff)) + hw.launch_overhead_s
-        if kernel == "coo":
-            flops = 2.0 * nnz * F
-            bytes_ = nnz * (2 * F * be + 8) + n * F * be
-            return max(flops / hw.peak_flops,
-                       bytes_ / (hw.hbm_bw * hw.scatter_eff)) + hw.launch_overhead_s
-    else:
-        nnz = s["inter_edges"]
-        if kernel == "bell":
-            bl = dec.inter_bell
-            nblk = bl.n_brow * bl.max_blocks   # kernel executes padding too
-            flops = 2.0 * nblk * B * B * F
-            bytes_ = nblk * (B * B * be + B * F * be) + n * F * be
-            t = max(flops / (hw.peak_flops * hw.mxu_eff(B)), bytes_ / hw.hbm_bw)
-            return t + hw.launch_overhead_s
-        if kernel == "ell":
-            K = dec.inter_ell.max_deg
-            flops = 2.0 * n * K * F
-            bytes_ = n * K * (F * be + 4) + n * F * be
-            return max(flops / hw.peak_flops,
-                       bytes_ / (hw.hbm_bw * hw.gather_eff)) + hw.launch_overhead_s
-        if kernel == "coo":
-            flops = 2.0 * nnz * F
-            bytes_ = nnz * (2 * F * be + 8) + n * F * be
-            return max(flops / hw.peak_flops,
-                       bytes_ / (hw.hbm_bw * hw.scatter_eff)) + hw.launch_overhead_s
-    raise ValueError((which, kernel))
+    """Analytic seconds estimate for one (subgraph, kernel) candidate,
+    delegated to the kernel's registered cost fn."""
+    return REGISTRY.get(kernel).cost(sub, feat_dim, dtype, hw)
+
+
+def select_for_subgraph(sub: Subgraph, feat_dim: int, dtype=np.float32,
+                        hw: HwModel = HwModel()) -> str:
+    specs = REGISTRY.candidates_for(sub)
+    if not specs:
+        raise ValueError(f"no kernel candidates for subgraph {sub.name!r}")
+    return min(specs, key=lambda s: s.cost(sub, feat_dim, dtype, hw)).name
 
 
 def select_by_cost_model(dec: Decomposed, feat_dim: int, dtype=np.float32,
-                         hw: HwModel = HwModel()) -> tuple[str, str]:
-    intra = min(ops.KERNELS_INTRA,
-                key=lambda k: candidate_cost(dec, "intra", k, feat_dim, dtype, hw))
-    inter = min(ops.KERNELS_INTER,
-                key=lambda k: candidate_cost(dec, "inter", k, feat_dim, dtype, hw))
-    return intra, inter
+                         hw: HwModel = HwModel()) -> tuple[str, ...]:
+    """One KernelPlan layer: the cost-argmin kernel per subgraph."""
+    return tuple(select_for_subgraph(s, feat_dim, dtype, hw)
+                 for s in dec.subgraphs)
 
 
 @dataclass
 class ProbeResult:
-    times: dict            # (which, kernel) -> median seconds
-    choice: tuple[str, str]
+    times: dict            # (subgraph name, kernel) -> median seconds
+    choice: tuple          # kernel name per subgraph
 
 
 class AdaptiveSelector:
     """Feedback-driven selector (paper §3.3).
 
     ``observe()`` is fed per-candidate wall times collected during the first
-    training iterations; ``choice()`` commits to the argmin.  ``probe()`` is
-    a convenience that measures all candidates immediately (used by
-    benchmarks; the training loop uses the iteration-interleaved variant in
-    core/gnn.py to match the paper's monitor design).
+    training iterations; ``choice()`` commits to the argmin per subgraph.
+    ``probe()`` is a convenience that measures all candidates immediately
+    (used by benchmarks; the training loop uses the iteration-interleaved
+    variant in core/gnn.py to match the paper's monitor design).
     """
 
     def __init__(self, dec: Decomposed, warmup_iters: int = 3):
         self.dec = dec
         self.warmup_iters = warmup_iters
-        # keyed (which, kernel, feat_width): GNN layers aggregate at
+        # keyed (subgraph, kernel, feat_width): GNN layers aggregate at
         # different widths (GIN's first layer at the raw feature width, GCN
         # at the hidden width), and the optimal kernel is width-dependent —
         # a beyond-paper refinement of the feedback selector.
         self._times: dict[tuple[str, str, int], list[float]] = {}
-        self._committed: dict[int, tuple[str, str]] = {}
+        self._committed: dict[int, tuple] = {}
 
-    def observe(self, which: str, kernel: str, seconds: float,
+    def observe(self, sub_name: str, kernel: str, seconds: float,
                 width: int = 0) -> None:
-        self._times.setdefault((which, kernel, width), []).append(seconds)
+        self._times.setdefault((sub_name, kernel, width), []).append(seconds)
 
     def _widths(self) -> set:
         return {w for (_, _, w) in self._times}
 
+    def _need(self, width: int) -> list[tuple[str, str, int]]:
+        return [(s.name, spec.name, width)
+                for s in self.dec.subgraphs
+                for spec in REGISTRY.candidates_for(s)]
+
     def ready(self, width: int = 0) -> bool:
         width = self._nearest_width(width)
-        need = [("intra", k, width) for k in ops.KERNELS_INTRA] + \
-               [("inter", k, width) for k in ops.KERNELS_INTER]
         return all(len(self._times.get(key, [])) >= self.warmup_iters
-                   for key in need)
+                   for key in self._need(width))
 
     def _nearest_width(self, width: int) -> int:
         ws = self._widths()
@@ -163,37 +132,36 @@ class AdaptiveSelector:
             return width
         return min(ws, key=lambda w: abs(w - width))
 
-    def choice(self, feat_dim: int | None = None) -> tuple[str, str]:
+    def choice(self, feat_dim: int | None = None) -> tuple:
         w = self._nearest_width(feat_dim or 0)
         if w in self._committed:
             return self._committed[w]
         if self._times and self.ready(w):
             med = {k: float(np.median(v)) for k, v in self._times.items()}
-            intra = min(ops.KERNELS_INTRA, key=lambda k: med[("intra", k, w)])
-            inter = min(ops.KERNELS_INTER, key=lambda k: med[("inter", k, w)])
-            self._committed[w] = (intra, inter)
+            self._committed[w] = tuple(
+                min(REGISTRY.candidates_for(s),
+                    key=lambda spec: med[(s.name, spec.name, w)]).name
+                for s in self.dec.subgraphs)
             return self._committed[w]
         # not enough observations yet: fall back to the cost model
         assert feat_dim is not None, "need feat_dim for cost-model fallback"
-        hw = CPU_HW if jax.default_backend() == "cpu" else HwModel()
-        return select_by_cost_model(self.dec, feat_dim, hw=hw)
+        return select_by_cost_model(self.dec, feat_dim, hw=default_hw())
 
     def probe(self, x: jax.Array, iters: int = 3) -> ProbeResult:
         from repro.core import adaptgear  # local import to avoid cycle
         width = x.shape[-1]
-        for which, kernels in (("intra", ops.KERNELS_INTRA),
-                               ("inter", ops.KERNELS_INTER)):
-            for kern in kernels:
-                fn = jax.jit(lambda x, w=which, k=kern:
-                             adaptgear.aggregate_one(self.dec, x, w, k))
+        for sub in self.dec.subgraphs:
+            for spec in REGISTRY.candidates_for(sub):
+                fn = jax.jit(lambda x, s=sub, k=spec.name:
+                             adaptgear.aggregate_sub(s, x, k))
                 fn(x).block_until_ready()      # compile outside the timing
                 for _ in range(iters):
                     t0 = time.perf_counter()
                     fn(x).block_until_ready()
-                    self.observe(which, kern, time.perf_counter() - t0,
-                                 width)
-        med = {(wh, k): float(np.median(v))
-               for (wh, k, w), v in self._times.items() if w == width}
+                    self.observe(sub.name, spec.name,
+                                 time.perf_counter() - t0, width)
+        med = {(s, k): float(np.median(v))
+               for (s, k, w), v in self._times.items() if w == width}
         return ProbeResult(times=med, choice=self.choice(width))
 
     def calibrate_cost_model(self, feat_dim: int,
@@ -201,12 +169,13 @@ class AdaptiveSelector:
         """Fit a global time-scale from probes so the analytic model's
         *absolute* numbers match this machine (its *ranking* is what the
         dry-run uses)."""
-        hw = hw or (CPU_HW if jax.default_backend() == "cpu" else HwModel())
+        hw = hw or default_hw()
         if not self._times:
             return hw
+        by_name = {s.name: s for s in self.dec.subgraphs}
         ratios = []
-        for (which, kern, w), ts in self._times.items():
-            est = candidate_cost(self.dec, which, kern, w or feat_dim, hw=hw)
+        for (sub_name, kern, w), ts in self._times.items():
+            est = candidate_cost(by_name[sub_name], kern, w or feat_dim, hw=hw)
             ratios.append(np.median(ts) / max(est, 1e-12))
         scale = float(np.median(ratios))
         return replace(hw, peak_flops=hw.peak_flops / scale,

@@ -118,6 +118,5 @@ def ell_matvec(ell: formats.ELL, x: jax.Array) -> jax.Array:
 def coo_matvec(coo: formats.COO, x: jax.Array) -> jax.Array:
     return ref.coo_spmm(coo.rows, coo.cols, coo.vals, x, coo.n_rows)
 
-
-KERNELS_INTRA = ("block_diag", "ell", "coo")
-KERNELS_INTER = ("bell", "ell", "coo")
+# Candidate enumeration lives in repro.kernels.registry (KernelSpec.kinds);
+# this module only provides the matvec implementations the registry binds.

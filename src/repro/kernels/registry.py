@@ -1,0 +1,191 @@
+"""Kernel registry: the single place an aggregation kernel is defined.
+
+Every sparse/dense aggregation kernel registers one :class:`KernelSpec`
+bundling everything the rest of the system needs to use it:
+
+  name    -- dispatch key (stored in KernelPlans, printed by benchmarks)
+  kinds   -- which subgraph kinds the kernel applies to: ``"diag"`` (the
+             block-diagonal intra-community subgraph) and/or ``"offdiag"``
+             (inter-community density buckets)
+  build   -- host-side format materializer run once during decomposition:
+             ``build(coo, coo_t, block_size) -> payload``.  The payload is
+             an arbitrary pytree (a single format container, or a tuple such
+             as blocked-ELL forward + transpose for the VJP).  ``coo_t`` is
+             only constructed (and non-None) when ``needs_transpose`` is set.
+  matvec  -- device function ``matvec(payload, x) -> A @ x``
+  cost    -- analytic roofline estimate ``cost(sub, feat_dim, dtype, hw) ->
+             seconds`` consumed by the cost-model selector; ``hw`` is any
+             object with ``peak_flops / hbm_bw / launch_overhead_s /
+             gather_eff / scatter_eff / mxu_eff(B)`` (see
+             core/selector.HwModel).
+
+Adding a kernel (CSR, sell-C-sigma, fused transform+aggregate, ...) is one
+``register()`` call in one file; decomposition, both selector modes,
+aggregation dispatch, and the benchmarks pick it up automatically.
+Registration order is meaningful: ``candidates()`` preserves it, and the
+selectors break cost ties in favor of earlier registrations.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.core import formats
+from repro.kernels import ops
+
+DIAG = "diag"          # intra-community subgraph (block-diagonal)
+OFFDIAG = "offdiag"    # inter-community subgraph / density bucket
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    name: str
+    kinds: frozenset
+    build: Callable[[formats.COO, formats.COO, int], Any]
+    matvec: Callable[[Any, jax.Array], jax.Array]
+    cost: Callable[[Any, int, Any, Any], float]
+    needs_transpose: bool = False   # build consumes coo_t (for the VJP)
+    doc: str = ""
+
+    def applies_to(self, kind: str) -> bool:
+        return kind in self.kinds
+
+
+class KernelRegistry:
+    """Ordered name -> KernelSpec mapping with per-subgraph-kind views."""
+
+    def __init__(self):
+        self._specs: dict[str, KernelSpec] = {}
+
+    def register(self, spec: KernelSpec) -> KernelSpec:
+        if spec.name in self._specs:
+            raise ValueError(f"kernel {spec.name!r} already registered")
+        self._specs[spec.name] = spec
+        return spec
+
+    def get(self, name: str) -> KernelSpec:
+        try:
+            return self._specs[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown kernel {name!r}; registered: {self.names()}"
+            ) from None
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(self._specs)
+
+    def candidates(self, kind: str) -> tuple[KernelSpec, ...]:
+        """Specs applicable to a subgraph kind, in registration order."""
+        return tuple(s for s in self._specs.values() if s.applies_to(kind))
+
+    def candidates_for(self, sub) -> tuple[KernelSpec, ...]:
+        """Specs whose format payload is materialized on this subgraph."""
+        return tuple(s for s in self.candidates(sub.kind)
+                     if s.name in sub.formats)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._specs
+
+    def __iter__(self):
+        return iter(self._specs.values())
+
+
+REGISTRY = KernelRegistry()
+
+
+def payload_nbytes(payload) -> int:
+    """Device bytes of a format payload (any pytree of arrays)."""
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(payload)
+               if hasattr(a, "size"))
+
+
+def _bytes_el(dtype) -> int:
+    return np.dtype(dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Built-in kernels.  Cost formulae are the two-term roofline estimates that
+# used to live inline in core/selector.candidate_cost (paper §3.3's analytic
+# alternative to feedback probing).
+# ---------------------------------------------------------------------------
+
+def _block_diag_cost(sub, feat_dim, dtype, hw) -> float:
+    be = _bytes_el(dtype)
+    B = sub.block_size
+    nb = sub.n_rows // B
+    flops = 2.0 * nb * B * B * feat_dim
+    bytes_ = nb * B * B * be + 2.0 * sub.n_rows * feat_dim * be
+    t = max(flops / (hw.peak_flops * hw.mxu_eff(B)), bytes_ / hw.hbm_bw)
+    return t + hw.launch_overhead_s
+
+
+def _bell_cost(sub, feat_dim, dtype, hw) -> float:
+    be = _bytes_el(dtype)
+    B = sub.block_size
+    bl = sub.formats["bell"][0]
+    nblk = bl.n_brow * bl.max_blocks       # kernel executes padding too
+    flops = 2.0 * nblk * B * B * feat_dim
+    bytes_ = nblk * (B * B * be + B * feat_dim * be) + sub.n_rows * feat_dim * be
+    t = max(flops / (hw.peak_flops * hw.mxu_eff(B)), bytes_ / hw.hbm_bw)
+    return t + hw.launch_overhead_s
+
+
+def _ell_cost(sub, feat_dim, dtype, hw) -> float:
+    be = _bytes_el(dtype)
+    n = sub.n_rows
+    K = sub.formats["ell"].max_deg
+    flops = 2.0 * n * K * feat_dim
+    bytes_ = n * K * (feat_dim * be + 4) + n * feat_dim * be
+    return max(flops / hw.peak_flops,
+               bytes_ / (hw.hbm_bw * hw.gather_eff)) + hw.launch_overhead_s
+
+
+def _coo_cost(sub, feat_dim, dtype, hw) -> float:
+    be = _bytes_el(dtype)
+    nnz = sub.stats["nnz"]
+    flops = 2.0 * nnz * feat_dim
+    bytes_ = nnz * (2 * feat_dim * be + 8) + sub.n_rows * feat_dim * be
+    return max(flops / hw.peak_flops,
+               bytes_ / (hw.hbm_bw * hw.scatter_eff)) + hw.launch_overhead_s
+
+
+REGISTRY.register(KernelSpec(
+    name="block_diag",
+    kinds=frozenset({DIAG}),
+    build=lambda coo, coo_t, B: formats.coo_to_blockdiag(coo, B),
+    matvec=lambda bd, x: ops.block_diag_matvec(bd.blocks, x),
+    cost=_block_diag_cost,
+    doc="dense (B,B) diagonal blocks on the MXU (paper's dense kernel)",
+))
+
+REGISTRY.register(KernelSpec(
+    name="bell",
+    kinds=frozenset({OFFDIAG}),
+    build=lambda coo, coo_t, B: (formats.coo_to_bell(coo, B),
+                                 formats.coo_to_bell(coo_t, B)),
+    matvec=lambda p, x: ops.bell_matvec(p[0], p[1], x),
+    cost=_bell_cost,
+    needs_transpose=True,
+    doc="blocked-ELL over (B,B) tiles; transpose materialized for the VJP",
+))
+
+REGISTRY.register(KernelSpec(
+    name="ell",
+    kinds=frozenset({DIAG, OFFDIAG}),
+    build=lambda coo, coo_t, B: formats.coo_to_ell(coo),
+    matvec=lambda ell, x: ops.ell_matvec(ell, x),
+    cost=_ell_cost,
+    doc="padded-neighbor gather (vertex-parallel CSR analogue)",
+))
+
+REGISTRY.register(KernelSpec(
+    name="coo",
+    kinds=frozenset({DIAG, OFFDIAG}),
+    build=lambda coo, coo_t, B: coo,
+    matvec=lambda coo, x: ops.coo_matvec(coo, x),
+    cost=_coo_cost,
+    doc="edge-parallel segment-sum (scatter-add analogue)",
+))

@@ -149,6 +149,8 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose: bool = True,
         t_compile = time.perf_counter() - t0 - t_lower
 
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # newer jax: one entry per computation
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     coll = collective_bytes(compiled.as_text())
     n_dev = int(np.prod(list(mesh.shape.values())))

@@ -139,7 +139,7 @@ def test_rope_preserves_norm(rng):
                                rtol=1e-4)
 
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 
 @settings(max_examples=15, deadline=None)

@@ -1,14 +1,15 @@
 """Decomposition invariants (paper §3.3): the intra/inter split is a
 partition of the edges; intra edges live on diagonal blocks; the reorder is
-a permutation; aggregate(decomposed) == aggregate(original)."""
+a permutation; aggregate(decomposed) == aggregate(original) — for any
+number of inter density buckets."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import adaptgear, decompose
 from repro.graphs import graph as G
-from repro.kernels import ops
+from repro.kernels.registry import REGISTRY
 
 
 @pytest.fixture
@@ -25,29 +26,46 @@ def test_perm_is_permutation(g, method):
     assert np.array_equal(perm[inv], np.arange(g.n))
 
 
-def test_edge_partition_complete(g):
-    dec = decompose.decompose(g, comm_size=16, method="bfs")
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_edge_partition_complete(g, k):
+    dec = decompose.decompose(g, comm_size=16, method="bfs", inter_buckets=k)
     s = dec.stats
     assert s["intra_edges"] + s["inter_edges"] == g.n_edges
-    # intra edges on the diagonal blocks
+    # every subgraph's nnz sums back to the edge count
+    assert sum(sub.stats["nnz"] for sub in dec.subgraphs) == g.n_edges
     B = dec.block_size
-    r = np.asarray(dec.intra_coo.rows)
-    c = np.asarray(dec.intra_coo.cols)
+    # intra edges on the diagonal blocks
+    r = np.asarray(dec.intra.formats["coo"].rows)
+    c = np.asarray(dec.intra.formats["coo"].cols)
     assert np.all(r // B == c // B)
-    # inter edges strictly off the diagonal blocks
-    r = np.asarray(dec.inter_coo.rows)
-    c = np.asarray(dec.inter_coo.cols)
-    assert np.all(r // B != c // B)
+    # inter edges strictly off the diagonal blocks, in every bucket
+    for sub in dec.inters:
+        r = np.asarray(sub.formats["coo"].rows)
+        c = np.asarray(sub.formats["coo"].cols)
+        assert np.all(r // B != c // B)
+
+
+def test_inter_buckets_split_by_block_row_density(g):
+    dec = decompose.decompose(g, comm_size=16, method="bfs", inter_buckets=2)
+    assert len(dec.inters) == 2
+    B = dec.block_size
+
+    def mean_row_nnz(sub):
+        rows = np.asarray(sub.formats["coo"].rows)
+        nnz = np.bincount(rows // B, minlength=dec.n_pad // B)
+        return nnz[nnz > 0].mean()
+
+    # buckets are ordered sparsest -> densest by block-row occupancy
+    assert mean_row_nnz(dec.inters[0]) < mean_row_nnz(dec.inters[1])
 
 
 def test_aggregate_equals_undecomposed(g, rng):
     dec = decompose.decompose(g, comm_size=16, method="bfs")
     x = rng.standard_normal((g.n, 11)).astype(np.float32)
     xr = adaptgear.to_reordered(dec, jnp.asarray(x))
-    y = adaptgear.aggregate(dec, xr, "block_diag", "bell")
+    y = adaptgear.aggregate(dec, xr, ("block_diag", "bell"))
     y = adaptgear.from_reordered(dec, y)
     # direct segment-sum on the original (unreordered) graph
-    import jax
     msgs = x[g.senders]
     y_ref = np.zeros((g.n, 11), np.float32)
     np.add.at(y_ref, g.receivers, msgs)
@@ -65,6 +83,20 @@ def test_reorder_improves_intra_density():
     assert frac_yes > frac_no, (frac_yes, frac_no)
 
 
+def test_metis_substitution_warns_and_records(g):
+    decompose._warned_substitutions.clear()
+    with pytest.warns(UserWarning, match="metis"):
+        dec = decompose.decompose(g, comm_size=16, method="metis")
+    assert dec.stats["method"] == "metis"
+    assert dec.stats["effective_method"] == "louvain"
+    # one-time: a second call stays silent
+    import warnings as _w
+    with _w.catch_warnings(record=True) as caught:
+        _w.simplefilter("always")
+        decompose.decompose(g, comm_size=16, method="metis")
+    assert not [w for w in caught if "metis" in str(w.message)]
+
+
 @settings(max_examples=15, deadline=None)
 @given(n=st.integers(32, 200), e=st.integers(32, 600),
        b=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2**31 - 1))
@@ -77,17 +109,18 @@ def test_property_decompose_preserves_spmm(n, e, b, seed):
     src, dst = src[keep], dst[keep]
     g = G.Graph(n, src, dst, np.zeros((n, 3), np.float32),
                 np.zeros(n, np.int32), 2)
-    dec = decompose.decompose(g, comm_size=b, method="bfs")
+    dec = decompose.decompose(g, comm_size=b, method="bfs",
+                              inter_buckets=int(seed) % 3 + 1)
     x = rng.standard_normal((n, 3)).astype(np.float32)
     xr = adaptgear.to_reordered(dec, jnp.asarray(x))
-    for ik in ops.KERNELS_INTRA:
-        for ek in ops.KERNELS_INTER:
+    for ik in REGISTRY.candidates("diag"):
+        for ek in REGISTRY.candidates("offdiag"):
             y = adaptgear.from_reordered(
-                dec, adaptgear.aggregate(dec, xr, ik, ek))
+                dec, adaptgear.aggregate(dec, xr, (ik.name, ek.name)))
             y_ref = np.zeros((n, 3), np.float32)
             np.add.at(y_ref, dst, x[src])
             np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-3,
-                                       rtol=1e-3, err_msg=f"{ik}/{ek}")
+                                       rtol=1e-3, err_msg=f"{ik.name}/{ek.name}")
 
 
 def test_aggregate_max_and_mean(g, rng):
@@ -115,6 +148,6 @@ def test_aggregate_max_and_mean(g, rng):
     mean_ref = sum_ref * inv[:, None]
     ym = adaptgear.from_reordered(
         dec, adaptgear.aggregate_mean(dec, xr, jnp.asarray(inv_r),
-                                      "block_diag", "bell"))
+                                      ("block_diag", "bell")))
     np.testing.assert_allclose(np.asarray(ym), mean_ref, atol=1e-4,
                                rtol=1e-4)

@@ -5,7 +5,7 @@ import pytest
 
 from repro.core import adaptgear, decompose, gnn
 from repro.graphs import graph as G
-from repro.kernels import ops
+from repro.kernels.registry import REGISTRY
 
 
 @pytest.fixture(scope="module")
@@ -27,12 +27,12 @@ def test_all_kernel_pairs_same_loss_curve(citeseer):
     """AdaptGear invariant: the kernel choice changes *speed*, never the
     math — every (intra, inter) pair must produce the same training curve."""
     curves = {}
-    for ik in ops.KERNELS_INTRA:
-        for ek in ops.KERNELS_INTER:
+    for ik in REGISTRY.candidates("diag"):
+        for ek in REGISTRY.candidates("offdiag"):
             cfg = gnn.GNNConfig(model="gcn", selector="fixed",
-                                fixed_kernels=(ik, ek), hidden=8)
+                                fixed_kernels=(ik.name, ek.name), hidden=8)
             res = gnn.train(citeseer, cfg, steps=5)
-            curves[(ik, ek)] = res.losses
+            curves[(ik.name, ek.name)] = res.losses
     base = curves[("block_diag", "bell")]
     for k, c in curves.items():
         # different kernels sum edges in different orders; the fp drift is
@@ -46,10 +46,13 @@ def test_feedback_selector_runs(citeseer):
     cfg = gnn.GNNConfig(model="gcn", selector="feedback", warmup_iters=1)
     res = gnn.train(citeseer, cfg, steps=5)
     assert len(res.kernels) == cfg.n_layers   # per-layer selection
-    for ik, ek in res.kernels:
-        assert ik in ops.KERNELS_INTRA
-        assert ek in ops.KERNELS_INTER
-    n_cand = len(ops.KERNELS_INTRA) + len(ops.KERNELS_INTER)
+    dec = gnn.prepare(citeseer, cfg)
+    n_cand = 0
+    for i, sub in enumerate(dec.subgraphs):
+        cands = [s.name for s in REGISTRY.candidates_for(sub)]
+        n_cand += len(cands)
+        for layer in res.kernels:
+            assert layer[i] in cands
     assert len(res.probe_times) >= n_cand
 
 
@@ -68,14 +71,11 @@ def test_preprocessing_overhead_small(citeseer):
 
 def test_memory_overhead_topology(citeseer):
     """Paper Fig. 12: subgraph topology storage is small vs features."""
-    import jax
+    from repro.kernels.registry import payload_nbytes
     dec = decompose.decompose(citeseer, comm_size=16, method="bfs")
-    topo_bytes = 0
-    for fmt in (dec.intra_bd, dec.intra_coo, dec.intra_ell, dec.inter_bell,
-                dec.inter_bell_t, dec.inter_coo, dec.inter_ell):
-        topo_bytes += sum(a.size * a.dtype.itemsize
-                          for a in jax.tree.leaves(fmt)
-                          if hasattr(a, "size"))
+    topo_bytes = sum(payload_nbytes(payload)
+                     for sub in dec.subgraphs
+                     for payload in sub.formats.values())
     feat_bytes = citeseer.features.size * 4
     # all candidate formats together stay bounded; the *selected* pair alone
     # is what the paper's 4.47% number refers to (see benchmarks)
