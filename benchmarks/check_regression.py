@@ -1,0 +1,97 @@
+"""Perf-regression gate over the quick-bench machine-readable output.
+
+Compares every row of ``BENCH_*.json`` in a directory against the committed
+``benchmarks/baseline.json`` and exits non-zero when any row's
+``us_per_call`` regresses beyond the threshold (default +25%).  Rows absent
+from the baseline (new benchmarks) pass; zero/NaN rows (derived-only
+benchmarks) and sub-50us rows (pure launch noise) are skipped.
+
+  PYTHONPATH=src python -m benchmarks.run --quick --json bench-out
+  PYTHONPATH=src python -m benchmarks.check_regression bench-out
+  PYTHONPATH=src python -m benchmarks.check_regression bench-out --write
+
+``--write`` regenerates the baseline from the directory instead of gating
+(run on the reference machine, commit the result).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+MIN_US = 50.0
+
+
+def load_rows(bench_dir: str) -> dict:
+    """{"<benchmark>/<row>": us_per_call} for every BENCH_*.json in dir."""
+    rows: dict[str, float] = {}
+    for path in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        with open(path) as f:
+            doc = json.load(f)
+        for r in doc.get("rows", []):
+            us = float(r.get("us_per_call", float("nan")))
+            rows[f"{doc['benchmark']}/{r['name']}"] = us
+    return rows
+
+
+def gate(current: dict, baseline: dict, threshold: float) -> list[str]:
+    failures = []
+    for key, base_us in sorted(baseline.get("rows", {}).items()):
+        us = current.get(key)
+        if us is None:
+            continue                      # benchmark renamed/removed: no gate
+        if not (math.isfinite(us) and math.isfinite(base_us)):
+            continue
+        if base_us < MIN_US or us < MIN_US:
+            continue
+        if us > threshold * base_us:
+            failures.append(
+                f"{key}: {us:.1f}us vs baseline {base_us:.1f}us "
+                f"(+{(us / base_us - 1) * 100:.0f}% > "
+                f"+{(threshold - 1) * 100:.0f}%)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_dir", help="directory holding BENCH_*.json")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="fail when us_per_call exceeds threshold x baseline")
+    ap.add_argument("--write", action="store_true",
+                    help="regenerate the baseline from bench_dir and exit")
+    args = ap.parse_args()
+
+    current = load_rows(args.bench_dir)
+    if args.write:
+        doc = dict(threshold=args.threshold,
+                   rows={k: round(v, 1) for k, v in sorted(current.items())
+                         if math.isfinite(v)})
+        with open(args.baseline, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"wrote {len(doc['rows'])} baseline rows to {args.baseline}")
+        return
+
+    if not os.path.exists(args.baseline):
+        print(f"no baseline at {args.baseline}; nothing to gate")
+        return
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = gate(current, baseline, args.threshold)
+    checked = len(set(current) & set(baseline.get("rows", {})))
+    if failures:
+        print(f"PERF REGRESSION ({len(failures)}/{checked} gated rows):")
+        for line in failures:
+            print(" ", line)
+        sys.exit(1)
+    print(f"perf gate OK ({checked} rows within "
+          f"+{(args.threshold - 1) * 100:.0f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Fused transform+aggregate vs the unfused two-pass GCN layer.
+
+Rows measure one GCN layer Y = A (X W) + b on the block-diagonal-dominant
+synthetic graph (aligned MXU-scale communities, ring-structured inter
+edges): the fully-fused plan against the unfused Pallas pair with the
+standalone XLA transform, plus per-tier kernel rows isolating where the
+saved H round-trip lands.  The expanding layer width (fin < fout) is the
+regime fusion targets — the unfused path materializes the *wide* H.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit, emit
+from repro.core import adaptgear, decompose
+from repro.graphs import graph as G
+
+FUSED_PLAN = ("block_diag_fused", "bell_fused")
+UNFUSED_PLAN = ("block_diag", "bell")
+
+
+def run(n: int = 2048, e: int = 30000, fin: int = 64, fout: int = 512,
+        verbose: bool = True) -> list[dict]:
+    src, dst = G.aligned_community_graph(n, e, block=128, intra_frac=0.9,
+                                         seed=0)
+    g = G.Graph(n, src, dst, np.zeros((n, 4), np.float32),
+                np.zeros(n, np.int32), 2)
+    dec = decompose.decompose(g, comm_size=128, method="bfs", reorder=False,
+                              inter_buckets=1)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((dec.n_pad, fin)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((fin, fout)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(fout), jnp.float32)
+
+    layer = {
+        "unfused": jax.jit(lambda x, w, b: adaptgear.aggregate_transform(
+            dec, x, w, UNFUSED_PLAN, bias=b, acc=False)),
+        "fused": jax.jit(lambda x, w, b: adaptgear.aggregate_transform(
+            dec, x, w, FUSED_PLAN, bias=b)),
+    }
+    times = {k: timeit(fn, x, w, b, iters=3) for k, fn in layer.items()}
+    speedup = times["unfused"] / max(times["fused"], 1e-12)
+
+    # per-tier isolation: the unfused side is charged the transform it needs
+    tier = {
+        "intra_unfused": jax.jit(lambda x, w: adaptgear.aggregate_sub(
+            dec.intra, x @ w, "block_diag")),
+        "intra_fused": jax.jit(lambda x, w: adaptgear.aggregate_sub_fused(
+            dec.intra, x, w, "block_diag_fused")),
+        "inter_unfused": jax.jit(lambda x, w: adaptgear.aggregate_sub(
+            dec.inters[0], x @ w, "bell")),
+        "inter_fused": jax.jit(lambda x, w: adaptgear.aggregate_sub_fused(
+            dec.inters[0], x, w, "bell_fused")),
+    }
+    tier_times = {k: timeit(fn, x, w, iters=3) for k, fn in tier.items()}
+
+    rows = []
+    if verbose:
+        emit("fused_gcn_layer_unfused", times["unfused"] * 1e6,
+             f"n={n};fin={fin};fout={fout}")
+        emit("fused_gcn_layer_fused", times["fused"] * 1e6,
+             f"speedup_vs_unfused={speedup:.2f}x")
+        for k, t in tier_times.items():
+            emit(f"fused_{k}", t * 1e6, "")
+    rows.append(dict(n=n, fin=fin, fout=fout, speedup=speedup,
+                     **{k: v * 1e6 for k, v in times.items()},
+                     **{k: v * 1e6 for k, v in tier_times.items()}))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

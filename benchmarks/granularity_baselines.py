@@ -34,8 +34,9 @@ def pcgcn_style_aggregate(dec, x):
     mm = jax.jit(lambda a, b: a @ b)
     parts = [mm(blocks[i], xb[i]) for i in range(nb)]        # launch per block
     y = jnp.stack(parts).reshape(dec.n_pad, -1)
+    # per-bucket tiling: each bell payload carries its own block size
     row_call = jax.jit(lambda blk, idx, xx: jnp.einsum(
-        "kij,kjf->if", blk, xx.reshape(-1, B, xx.shape[-1])[idx]))
+        "kij,kjf->if", blk, xx.reshape(-1, blk.shape[-1], xx.shape[-1])[idx]))
     for sub in dec.inters:
         bell = sub.formats["bell"][0]
         y_rows = [row_call(bell.blocks[i], bell.col_idx[i], x)

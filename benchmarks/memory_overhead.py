@@ -13,9 +13,9 @@ DATASETS = ["cora", "citeseer", "pubmed", "proteins_full"]
 def selected_topology_bytes(dec, plan_layer) -> int:
     """Bytes of the format payloads the selected plan keeps on device
     (a kernel's payload already includes its VJP operand, e.g. the
-    blocked-ELL transpose)."""
-    from repro.kernels.registry import payload_nbytes
-    return sum(payload_nbytes(sub.formats[k])
+    blocked-ELL transpose; fused kernels alias their unfused payload)."""
+    from repro.kernels.registry import REGISTRY, payload_nbytes
+    return sum(payload_nbytes(sub.formats[REGISTRY.get(k).payload_key])
                for sub, k in zip(dec.subgraphs, plan_layer))
 
 

@@ -23,11 +23,16 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (ablation_o123, common, density_analysis,
-                            end_to_end, format_crossover,
+                            end_to_end, format_crossover, fused,
                             granularity_baselines, memory_overhead, overhead)
 
     scale = 0.04 if args.quick else 0.08
     jobs = {
+        "fused_transform_aggregate": lambda: fused.run(
+            n=1024 if args.quick else 2048,
+            e=12000 if args.quick else 30000,
+            fin=32 if args.quick else 64,
+            fout=256 if args.quick else 512),
         "fig2b_format_crossover": lambda: format_crossover.run(
             n=512 if args.quick else 1024),
         "fig4_density_analysis": lambda: density_analysis.run(

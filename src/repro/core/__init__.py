@@ -3,23 +3,43 @@
 Architecture (data flow, one arrow per module boundary):
 
   graphs.Graph
-      |  core.decompose.decompose(..., inter_buckets=k)
+      |  core.decompose.decompose(..., inter_buckets=k)   [k=0: autotuned]
       v
   Decomposed -- an ordered list of Subgraph density tiers: the intra
       |         (block-diagonal) tier plus k inter-community buckets split
       |         by block-row occupancy.  Each Subgraph eagerly materializes
       |         one format payload per applicable kernel, built by the
-      |         kernel registry (kernels.registry.REGISTRY).
+      |         kernel registry (kernels.registry.REGISTRY); builders see
+      |         the tier's density stats and pick per-bucket tiling (the
+      |         blocked-ELL block size / feature-tile cap).  Fused kernels
+      |         alias their unfused counterpart's payload — zero extra
+      |         device memory.
       |  core.selector (feedback probe | analytic cost model), candidates
-      |  enumerated from the registry per subgraph
+      |  enumerated from the registry per subgraph; on transform-first
+      |  layers (GCN) fused transform+aggregate kernels compete: the cost
+      |  model surcharges unfused candidates their share of the shared
+      |  H = X W pass, the feedback probe times it
       v
   core.plan.KernelPlan -- per-layer x per-subgraph kernel names
-      |  core.adaptgear.aggregate / core.gnn.forward / train_step
+      |  core.adaptgear.aggregate / aggregate_transform / core.gnn.forward
       v
-  Y = sum_s A_s @ X, each subgraph dispatched through its registered
-  kernel's matvec (Pallas MXU block kernels, XLA gather/segment paths).
+  Y = sum_s A_s @ X   (or A_s @ (X W) + b fused), each subgraph dispatched
+  through its registered kernel:
+    * unfused matvec      -- Pallas MXU block kernels, XLA gather/segment
+    * matvec_acc          -- accumulation mode: one output buffer threads
+                             through the subgraph list, Pallas kernels seed
+                             their VMEM scratch from it (no per-bucket
+                             partial tensors); enabled on TPU, where it
+                             saves HBM rather than costing interpret steps
+    * fused_matvec(_acc)  -- A_s @ (X W) in one pass: the weight stripe
+                             lives in VMEM and the transform product is
+                             consumed immediately; the custom VJP runs the
+                             same fused form over the materialized transpose
+                             payload for dX and a blocked dW reduction —
+                             no (n, F) intermediate in forward or backward
 
 Adding a kernel = one KernelSpec registration (name, kinds, format builder,
-matvec, cost fn); decomposition, both selectors, dispatch, and the
-benchmarks pick it up with no further edits.
+matvec / fused_matvec, cost fn) in one file — kernels/csr.py is the
+template; decomposition, both selectors, dispatch, and the benchmarks pick
+it up with no further edits.
 """

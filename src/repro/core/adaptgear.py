@@ -46,19 +46,93 @@ def from_reordered(dec: Decomposed, xr: jax.Array) -> jax.Array:
 def aggregate_sub(sub: Subgraph, x: jax.Array, kernel: str) -> jax.Array:
     """Aggregate over a single subgraph with an explicit registry kernel.
     x: (n_pad, F) in reordered space."""
-    return REGISTRY.get(kernel).matvec(sub.formats[kernel], x)
+    spec = REGISTRY.get(kernel)
+    if spec.fused:
+        raise ValueError(
+            f"kernel {kernel!r} is fused (needs the weight operand); "
+            "dispatch it through aggregate_sub_fused / aggregate_transform")
+    return spec.matvec(sub.formats[spec.payload_key], x)
+
+
+def aggregate_sub_fused(sub: Subgraph, x: jax.Array, w: jax.Array,
+                        kernel: str) -> jax.Array:
+    """A_s @ (x @ w) over a single subgraph with a fused registry kernel."""
+    spec = REGISTRY.get(kernel)
+    if not spec.fused:
+        raise ValueError(f"kernel {kernel!r} is not fused")
+    return spec.fused_matvec(sub.formats[spec.payload_key], x, w)
 
 
 def aggregate(dec: Decomposed, x: jax.Array,
-              kernels: Sequence[str] = DEFAULT_KERNELS) -> jax.Array:
+              kernels: Sequence[str] = DEFAULT_KERNELS, *,
+              acc: bool | None = None) -> jax.Array:
     """Y = A @ X via per-subgraph kernels (x reordered, (n_pad, F)).
 
     ``kernels`` is one name per subgraph, or the ``(intra, inter)`` pair
-    shorthand broadcast over inter buckets."""
+    shorthand broadcast over inter buckets.  With ``acc=True`` one output
+    buffer is threaded through the subgraph list: kernels exposing
+    ``matvec_acc`` seed their accumulator from it instead of zeros, so no
+    per-bucket partial (n_pad, F) tensors are materialized (kernels without
+    the hook fall back to the explicit add).  ``acc=None`` resolves by
+    backend, like :func:`aggregate_transform`: on by default on TPU (it
+    saves HBM), off in CPU interpret mode (the extra per-grid-step operand
+    costs more than the XLA adds it replaces)."""
+    if acc is None:
+        acc = jax.default_backend() == "tpu"
     names = plan_mod.normalize_layer(dec, kernels)
-    y = aggregate_sub(dec.subgraphs[0], x, names[0])
-    for sub, k in zip(dec.subgraphs[1:], names[1:]):
-        y = y + aggregate_sub(sub, x, k)
+    y = None
+    for sub, k in zip(dec.subgraphs, names):
+        spec = REGISTRY.get(k)
+        payload = sub.formats[spec.payload_key]
+        if y is None:
+            y = spec.matvec(payload, x)
+        elif acc and spec.matvec_acc is not None:
+            y = spec.matvec_acc(payload, x, y)
+        else:
+            y = y + spec.matvec(payload, x)
+    return y
+
+
+def aggregate_transform(dec: Decomposed, x: jax.Array, w: jax.Array,
+                        kernels: Sequence[str] = DEFAULT_KERNELS,
+                        bias: jax.Array | None = None, *,
+                        acc: bool | None = None) -> jax.Array:
+    """Y = A @ (X W) (+ bias) with per-subgraph fused/unfused kernels.
+
+    The transform-first hot path (GCN): fused kernels consume the raw
+    features and weight directly (H = X W never round-trips HBM); H is
+    materialized once only if some subgraph picked an unfused kernel.  The
+    bias seeds the threaded accumulator, so it rides along for free in
+    accumulation mode.
+
+    ``acc=None`` resolves by backend: on TPU the threaded accumulator saves
+    one full-width HBM tensor per density bucket; on CPU (interpret mode)
+    the extra per-grid-step operand costs more than the XLA adds it
+    replaces, so partial sums stay explicit."""
+    if acc is None:
+        acc = jax.default_backend() == "tpu"
+    names = plan_mod.normalize_layer(dec, kernels)
+    specs = [REGISTRY.get(k) for k in names]
+    h = x @ w if any(not s.fused for s in specs) else None
+    y = None
+    if bias is not None:
+        y = jnp.broadcast_to(bias.astype(x.dtype), (x.shape[0], w.shape[-1]))
+    for sub, spec in zip(dec.subgraphs, specs):
+        payload = sub.formats[spec.payload_key]
+        if spec.fused:
+            if y is None:
+                y = spec.fused_matvec(payload, x, w)
+            elif acc and spec.fused_matvec_acc is not None:
+                y = spec.fused_matvec_acc(payload, x, w, y)
+            else:
+                y = y + spec.fused_matvec(payload, x, w)
+        else:
+            if y is None:
+                y = spec.matvec(payload, h)
+            elif acc and spec.matvec_acc is not None:
+                y = spec.matvec_acc(payload, h, y)
+            else:
+                y = y + spec.matvec(payload, h)
     return y
 
 
@@ -90,10 +164,12 @@ def gcn_conv(params: Params, dec: Decomposed, x: jax.Array,
              kernels: Sequence[str]) -> jax.Array:
     """GCN layer: Y = Â (X W) + b  (Kipf & Welling; Â norm baked into the
     decomposition's edge values).  Transform-first ordering reduces the
-    aggregated width when out_dim < in_dim — same trick DGL applies."""
-    h = x @ params["w"]
-    h = aggregate(dec, h, kernels)
-    return h + params["b"]
+    aggregated width when out_dim < in_dim — same trick DGL applies.
+    Dispatched through aggregate_transform: subgraphs whose plan entry is a
+    fused kernel run A_s @ (X W) in one Pallas pass, and the bias seeds the
+    accumulator threaded across the subgraph list."""
+    return aggregate_transform(dec, x, params["w"], kernels,
+                               bias=params["b"])
 
 
 def init_gin_conv(key, in_dim: int, hidden: int, out_dim: int) -> Params:

@@ -182,22 +182,34 @@ def build_subgraph(name: str, kind: str, n_pad: int, block_size: int,
 
     ``kernels`` optionally restricts materialization (memory-lean mode for
     deployments that already know their plan); by default every registry
-    candidate for the subgraph kind is built eagerly.
+    candidate for the subgraph kind is built eagerly.  Fused kernels alias
+    their unfused counterpart's payload (``KernelSpec.payload_of``): they
+    never build anything, but requesting one materializes its base payload.
+    Density stats are computed first and handed to each builder so formats
+    can pick per-bucket tiling (blocked-ELL block size / feature-tile cap).
     """
-    specs = [s for s in REGISTRY.candidates(kind)
-             if kernels is None or s.name in kernels]
+    all_specs = REGISTRY.candidates(kind, include_fused=True)
+    if kernels is not None:
+        wanted = {REGISTRY.get(k).payload_key for k in kernels
+                  if REGISTRY.get(k).applies_to(kind)}
+        build_specs = [s for s in all_specs
+                       if s.build is not None and s.name in wanted]
+    else:
+        build_specs = [s for s in all_specs if s.build is not None]
     coo = formats.coo_from_edges(n_pad, n_pad, rows, cols, vals)
     # the transpose is only materialized when a candidate's VJP needs it
     coo_t = (formats.coo_from_edges(n_pad, n_pad, cols, rows, vals)
-             if any(s.needs_transpose for s in specs) else None)
-    fmts = {s.name: s.build(coo, coo_t, block_size) for s in specs}
+             if any(s.needs_transpose for s in build_specs) else None)
     nnz = len(rows)
     denom = (n_pad * block_size if kind == DIAG else n_pad * n_pad)
+    stats = dict(nnz=nnz, density=nnz / max(denom, 1))
+    fmts = {s.name: s.build(coo, coo_t, block_size, stats)
+            for s in build_specs}
+    stats["kernels"] = tuple(s.name for s in all_specs
+                             if s.payload_key in fmts)
     return Subgraph(
         name=name, kind=kind, n_rows=n_pad, block_size=block_size,
-        formats=fmts,
-        stats=dict(nnz=nnz, density=nnz / max(denom, 1),
-                   kernels=tuple(fmts)))
+        formats=fmts, stats=stats)
 
 
 def _bucket_inter(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,

@@ -115,6 +115,9 @@ class BlockELL:
     n_cols: int = dataclasses.field(metadata=dict(static=True))
     block_size: int = dataclasses.field(metadata=dict(static=True))
     max_blocks: int = dataclasses.field(metadata=dict(static=True))   # K
+    # per-bucket feature-tile cap chosen from the bucket's density stats at
+    # build time (VMEM working-set budget); ops._f_tile clamps to a divisor
+    f_tile_cap: int = dataclasses.field(default=512, metadata=dict(static=True))
     blocks: Array = None    # (n_brow, K, B, B) float
     col_idx: Array = None   # (n_brow, K) int32 block-column ids
     n_valid: Array = None   # (n_brow,) int32 number of real blocks per row
@@ -134,7 +137,7 @@ for _cls, _data, _meta in [
     (ELL, ("indices", "vals", "mask"), ("n_rows", "n_cols", "max_deg")),
     (BlockDiag, ("blocks",), ("n", "block_size")),
     (BlockELL, ("blocks", "col_idx", "n_valid"),
-     ("n_rows", "n_cols", "block_size", "max_blocks")),
+     ("n_rows", "n_cols", "block_size", "max_blocks", "f_tile_cap")),
 ]:
     _register(_cls, list(_data), list(_meta))
 
@@ -203,7 +206,8 @@ def coo_to_blockdiag(coo: COO, block_size: int) -> BlockDiag:
     return BlockDiag(n_pad, B, jnp.asarray(blocks))
 
 
-def coo_to_bell(coo: COO, block_size: int, n_cols_pad: int | None = None) -> BlockELL:
+def coo_to_bell(coo: COO, block_size: int, n_cols_pad: int | None = None,
+                f_tile_cap: int = 512) -> BlockELL:
     """Blocked-ELL over (B,B) tiles; K = max non-empty blocks per block row."""
     B = block_size
     n_rpad = ((coo.n_rows + B - 1) // B) * B
@@ -233,7 +237,7 @@ def coo_to_bell(coo: COO, block_size: int, n_cols_pad: int | None = None) -> Blo
     for r in range(len(rows)):
         i, j = int(brow[r]), int(bcol[r])
         blocks[i, blk_of[(i, j)], rows[r] % B, cols[r] % B] = vals[r]
-    return BlockELL(n_rpad, n_cpad, B, K, jnp.asarray(blocks),
+    return BlockELL(n_rpad, n_cpad, B, K, f_tile_cap, jnp.asarray(blocks),
                     jnp.asarray(col_idx), jnp.asarray(n_valid))
 
 

@@ -37,7 +37,7 @@ class GNNConfig:
     dropout: float = 0.0          # kept 0 for determinism in tests
     comm_size: int = 16
     reorder: str = "bfs"          # bfs | louvain
-    inter_buckets: int = 1        # density tiers for the inter subgraph
+    inter_buckets: int = 1        # density tiers; 0 = autotune over {1,2,4}
     selector: str = "feedback"    # feedback | cost_model | fixed
     fixed_kernels: tuple = ("block_diag", "bell")
     warmup_iters: int = 2
@@ -46,13 +46,41 @@ class GNNConfig:
 
 def prepare(graph: graph_mod.Graph, cfg: GNNConfig) -> dec_mod.Decomposed:
     """Preprocessing stage (paper §3.3/§4.2): self-loops + GCN norm + reorder
-    + decomposition, one pass."""
+    + decomposition, one pass.  ``cfg.inter_buckets == 0`` autotunes the
+    bucket count: decompose at each k in {1, 2, 4}, total the cost-model
+    estimate over the model's layers, commit the cheapest."""
     g = graph_mod.add_self_loops(graph) if cfg.model in ("gcn",) else graph
     vals = (graph_mod.gcn_norm_values(g.n, g.senders, g.receivers)
             if cfg.model == "gcn" else None)
+    if cfg.inter_buckets == 0:
+        return autotune_decomposition(
+            g, cfg, vals, in_dim=graph.features.shape[-1],
+            n_classes=graph.n_classes)
     return dec_mod.decompose(g, comm_size=cfg.comm_size, method=cfg.reorder,
                              edge_vals=vals,
                              inter_buckets=cfg.inter_buckets)
+
+
+def autotune_decomposition(g: graph_mod.Graph, cfg: GNNConfig,
+                           edge_vals, in_dim: int, n_classes: int,
+                           ks: tuple = (1, 2, 4)) -> dec_mod.Decomposed:
+    """Bucket-count autotuning: compare whole-model cost-model totals across
+    candidate inter-bucket counts and commit the cheapest decomposition.
+    The per-k totals land in ``dec.stats['bucket_autotune']``."""
+    pairs = agg_width_pairs(cfg, in_dim, n_classes)
+    hw = sel_mod.default_hw()
+    best, best_total, totals = None, None, {}
+    for k in ks:
+        dec = dec_mod.decompose(g, comm_size=cfg.comm_size,
+                                method=cfg.reorder, edge_vals=edge_vals,
+                                inter_buckets=k)
+        total = sum(sel_mod.plan_layer_cost(dec, fout, hw=hw, in_dim=fin)
+                    for fin, fout in pairs)
+        totals[k] = float(total)
+        if best_total is None or total < best_total:
+            best, best_total = dec, total
+    best.stats["bucket_autotune"] = totals
+    return best
 
 
 def init_model(key, cfg: GNNConfig, in_dim: int, n_classes: int) -> Params:
@@ -77,10 +105,22 @@ def init_model(key, cfg: GNNConfig, in_dim: int, n_classes: int) -> Params:
 def agg_widths(cfg: GNNConfig, in_dim: int, n_classes: int) -> list[int]:
     """Feature width each layer's aggregation runs at (kernel choice is
     width-dependent — per-layer selection, a beyond-paper refinement)."""
+    return [fout for _, fout in agg_width_pairs(cfg, in_dim, n_classes)]
+
+
+def agg_width_pairs(cfg: GNNConfig, in_dim: int,
+                    n_classes: int) -> list[tuple]:
+    """Per-layer ``(in_dim, agg_dim)`` width pairs.
+
+    ``in_dim`` is non-None only for transform-first layers (GCN): it is the
+    width the fused transform+aggregate kernels consume, and what the
+    selectors need to price fused candidates against unfused + shared
+    transform.  Models that aggregate raw inputs get ``(None, width)`` —
+    fused kernels never compete there."""
     dims = [in_dim] + [cfg.hidden] * (cfg.n_layers - 1) + [n_classes]
     if cfg.model == "gcn":
-        return dims[1:]                      # transform-first: out width
-    return dims[:-1]                         # gin/sage/gat aggregate inputs
+        return list(zip(dims[:-1], dims[1:]))   # transform-first
+    return [(None, w) for w in dims[:-1]]       # gin/sage/gat aggregate inputs
 
 
 def _as_plan(dec: dec_mod.Decomposed, kernels, n_layers: int) -> KernelPlan:
@@ -163,28 +203,46 @@ class TrainResult:
 
 
 def select_plan(dec: dec_mod.Decomposed, cfg: GNNConfig,
-                widths: list[int], dtype=jnp.float32
+                widths: list, dtype=jnp.float32
                 ) -> tuple[KernelPlan, dict]:
     """Commit a KernelPlan with the configured selector mode.  ``dtype``
     is the aggregation dtype — feedback probes must time the kernels that
-    will actually run."""
+    will actually run.
+
+    ``widths`` entries are either aggregated widths (ints) or
+    ``(in_dim, agg_dim)`` pairs from :func:`agg_width_pairs`; a non-None
+    in_dim lets fused transform+aggregate candidates compete in both
+    selector modes."""
+    pairs = [(None, w) if isinstance(w, int) else tuple(w) for w in widths]
     probe_times: dict = {}
     if cfg.selector == "fixed":
         plan = KernelPlan.make(dec, tuple(cfg.fixed_kernels),
-                               n_layers=len(widths))
+                               n_layers=len(pairs))
     elif cfg.selector == "cost_model":
         hw = sel_mod.default_hw()
         plan = KernelPlan.make(
-            dec, [sel_mod.select_by_cost_model(dec, w, dtype, hw=hw)
-                  for w in widths])
+            dec, [sel_mod.select_by_cost_model(dec, fout, dtype, hw=hw,
+                                               in_dim=fin)
+                  for fin, fout in pairs])
     elif cfg.selector == "feedback":
         # paper default: probe every registry candidate during warmup
-        sel = sel_mod.AdaptiveSelector(dec, warmup_iters=cfg.warmup_iters)
-        for w in sorted(set(widths)):
-            probe_x = jnp.ones((dec.n_pad, w), dtype)
-            res = sel.probe(probe_x, iters=cfg.warmup_iters)
-            probe_times.update({k + (w,): v for k, v in res.times.items()})
-        plan = KernelPlan.make(dec, [sel.choice(w) for w in widths])
+        fused_ok = any(fin is not None for fin, _ in pairs)
+        sel = sel_mod.AdaptiveSelector(dec, warmup_iters=cfg.warmup_iters,
+                                       include_fused=fused_ok)
+        for fin, fout in sorted(set(pairs), key=lambda p: (p[1], p[0] or 0)):
+            probe_x = jnp.ones((dec.n_pad, fout), dtype)
+            transform = (None if fin is None else
+                         (jnp.ones((dec.n_pad, fin), dtype),
+                          jnp.ones((fin, fout), dtype)))
+            res = sel.probe(probe_x, iters=cfg.warmup_iters,
+                            transform=transform)
+            probe_times.update({k + (fout,): v for k, v in res.times.items()})
+        # choices are keyed by the full (in_dim, agg_dim) pair: layers that
+        # share an output width but differ in input width sit on opposite
+        # sides of the fused recompute crossover
+        plan = KernelPlan.make(
+            dec, [sel.choice(fout if fin is None else (fin, fout))
+                  for fin, fout in pairs])
     else:
         raise ValueError(f"unknown selector {cfg.selector!r}")
     return plan, probe_times
@@ -213,9 +271,10 @@ def train(graph: graph_mod.Graph, cfg: GNNConfig, steps: int = 50,
     params = init_model(key, cfg, x.shape[-1], graph.n_classes)
     opt = _adam_init(params)
 
-    # --- kernel selection (per layer: aggregation width differs by layer)
-    widths = agg_widths(cfg, x.shape[-1], graph.n_classes)
-    plan, probe_times = select_plan(dec, cfg, widths, dtype=x.dtype)
+    # --- kernel selection (per layer: aggregation width differs by layer;
+    # GCN layers carry their input width so fused candidates compete)
+    pairs = agg_width_pairs(cfg, x.shape[-1], graph.n_classes)
+    plan, probe_times = select_plan(dec, cfg, pairs, dtype=x.dtype)
 
     step_fn = make_train_step(cfg, dec, plan, inv_deg)
 

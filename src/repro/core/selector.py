@@ -61,26 +61,88 @@ def default_hw() -> HwModel:
     return CPU_HW if jax.default_backend() == "cpu" else HwModel()
 
 
+def dense_transform_cost(n: int, fin: int, fout: int, dtype=np.float32,
+                         hw: HwModel = HwModel()) -> float:
+    """Roofline seconds for the standalone dense transform H = X @ W that
+    the unfused GCN path pays before aggregation (and fused kernels fold
+    into their pass)."""
+    be = np.dtype(dtype).itemsize
+    flops = 2.0 * n * fin * fout
+    bytes_ = (n * fin + n * fout + fin * fout) * be
+    return max(flops / hw.peak_flops, bytes_ / hw.hbm_bw) + hw.launch_overhead_s
+
+
 def candidate_cost(sub: Subgraph, kernel: str, feat_dim: int,
-                   dtype=np.float32, hw: HwModel = HwModel()) -> float:
+                   dtype=np.float32, hw: HwModel = HwModel(),
+                   in_dim: int | None = None,
+                   transform_share: float = 0.0) -> float:
     """Analytic seconds estimate for one (subgraph, kernel) candidate,
-    delegated to the kernel's registered cost fn."""
-    return REGISTRY.get(kernel).cost(sub, feat_dim, dtype, hw)
+    delegated to the kernel's registered cost fn.
+
+    Fused kernels price the ``(in_dim, feat_dim)`` pair (their pass includes
+    the transform); unfused kernels aggregate at ``feat_dim`` and carry
+    ``transform_share`` — their slice of the shared H = X @ W cost — so the
+    fused-vs-unfused comparison stays apples-to-apples."""
+    spec = REGISTRY.get(kernel)
+    if spec.fused:
+        if in_dim is None:
+            raise ValueError(
+                f"fused kernel {kernel!r} needs in_dim to be costed")
+        return spec.cost(sub, (in_dim, feat_dim), dtype, hw)
+    return spec.cost(sub, feat_dim, dtype, hw) + transform_share
 
 
 def select_for_subgraph(sub: Subgraph, feat_dim: int, dtype=np.float32,
-                        hw: HwModel = HwModel()) -> str:
-    specs = REGISTRY.candidates_for(sub)
+                        hw: HwModel = HwModel(),
+                        in_dim: int | None = None,
+                        transform_share: float = 0.0) -> str:
+    specs = REGISTRY.candidates_for(sub, include_fused=in_dim is not None)
     if not specs:
         raise ValueError(f"no kernel candidates for subgraph {sub.name!r}")
-    return min(specs, key=lambda s: s.cost(sub, feat_dim, dtype, hw)).name
+    return min(specs, key=lambda s: candidate_cost(
+        sub, s.name, feat_dim, dtype, hw, in_dim, transform_share)).name
+
+
+def _transform_share(dec: Decomposed, feat_dim: int, dtype, hw,
+                     in_dim: int | None) -> float:
+    """Per-subgraph slice of the shared dense-transform cost.
+
+    Approximation: if *some* subgraphs pick unfused kernels the transform is
+    paid once in full regardless of how many picked it; dividing by the
+    subgraph count under-charges mixed layers slightly, but leaves the
+    unfused-vs-unfused ranking untouched and prices the all-fused-vs-
+    all-unfused crossover correctly."""
+    if in_dim is None:
+        return 0.0
+    return (dense_transform_cost(dec.n_pad, in_dim, feat_dim, dtype, hw)
+            / max(len(dec.subgraphs), 1))
 
 
 def select_by_cost_model(dec: Decomposed, feat_dim: int, dtype=np.float32,
-                         hw: HwModel = HwModel()) -> tuple[str, ...]:
-    """One KernelPlan layer: the cost-argmin kernel per subgraph."""
-    return tuple(select_for_subgraph(s, feat_dim, dtype, hw)
+                         hw: HwModel = HwModel(),
+                         in_dim: int | None = None) -> tuple[str, ...]:
+    """One KernelPlan layer: the cost-argmin kernel per subgraph.
+
+    With ``in_dim`` set (GCN's transform-first layers) fused candidates
+    compete: each unfused candidate is surcharged its share of the shared
+    H = X @ W cost the fused kernels avoid."""
+    share = _transform_share(dec, feat_dim, dtype, hw, in_dim)
+    return tuple(select_for_subgraph(s, feat_dim, dtype, hw, in_dim, share)
                  for s in dec.subgraphs)
+
+
+def plan_layer_cost(dec: Decomposed, feat_dim: int, dtype=np.float32,
+                    hw: HwModel = HwModel(),
+                    in_dim: int | None = None) -> float:
+    """Total modeled seconds for one layer under the cost-argmin choice —
+    the objective the bucket-count autotuner minimizes across k."""
+    share = _transform_share(dec, feat_dim, dtype, hw, in_dim)
+    total = 0.0
+    for sub in dec.subgraphs:
+        specs = REGISTRY.candidates_for(sub, include_fused=in_dim is not None)
+        total += min(candidate_cost(sub, s.name, feat_dim, dtype, hw,
+                                    in_dim, share) for s in specs)
+    return total
 
 
 @dataclass
@@ -99,84 +161,153 @@ class AdaptiveSelector:
     variant in core/gnn.py to match the paper's monitor design).
     """
 
-    def __init__(self, dec: Decomposed, warmup_iters: int = 3):
+    def __init__(self, dec: Decomposed, warmup_iters: int = 3,
+                 include_fused: bool = False):
         self.dec = dec
         self.warmup_iters = warmup_iters
-        # keyed (subgraph, kernel, feat_width): GNN layers aggregate at
+        # fused candidates need the transform operand at probe time; only
+        # transform-first call sites (GCN) can supply it, so they opt in
+        self.include_fused = include_fused
+        # keyed (subgraph, kernel, width key): GNN layers aggregate at
         # different widths (GIN's first layer at the raw feature width, GCN
         # at the hidden width), and the optimal kernel is width-dependent —
-        # a beyond-paper refinement of the feedback selector.
-        self._times: dict[tuple[str, str, int], list[float]] = {}
-        self._committed: dict[int, tuple] = {}
+        # a beyond-paper refinement of the feedback selector.  The width key
+        # is the (in_dim, agg_dim) pair (in_dim 0 when no transform): two
+        # GCN layers sharing an output width but differing in input width
+        # sit on opposite sides of the fused recompute crossover, so their
+        # observations and committed choices must not pool.
+        self._times: dict[tuple[str, str, tuple], list[float]] = {}
+        self._raw: dict[tuple[str, str, tuple], list[float]] = {}
+        self._committed: dict[tuple, tuple] = {}
+
+    def _cands(self, sub: Subgraph):
+        return REGISTRY.candidates_for(sub, include_fused=self.include_fused)
+
+    @staticmethod
+    def _wkey(width) -> tuple:
+        """Normalize a width spec (int or (in_dim, agg_dim)) to a key."""
+        if isinstance(width, tuple):
+            return (width[0] or 0, width[1])
+        return (0, width or 0)
 
     def observe(self, sub_name: str, kernel: str, seconds: float,
-                width: int = 0) -> None:
-        self._times.setdefault((sub_name, kernel, width), []).append(seconds)
+                width=0, raw_seconds: float | None = None) -> None:
+        key = (sub_name, kernel, self._wkey(width))
+        self._times.setdefault(key, []).append(seconds)
+        self._raw.setdefault(key, []).append(
+            seconds if raw_seconds is None else raw_seconds)
 
     def _widths(self) -> set:
         return {w for (_, _, w) in self._times}
 
-    def _need(self, width: int) -> list[tuple[str, str, int]]:
-        return [(s.name, spec.name, width)
+    def _need(self, width) -> list[tuple[str, str, tuple]]:
+        wk = self._wkey(width)
+        return [(s.name, spec.name, wk)
                 for s in self.dec.subgraphs
-                for spec in REGISTRY.candidates_for(s)]
+                for spec in self._cands(s)]
 
-    def ready(self, width: int = 0) -> bool:
+    def ready(self, width=0) -> bool:
         width = self._nearest_width(width)
         return all(len(self._times.get(key, [])) >= self.warmup_iters
                    for key in self._need(width))
 
-    def _nearest_width(self, width: int) -> int:
+    def _nearest_width(self, width) -> tuple:
         ws = self._widths()
+        wk = self._wkey(width)
         if not ws:
-            return width
-        return min(ws, key=lambda w: abs(w - width))
+            return wk
+        return min(ws, key=lambda w: (abs(w[1] - wk[1]), abs(w[0] - wk[0])))
 
-    def choice(self, feat_dim: int | None = None) -> tuple:
+    def choice(self, feat_dim=None) -> tuple:
         w = self._nearest_width(feat_dim or 0)
         if w in self._committed:
             return self._committed[w]
         if self._times and self.ready(w):
             med = {k: float(np.median(v)) for k, v in self._times.items()}
             self._committed[w] = tuple(
-                min(REGISTRY.candidates_for(s),
+                min(self._cands(s),
                     key=lambda spec: med[(s.name, spec.name, w)]).name
                 for s in self.dec.subgraphs)
             return self._committed[w]
         # not enough observations yet: fall back to the cost model
         assert feat_dim is not None, "need feat_dim for cost-model fallback"
-        return select_by_cost_model(self.dec, feat_dim, hw=default_hw())
+        fin, fout = self._wkey(feat_dim)
+        return select_by_cost_model(self.dec, fout, hw=default_hw(),
+                                    in_dim=fin or None)
 
-    def probe(self, x: jax.Array, iters: int = 3) -> ProbeResult:
+    def probe(self, x: jax.Array, iters: int = 3,
+              transform: tuple | None = None) -> ProbeResult:
+        """Time every candidate on the real decomposed input.
+
+        ``x`` is the aggregated-width operand the unfused kernels consume.
+        ``transform`` is the optional ``(x_in, w)`` pair for transform-first
+        layers: fused candidates are timed end-to-end on A @ (x_in W), and
+        each unfused candidate is charged its per-subgraph share of the
+        measured standalone H = X @ W it depends on — keeping the committed
+        argmin an honest whole-layer comparison."""
         from repro.core import adaptgear  # local import to avoid cycle
-        width = x.shape[-1]
+        share = 0.0
+        if transform is not None:
+            x_in, w_mat = transform
+            width = (x_in.shape[-1], x.shape[-1])
+            mm = jax.jit(lambda a, b: a @ b)
+            mm(x_in, w_mat).block_until_ready()
+            ts = []
+            for _ in range(iters):
+                t0 = time.perf_counter()
+                mm(x_in, w_mat).block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            share = float(np.median(ts)) / max(len(self.dec.subgraphs), 1)
+        else:
+            width = x.shape[-1]
+        wk = self._wkey(width)
         for sub in self.dec.subgraphs:
-            for spec in REGISTRY.candidates_for(sub):
-                fn = jax.jit(lambda x, s=sub, k=spec.name:
-                             adaptgear.aggregate_sub(s, x, k))
-                fn(x).block_until_ready()      # compile outside the timing
+            for spec in self._cands(sub):
+                if spec.fused:
+                    if transform is None:
+                        continue
+                    fn = jax.jit(lambda xi, wi, s=sub, k=spec.name:
+                                 adaptgear.aggregate_sub_fused(s, xi, wi, k))
+                    args = (x_in, w_mat)
+                    extra = 0.0
+                else:
+                    fn = jax.jit(lambda xx, s=sub, k=spec.name:
+                                 adaptgear.aggregate_sub(s, xx, k))
+                    args = (x,)
+                    extra = share
+                fn(*args).block_until_ready()  # compile outside the timing
                 for _ in range(iters):
                     t0 = time.perf_counter()
-                    fn(x).block_until_ready()
-                    self.observe(sub.name, spec.name,
-                                 time.perf_counter() - t0, width)
+                    fn(*args).block_until_ready()
+                    t = time.perf_counter() - t0
+                    # selection compares t + transform share; calibration
+                    # fits the bare kernel time (raw_seconds)
+                    self.observe(sub.name, spec.name, t + extra, width,
+                                 raw_seconds=t)
         med = {(s, k): float(np.median(v))
-               for (s, k, w), v in self._times.items() if w == width}
+               for (s, k, w), v in self._times.items() if w == wk}
         return ProbeResult(times=med, choice=self.choice(width))
 
     def calibrate_cost_model(self, feat_dim: int,
                              hw: HwModel | None = None) -> HwModel:
         """Fit a global time-scale from probes so the analytic model's
         *absolute* numbers match this machine (its *ranking* is what the
-        dry-run uses)."""
+        dry-run uses).  Fitted against the *raw* kernel times: the selection
+        surcharge (shared-transform share) is not part of any kernel's own
+        cost fn."""
         hw = hw or default_hw()
-        if not self._times:
+        if not self._raw:
             return hw
         by_name = {s.name: s for s in self.dec.subgraphs}
         ratios = []
-        for (sub_name, kern, w), ts in self._times.items():
-            est = candidate_cost(by_name[sub_name], kern, w or feat_dim, hw=hw)
+        for (sub_name, kern, w), ts in self._raw.items():
+            if REGISTRY.get(kern).fused:
+                continue   # fused probes fold in the transform; skip the fit
+            est = candidate_cost(by_name[sub_name], kern, w[1] or feat_dim,
+                                 hw=hw)
             ratios.append(np.median(ts) / max(est, 1e-12))
+        if not ratios:
+            return hw
         scale = float(np.median(ratios))
         return replace(hw, peak_flops=hw.peak_flops / scale,
                        hbm_bw=hw.hbm_bw / scale)

@@ -39,13 +39,32 @@ def _kernel(idx_ref, a_ref, x_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("f_tile", "interpret"))
-def bell_spmm(blocks: jax.Array, col_idx: jax.Array, x: jax.Array, *,
-              f_tile: int = 512, interpret: bool = True) -> jax.Array:
-    """Y = A_bell @ x.
+def _kernel_acc(idx_ref, a_ref, x_ref, y_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
 
-    blocks: (nbr, K, B, B); col_idx: (nbr, K) int32; x: (nbc*B, F).
-    Returns (nbr*B, F).
+    @pl.when(k == 0)
+    def _init():
+        # accumulation mode: seed the VMEM scratch from the threaded-through
+        # partial output instead of zeros — the separate partial-sum pass
+        # (and its full-width HBM tensor) disappears
+        acc_ref[...] = y_ref[...].astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(a_ref[...], x_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("f_tile", "interpret"))
+def bell_spmm(blocks: jax.Array, col_idx: jax.Array, x: jax.Array,
+              y_in: jax.Array | None = None, *,
+              f_tile: int = 512, interpret: bool = True) -> jax.Array:
+    """Y = A_bell @ x (+ y_in).
+
+    blocks: (nbr, K, B, B); col_idx: (nbr, K) int32; x: (nbc*B, F);
+    y_in: optional (nbr*B, F) accumulator input.  Returns (nbr*B, F).
     """
     nbr, K, B, _ = blocks.shape
     F = x.shape[-1]
@@ -53,23 +72,31 @@ def bell_spmm(blocks: jax.Array, col_idx: jax.Array, x: jax.Array, *,
     assert F % f_tile == 0, (F, f_tile)
     xb = x.reshape(-1, B, F)
     grid = (nbr, F // f_tile, K)
+    in_specs = [
+        pl.BlockSpec((None, None, B, B), lambda i, j, k, idx: (i, k, 0, 0)),
+        pl.BlockSpec((None, B, f_tile), lambda i, j, k, idx: (idx[i, k], 0, j)),
+    ]
+    operands = [col_idx, blocks, xb]
+    kernel = _kernel
+    if y_in is not None:
+        in_specs.append(
+            pl.BlockSpec((None, B, f_tile), lambda i, j, k, idx: (i, 0, j)))
+        operands.append(y_in.reshape(nbr, B, F))
+        kernel = _kernel_acc
     gs = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((None, None, B, B), lambda i, j, k, idx: (i, k, 0, 0)),
-            pl.BlockSpec((None, B, f_tile), lambda i, j, k, idx: (idx[i, k], 0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, B, f_tile), lambda i, j, k, idx: (i, 0, j)),
         scratch_shapes=[pltpu.VMEM((B, f_tile), jnp.float32)],
     )
     out = pl.pallas_call(
-        _kernel,
+        kernel,
         grid_spec=gs,
         out_shape=jax.ShapeDtypeStruct((nbr, B, F), x.dtype),
         interpret=interpret,
         compiler_params=dict(
             mosaic=dict(dimension_semantics=("parallel", "parallel", "arbitrary"))
         ) if not interpret else None,
-    )(col_idx, blocks, xb)
+    )(*operands)
     return out.reshape(nbr * B, F)

@@ -26,12 +26,20 @@ def _kernel(a_ref, x_ref, o_ref):
     ).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("f_tile", "interpret"))
-def block_diag_spmm(blocks: jax.Array, x: jax.Array, *,
-                    f_tile: int = 512, interpret: bool = True) -> jax.Array:
-    """Y = blockdiag(blocks) @ x.
+def _kernel_acc(a_ref, x_ref, y_ref, o_ref):
+    y = jnp.dot(a_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = (y_ref[...].astype(jnp.float32) + y).astype(o_ref.dtype)
 
-    blocks: (nb, B, B); x: (nb*B, F) with F % f_tile == 0 (ops.py pads).
+
+@functools.partial(jax.jit, static_argnames=("f_tile", "interpret"))
+def block_diag_spmm(blocks: jax.Array, x: jax.Array,
+                    y_in: jax.Array | None = None, *,
+                    f_tile: int = 512, interpret: bool = True) -> jax.Array:
+    """Y = blockdiag(blocks) @ x (+ y_in).
+
+    blocks: (nb, B, B); x: (nb*B, F) with F % f_tile == 0 (ops.py pads);
+    y_in: optional (nb*B, F) accumulator input (aggregate's threaded output
+    buffer, saving the separate partial-sum pass).
     """
     nb, B, _ = blocks.shape
     n, F = x.shape
@@ -40,18 +48,25 @@ def block_diag_spmm(blocks: jax.Array, x: jax.Array, *,
     assert F % f_tile == 0, (F, f_tile)
     xb = x.reshape(nb, B, F)
     grid = (nb, F // f_tile)
+    in_specs = [
+        pl.BlockSpec((None, B, B), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((None, B, f_tile), lambda i, j: (i, 0, j)),
+    ]
+    operands = [blocks, xb]
+    kernel = _kernel
+    if y_in is not None:
+        in_specs.append(pl.BlockSpec((None, B, f_tile), lambda i, j: (i, 0, j)))
+        operands.append(y_in.reshape(nb, B, F))
+        kernel = _kernel_acc
     out = pl.pallas_call(
-        _kernel,
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((None, B, B), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((None, B, f_tile), lambda i, j: (i, 0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((None, B, f_tile), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((nb, B, F), x.dtype),
         interpret=interpret,
         compiler_params=dict(
             mosaic=dict(dimension_semantics=("parallel", "parallel"))
         ) if not interpret else None,
-    )(blocks, xb)
+    )(*operands)
     return out.reshape(n, F)

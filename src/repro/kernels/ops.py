@@ -8,10 +8,15 @@ Responsibilities:
     swap the last two axes) or passed in as a preprocessed format
     (blocked-ELL: the transpose is materialized once during decomposition,
     matching the paper's one-shot preprocessing stage).
+  * fused transform+aggregate: Y = A @ (X W) (+ Y_in) in one Pallas pass.
+    By associativity dX = A^T (dY W^T) is the *same* fused form over the
+    transpose payload, and dW = X^T (A^T dY) is a single blocked reduction
+    (bell_spmm_dw) — the backward never materializes an (n, F) intermediate.
+  * accumulating (`*_acc`) variants that thread one output buffer through
+    aggregate()'s subgraph loop (the kernels seed their VMEM scratch from
+    y_in instead of zeros) so no per-bucket partial tensors are allocated.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +25,8 @@ from repro.core import formats
 from repro.kernels import ref
 from repro.kernels.block_diag_spmm import block_diag_spmm
 from repro.kernels.bell_spmm import bell_spmm
+from repro.kernels.block_diag_spmm_fused import block_diag_spmm_fused
+from repro.kernels.bell_spmm_fused import bell_spmm_fused, bell_spmm_dw
 
 
 def _interpret() -> bool:
@@ -38,12 +45,38 @@ def _pad_feat(x: jax.Array, tile: int) -> tuple[jax.Array, int]:
 
 
 def _f_tile(F: int, cap: int = 512) -> int:
-    t = min(cap, ((F + LANE - 1) // LANE) * LANE)
-    # pick the largest tile <= cap that divides the padded F
+    """Largest lane-multiple tile <= cap that divides the lane-padded F.
+
+    Picked by direct divisor scan: the old walk-down decremented from the
+    cap in LANE steps, which degenerates (or diverges) whenever the cap is
+    not itself a lane multiple — per-bucket tiling passes arbitrary caps.
+    """
     Fp = ((F + LANE - 1) // LANE) * LANE
-    while Fp % t:
-        t -= LANE
-    return max(t, LANE)
+    hi = min(max(cap, LANE), Fp)
+    best = LANE
+    for t in range(LANE, hi + 1, LANE):
+        if Fp % t == 0:
+            best = t
+    return best
+
+
+def _pad_rows(x: jax.Array, n_rows: int) -> jax.Array:
+    if x.shape[0] < n_rows:
+        x = jnp.pad(x, ((0, n_rows - x.shape[0]), (0, 0)))
+    return x
+
+
+def _fused_f_cap(block_size: int, fin_padded: int) -> int:
+    """Output-tile cap for the fused kernels from the VMEM budget.
+
+    Per grid step the fused working set is B*B (adjacency) + B*Fi (features)
+    + Fi*Ft (weight stripe) + 2*B*Ft (accumulator + output); solving for Ft
+    under a ~4 MB double-buffered budget lets narrow-input layers run much
+    fatter output tiles (= fewer grid steps) than the unfused default."""
+    budget_floats = (4 << 20) // 4 // 2
+    cap = (budget_floats - block_size * block_size - block_size * fin_padded
+           ) // (fin_padded + 2 * block_size)
+    return int(max(LANE, min(1024, (cap // LANE) * LANE)))
 
 
 # --- block-diagonal (intra-community dense kernel) --------------------------
@@ -53,10 +86,11 @@ def block_diag_matvec(blocks: jax.Array, x: jax.Array) -> jax.Array:
     return _bd_fwd_impl(blocks, x)
 
 
-def _bd_fwd_impl(blocks, x):
+def _bd_fwd_impl(blocks, x, y_in=None):
     t = _f_tile(x.shape[-1])
     xp, F = _pad_feat(x, t)
-    y = block_diag_spmm(blocks, xp, f_tile=t, interpret=_interpret())
+    yp = _pad_feat(y_in, t)[0] if y_in is not None else None
+    y = block_diag_spmm(blocks, xp, yp, f_tile=t, interpret=_interpret())
     return y[:, :F]
 
 
@@ -73,21 +107,40 @@ def _bd_bwd(res, dy):
 block_diag_matvec.defvjp(_bd_fwd, _bd_bwd)
 
 
+@jax.custom_vjp
+def block_diag_matvec_acc(blocks: jax.Array, x: jax.Array,
+                          y_in: jax.Array) -> jax.Array:
+    """Y = blockdiag(blocks) @ x + y_in (accumulating dispatch mode)."""
+    return _bd_fwd_impl(blocks, x, y_in)
+
+
+def _bd_acc_fwd(blocks, x, y_in):
+    return _bd_fwd_impl(blocks, x, y_in), (blocks,)
+
+
+def _bd_acc_bwd(res, dy):
+    blocks, = res
+    dx = _bd_fwd_impl(jnp.swapaxes(blocks, -1, -2), dy)
+    return None, dx, dy
+
+
+block_diag_matvec_acc.defvjp(_bd_acc_fwd, _bd_acc_bwd)
+
+
 # --- blocked-ELL (inter-community sparse kernel) -----------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=())
+@jax.custom_vjp
 def bell_matvec(bell: formats.BlockELL, bell_t: formats.BlockELL,
                 x: jax.Array) -> jax.Array:
     return _bell_fwd_impl(bell, x)
 
 
-def _bell_fwd_impl(bell: formats.BlockELL, x):
-    t = _f_tile(x.shape[-1])
+def _bell_fwd_impl(bell: formats.BlockELL, x, y_in=None):
+    t = _f_tile(x.shape[-1], cap=bell.f_tile_cap)
     xp, F = _pad_feat(x, t)
-    n_cpad = bell.n_cols
-    if xp.shape[0] < n_cpad:
-        xp = jnp.pad(xp, ((0, n_cpad - xp.shape[0]), (0, 0)))
-    y = bell_spmm(bell.blocks, bell.col_idx, xp, f_tile=t,
+    xp = _pad_rows(xp, bell.n_cols)
+    yp = _pad_feat(y_in, t)[0] if y_in is not None else None
+    y = bell_spmm(bell.blocks, bell.col_idx, xp, yp, f_tile=t,
                   interpret=_interpret())
     return y[:, :F]
 
@@ -103,6 +156,168 @@ def _bell_bwd(res, dy):
 
 
 bell_matvec.defvjp(_bell_fwd, _bell_bwd)
+
+
+@jax.custom_vjp
+def bell_matvec_acc(bell: formats.BlockELL, bell_t: formats.BlockELL,
+                    x: jax.Array, y_in: jax.Array) -> jax.Array:
+    """Y = A_bell @ x + y_in (accumulating dispatch mode)."""
+    return _bell_fwd_impl(bell, x, y_in)
+
+
+def _bell_acc_fwd(bell, bell_t, x, y_in):
+    return _bell_fwd_impl(bell, x, y_in), (bell_t, x.shape[0])
+
+
+def _bell_acc_bwd(res, dy):
+    bell_t, n = res
+    dx = _bell_fwd_impl(bell_t, dy)[:n]
+    return None, None, dx, dy
+
+
+bell_matvec_acc.defvjp(_bell_acc_fwd, _bell_acc_bwd)
+
+
+# --- fused transform+aggregate: block-diagonal -------------------------------
+
+def _bdf_impl(blocks, x, w, y_in=None):
+    xp, _ = _pad_feat(x, LANE)
+    Fo = w.shape[-1]
+    t = _f_tile(Fo, cap=_fused_f_cap(blocks.shape[-1], xp.shape[-1]))
+    wp = _pad_feat(w, t)[0]
+    wp = jnp.pad(wp, ((0, xp.shape[-1] - wp.shape[0]), (0, 0)))
+    yp = _pad_feat(y_in, t)[0] if y_in is not None else None
+    y = block_diag_spmm_fused(blocks, xp, wp, yp, f_tile=t,
+                              interpret=_interpret())
+    return y[:, :Fo]
+
+
+def _bd_dw_impl(blocks, x, dy):
+    """dW = X^T (A^T dY) for the diagonal tier, via the shared blocked-ELL
+    dW reduction with K=1 and identity block columns."""
+    bt = jnp.swapaxes(blocks, -1, -2)[:, None]            # (nb, 1, B, B)
+    idx = jnp.arange(blocks.shape[0], dtype=jnp.int32)[:, None]
+    xp, Fi = _pad_feat(x, LANE)
+    gp, Fo = _pad_feat(dy, LANE)
+    dw = bell_spmm_dw(bt, idx, xp, gp,
+                      fi_tile=_f_tile(Fi), fo_tile=_f_tile(Fo),
+                      interpret=_interpret())
+    return dw[:Fi, :Fo]
+
+
+@jax.custom_vjp
+def block_diag_fused_matvec(blocks: jax.Array, x: jax.Array,
+                            w: jax.Array) -> jax.Array:
+    """Y = blockdiag(blocks) @ (x @ w), one fused Pallas pass."""
+    return _bdf_impl(blocks, x, w)
+
+
+def _bdf_fwd(blocks, x, w):
+    return _bdf_impl(blocks, x, w), (blocks, x, w)
+
+
+def _bdf_bwd(res, dy):
+    blocks, x, w = res
+    bt = jnp.swapaxes(blocks, -1, -2)
+    dx = _bdf_impl(bt, dy, w.T).astype(x.dtype)       # A^T (dY W^T), fused
+    dw = _bd_dw_impl(blocks, x, dy).astype(w.dtype)
+    return None, dx, dw
+
+
+block_diag_fused_matvec.defvjp(_bdf_fwd, _bdf_bwd)
+
+
+@jax.custom_vjp
+def block_diag_fused_matvec_acc(blocks: jax.Array, x: jax.Array,
+                                w: jax.Array, y_in: jax.Array) -> jax.Array:
+    """Y = blockdiag(blocks) @ (x @ w) + y_in, one fused Pallas pass."""
+    return _bdf_impl(blocks, x, w, y_in)
+
+
+def _bdf_acc_fwd(blocks, x, w, y_in):
+    return _bdf_impl(blocks, x, w, y_in), (blocks, x, w)
+
+
+def _bdf_acc_bwd(res, dy):
+    blocks, x, w = res
+    bt = jnp.swapaxes(blocks, -1, -2)
+    dx = _bdf_impl(bt, dy, w.T).astype(x.dtype)
+    dw = _bd_dw_impl(blocks, x, dy).astype(w.dtype)
+    return None, dx, dw, dy
+
+
+block_diag_fused_matvec_acc.defvjp(_bdf_acc_fwd, _bdf_acc_bwd)
+
+
+# --- fused transform+aggregate: blocked-ELL ----------------------------------
+
+def _bellf_impl(bell: formats.BlockELL, x, w, y_in=None):
+    xp, _ = _pad_feat(x, LANE)
+    xp = _pad_rows(xp, bell.n_cols)
+    Fo = w.shape[-1]
+    t = _f_tile(Fo, cap=min(bell.f_tile_cap,
+                            _fused_f_cap(bell.block_size, xp.shape[-1])))
+    wp = _pad_feat(w, t)[0]
+    wp = jnp.pad(wp, ((0, xp.shape[-1] - wp.shape[0]), (0, 0)))
+    yp = _pad_feat(y_in, t)[0] if y_in is not None else None
+    y = bell_spmm_fused(bell.blocks, bell.col_idx, xp, wp, yp, f_tile=t,
+                        interpret=_interpret())
+    return y[:, :Fo]
+
+
+def _bell_dw_impl(bell_t: formats.BlockELL, x, dy):
+    """dW = X^T (A^T dY) over the materialized transpose payload."""
+    xp, Fi = _pad_feat(x, LANE)
+    xp = _pad_rows(xp, bell_t.n_rows)
+    gp, Fo = _pad_feat(dy, LANE)
+    gp = _pad_rows(gp, bell_t.n_cols)
+    dw = bell_spmm_dw(bell_t.blocks, bell_t.col_idx, xp, gp,
+                      fi_tile=_f_tile(Fi), fo_tile=_f_tile(Fo),
+                      interpret=_interpret())
+    return dw[:Fi, :Fo]
+
+
+@jax.custom_vjp
+def bell_fused_matvec(bell: formats.BlockELL, bell_t: formats.BlockELL,
+                      x: jax.Array, w: jax.Array) -> jax.Array:
+    """Y = A_bell @ (x @ w), one fused Pallas pass."""
+    return _bellf_impl(bell, x, w)
+
+
+def _bellf_fwd(bell, bell_t, x, w):
+    return _bellf_impl(bell, x, w), (bell_t, x, w)
+
+
+def _bellf_bwd(res, dy):
+    bell_t, x, w = res
+    dx = _bellf_impl(bell_t, dy, w.T)[: x.shape[0]].astype(x.dtype)
+    dw = _bell_dw_impl(bell_t, x, dy).astype(w.dtype)
+    return None, None, dx, dw
+
+
+bell_fused_matvec.defvjp(_bellf_fwd, _bellf_bwd)
+
+
+@jax.custom_vjp
+def bell_fused_matvec_acc(bell: formats.BlockELL, bell_t: formats.BlockELL,
+                          x: jax.Array, w: jax.Array,
+                          y_in: jax.Array) -> jax.Array:
+    """Y = A_bell @ (x @ w) + y_in, one fused Pallas pass."""
+    return _bellf_impl(bell, x, w, y_in)
+
+
+def _bellf_acc_fwd(bell, bell_t, x, w, y_in):
+    return _bellf_impl(bell, x, w, y_in), (bell_t, x, w)
+
+
+def _bellf_acc_bwd(res, dy):
+    bell_t, x, w = res
+    dx = _bellf_impl(bell_t, dy, w.T)[: x.shape[0]].astype(x.dtype)
+    dw = _bell_dw_impl(bell_t, x, dy).astype(w.dtype)
+    return None, None, dx, dw, dy
+
+
+bell_fused_matvec_acc.defvjp(_bellf_acc_fwd, _bellf_acc_bwd)
 
 
 # --- ELL gather (XLA vertex-parallel path) -----------------------------------

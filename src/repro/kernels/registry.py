@@ -3,31 +3,52 @@
 Every sparse/dense aggregation kernel registers one :class:`KernelSpec`
 bundling everything the rest of the system needs to use it:
 
-  name    -- dispatch key (stored in KernelPlans, printed by benchmarks)
-  kinds   -- which subgraph kinds the kernel applies to: ``"diag"`` (the
-             block-diagonal intra-community subgraph) and/or ``"offdiag"``
-             (inter-community density buckets)
-  build   -- host-side format materializer run once during decomposition:
-             ``build(coo, coo_t, block_size) -> payload``.  The payload is
-             an arbitrary pytree (a single format container, or a tuple such
-             as blocked-ELL forward + transpose for the VJP).  ``coo_t`` is
-             only constructed (and non-None) when ``needs_transpose`` is set.
-  matvec  -- device function ``matvec(payload, x) -> A @ x``
-  cost    -- analytic roofline estimate ``cost(sub, feat_dim, dtype, hw) ->
-             seconds`` consumed by the cost-model selector; ``hw`` is any
-             object with ``peak_flops / hbm_bw / launch_overhead_s /
-             gather_eff / scatter_eff / mxu_eff(B)`` (see
-             core/selector.HwModel).
+  name       -- dispatch key (stored in KernelPlans, printed by benchmarks)
+  kinds      -- which subgraph kinds the kernel applies to: ``"diag"`` (the
+                block-diagonal intra-community subgraph) and/or ``"offdiag"``
+                (inter-community density buckets)
+  build      -- host-side format materializer run once during decomposition:
+                ``build(coo, coo_t, block_size, stats) -> payload``.  The
+                payload is an arbitrary pytree (a single format container, or
+                a tuple such as blocked-ELL forward + transpose for the VJP).
+                ``coo_t`` is only constructed (and non-None) when
+                ``needs_transpose`` is set.  ``stats`` carries the subgraph's
+                density statistics so a builder can pick per-bucket tiling
+                (the blocked-ELL builder chooses its block size and
+                feature-tile cap from them).
+  matvec     -- device function ``matvec(payload, x) -> A @ x``
+  matvec_acc -- optional accumulating variant ``matvec_acc(payload, x, y_in)
+                -> y_in + A @ x``; aggregate() threads one output buffer
+                through the subgraph list instead of materializing a partial
+                per density bucket (the Pallas kernels seed their VMEM
+                scratch from y_in).
+  fused_matvec / fused_matvec_acc
+             -- fused transform+aggregate entry points
+                ``(payload, x, w[, y_in]) -> A @ (x @ w) [+ y_in]``.  A spec
+                providing these is a *fused* kernel: it is selected through
+                the same KernelPlan machinery but dispatched by
+                ``aggregate_transform`` with the raw features and weight.
+  payload_of -- name of another kernel whose format payload this spec reuses
+                (fused kernels alias their unfused counterpart's payload, so
+                no extra device memory is materialized).
+  cost       -- analytic roofline estimate consumed by the cost-model
+                selector: ``cost(sub, feat_dim, dtype, hw) -> seconds`` for
+                unfused kernels, where ``feat_dim`` is the aggregated width;
+                for fused kernels ``feat_dim`` is the ``(in_dim, out_dim)``
+                pair since the in-kernel transform prices both.  ``hw`` is
+                any object with ``peak_flops / hbm_bw / launch_overhead_s /
+                gather_eff / scatter_eff / mxu_eff(B)`` (core/selector.HwModel).
 
-Adding a kernel (CSR, sell-C-sigma, fused transform+aggregate, ...) is one
-``register()`` call in one file; decomposition, both selector modes,
-aggregation dispatch, and the benchmarks pick it up automatically.
-Registration order is meaningful: ``candidates()`` preserves it, and the
-selectors break cost ties in favor of earlier registrations.
+Adding a kernel (CSR, sell-C-sigma, another fused variant, ...) is one
+``register()`` call in one file — see kernels/csr.py for the one-file
+template; decomposition, both selector modes, aggregation dispatch, and the
+benchmarks pick it up automatically.  Registration order is meaningful:
+``candidates()`` preserves it, and the selectors break cost ties in favor of
+earlier registrations.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import jax
@@ -44,14 +65,27 @@ OFFDIAG = "offdiag"    # inter-community subgraph / density bucket
 class KernelSpec:
     name: str
     kinds: frozenset
-    build: Callable[[formats.COO, formats.COO, int], Any]
-    matvec: Callable[[Any, jax.Array], jax.Array]
-    cost: Callable[[Any, int, Any, Any], float]
+    build: Callable[[formats.COO, formats.COO, int, dict], Any] | None
+    matvec: Callable[[Any, jax.Array], jax.Array] | None
+    cost: Callable[[Any, Any, Any, Any], float]
     needs_transpose: bool = False   # build consumes coo_t (for the VJP)
+    matvec_acc: Callable[[Any, jax.Array, jax.Array], jax.Array] | None = None
+    fused_matvec: Callable[..., jax.Array] | None = None
+    fused_matvec_acc: Callable[..., jax.Array] | None = None
+    payload_of: str | None = None   # alias another kernel's format payload
     doc: str = ""
 
     def applies_to(self, kind: str) -> bool:
         return kind in self.kinds
+
+    @property
+    def fused(self) -> bool:
+        return self.fused_matvec is not None
+
+    @property
+    def payload_key(self) -> str:
+        """Key into Subgraph.formats holding this kernel's payload."""
+        return self.payload_of or self.name
 
 
 class KernelRegistry:
@@ -63,6 +97,10 @@ class KernelRegistry:
     def register(self, spec: KernelSpec) -> KernelSpec:
         if spec.name in self._specs:
             raise ValueError(f"kernel {spec.name!r} already registered")
+        if spec.payload_of is not None and spec.payload_of not in self._specs:
+            raise ValueError(
+                f"kernel {spec.name!r} aliases unregistered payload "
+                f"{spec.payload_of!r}")
         self._specs[spec.name] = spec
         return spec
 
@@ -77,14 +115,21 @@ class KernelRegistry:
     def names(self) -> tuple[str, ...]:
         return tuple(self._specs)
 
-    def candidates(self, kind: str) -> tuple[KernelSpec, ...]:
-        """Specs applicable to a subgraph kind, in registration order."""
-        return tuple(s for s in self._specs.values() if s.applies_to(kind))
+    def candidates(self, kind: str, include_fused: bool = False
+                   ) -> tuple[KernelSpec, ...]:
+        """Specs applicable to a subgraph kind, in registration order.
 
-    def candidates_for(self, sub) -> tuple[KernelSpec, ...]:
+        Fused specs are opt-in: they require the transform operand ``w`` at
+        dispatch time, so only transform-first call sites (GCN) enumerate
+        them."""
+        return tuple(s for s in self._specs.values()
+                     if s.applies_to(kind) and (include_fused or not s.fused))
+
+    def candidates_for(self, sub, include_fused: bool = False
+                       ) -> tuple[KernelSpec, ...]:
         """Specs whose format payload is materialized on this subgraph."""
-        return tuple(s for s in self.candidates(sub.kind)
-                     if s.name in sub.formats)
+        return tuple(s for s in self.candidates(sub.kind, include_fused)
+                     if s.payload_key in sub.formats)
 
     def __contains__(self, name: str) -> bool:
         return name in self._specs
@@ -106,6 +151,63 @@ def _bytes_el(dtype) -> int:
     return np.dtype(dtype).itemsize
 
 
+def _lane_pad(F: int) -> int:
+    return ((F + 127) // 128) * 128
+
+
+# ---------------------------------------------------------------------------
+# Per-bucket blocked-ELL tiling (chosen at build time from density stats)
+# ---------------------------------------------------------------------------
+
+def _bell_pick_block(coo: formats.COO, base_block: int) -> int:
+    """Blocked-ELL block size for one density bucket.
+
+    Candidates are multiples of the community size that still divide the
+    padded node count (so every bucket's output stays row-aligned with the
+    rest of the decomposition).  Score per candidate: ``K * sqrt(Bb)`` —
+    the geometric mean of the memory proxy (padded tile volume
+    ``nbr * K * Bb^2 = n * K * Bb``) and the MXU-efficiency proxy (the same
+    volume de-rated by the ``Bb/128`` sublane utilization, i.e. ``n*K*128``).
+    Merging neighbors into a fatter tile wins exactly when the bucket's
+    stored-block count collapses with it (dense block neighborhoods);
+    scattered buckets keep the small base block since K barely drops while
+    padding quadruples."""
+    n_pad = coo.n_rows
+    rows = np.asarray(jax.device_get(coo.rows))
+    cols = np.asarray(jax.device_get(coo.cols))
+    if len(rows) == 0:
+        return base_block
+    best, best_score = base_block, None
+    for mult in (1, 2, 4):
+        Bb = base_block * mult
+        if n_pad % Bb:
+            continue
+        nbc = n_pad // Bb
+        brow = rows // Bb
+        keys = np.unique(brow.astype(np.int64) * nbc + cols // Bb)
+        per_row = np.bincount(keys // nbc, minlength=n_pad // Bb)
+        K = max(int(per_row.max()), 1)
+        score = K * float(np.sqrt(Bb))
+        if best_score is None or score < best_score:
+            best, best_score = Bb, score
+    return best
+
+
+def _bell_f_cap(block_size: int) -> int:
+    """Feature-tile cap keeping the kernel's double-buffered VMEM working
+    set (adjacency tile + x tile + accumulator + output tile) near 4 MB."""
+    budget_floats = (4 << 20) // 4 // 2
+    cap = (budget_floats - block_size * block_size) // (3 * block_size)
+    return int(max(128, min(1024, (cap // 128) * 128)))
+
+
+def _bell_build(coo, coo_t, block_size, stats):
+    Bb = _bell_pick_block(coo, block_size)
+    cap = _bell_f_cap(Bb)
+    return (formats.coo_to_bell(coo, Bb, f_tile_cap=cap),
+            formats.coo_to_bell(coo_t, Bb, f_tile_cap=cap))
+
+
 # ---------------------------------------------------------------------------
 # Built-in kernels.  Cost formulae are the two-term roofline estimates that
 # used to live inline in core/selector.candidate_cost (paper §3.3's analytic
@@ -124,8 +226,8 @@ def _block_diag_cost(sub, feat_dim, dtype, hw) -> float:
 
 def _bell_cost(sub, feat_dim, dtype, hw) -> float:
     be = _bytes_el(dtype)
-    B = sub.block_size
     bl = sub.formats["bell"][0]
+    B = bl.block_size
     nblk = bl.n_brow * bl.max_blocks       # kernel executes padding too
     flops = 2.0 * nblk * B * B * feat_dim
     bytes_ = nblk * (B * B * be + B * feat_dim * be) + sub.n_rows * feat_dim * be
@@ -152,11 +254,55 @@ def _coo_cost(sub, feat_dim, dtype, hw) -> float:
                bytes_ / (hw.hbm_bw * hw.scatter_eff)) + hw.launch_overhead_s
 
 
+# Fused transform+aggregate costs.  ``feat_dim`` is the (in_dim, out_dim)
+# pair: the in-kernel transform prices the input width (the unfused
+# aggregation only ever sees out_dim); the selector adds the shared dense
+# transform's cost to *unfused* candidates when comparing (selector.py).
+
+def _block_diag_fused_cost(sub, feat_dims, dtype, hw) -> float:
+    fin, fout = feat_dims
+    be = _bytes_el(dtype)
+    B = sub.block_size
+    nb = sub.n_rows // B
+    ft = min(ops._fused_f_cap(B, _lane_pad(fin)), _lane_pad(fout))
+    njt = max(1, -(-_lane_pad(fout) // ft))
+    # transform runs once per row (same FLOPs as the standalone X @ W) plus
+    # the block contraction; H never round-trips HBM
+    flops = 2.0 * nb * B * (fin * fout + B * fout)
+    bytes_ = (nb * B * B * be                     # adjacency blocks
+              + sub.n_rows * fin * be * njt      # x re-read per output tile
+              + nb * fin * fout * be             # weight stripe per block
+              + sub.n_rows * fout * be)          # output
+    t = max(flops / (hw.peak_flops * hw.mxu_eff(B)), bytes_ / hw.hbm_bw)
+    return t + hw.launch_overhead_s
+
+
+def _bell_fused_cost(sub, feat_dims, dtype, hw) -> float:
+    fin, fout = feat_dims
+    be = _bytes_el(dtype)
+    bl = sub.formats["bell"][0]
+    B = bl.block_size
+    nblk = bl.n_brow * bl.max_blocks
+    ft = min(bl.f_tile_cap, ops._fused_f_cap(B, _lane_pad(fin)),
+             _lane_pad(fout))
+    njt = max(1, -(-_lane_pad(fout) // ft))
+    # the transform re-runs per *stored block* (recompute vs H round-trip
+    # trade: a source block referenced k times is transformed k times)
+    flops = 2.0 * nblk * B * (fin * fout + B * fout)
+    bytes_ = (nblk * B * B * be
+              + nblk * B * fin * be * njt        # gathered x per stored block
+              + nblk * fin * fout * be           # weight stripe per step
+              + sub.n_rows * fout * be)
+    t = max(flops / (hw.peak_flops * hw.mxu_eff(B)), bytes_ / hw.hbm_bw)
+    return t + hw.launch_overhead_s
+
+
 REGISTRY.register(KernelSpec(
     name="block_diag",
     kinds=frozenset({DIAG}),
-    build=lambda coo, coo_t, B: formats.coo_to_blockdiag(coo, B),
+    build=lambda coo, coo_t, B, stats: formats.coo_to_blockdiag(coo, B),
     matvec=lambda bd, x: ops.block_diag_matvec(bd.blocks, x),
+    matvec_acc=lambda bd, x, y: ops.block_diag_matvec_acc(bd.blocks, x, y),
     cost=_block_diag_cost,
     doc="dense (B,B) diagonal blocks on the MXU (paper's dense kernel)",
 ))
@@ -164,18 +310,19 @@ REGISTRY.register(KernelSpec(
 REGISTRY.register(KernelSpec(
     name="bell",
     kinds=frozenset({OFFDIAG}),
-    build=lambda coo, coo_t, B: (formats.coo_to_bell(coo, B),
-                                 formats.coo_to_bell(coo_t, B)),
+    build=_bell_build,
     matvec=lambda p, x: ops.bell_matvec(p[0], p[1], x),
+    matvec_acc=lambda p, x, y: ops.bell_matvec_acc(p[0], p[1], x, y),
     cost=_bell_cost,
     needs_transpose=True,
-    doc="blocked-ELL over (B,B) tiles; transpose materialized for the VJP",
+    doc="blocked-ELL over per-bucket (B,B) tiles; transpose materialized "
+        "for the VJP",
 ))
 
 REGISTRY.register(KernelSpec(
     name="ell",
     kinds=frozenset({DIAG, OFFDIAG}),
-    build=lambda coo, coo_t, B: formats.coo_to_ell(coo),
+    build=lambda coo, coo_t, B, stats: formats.coo_to_ell(coo),
     matvec=lambda ell, x: ops.ell_matvec(ell, x),
     cost=_ell_cost,
     doc="padded-neighbor gather (vertex-parallel CSR analogue)",
@@ -184,8 +331,39 @@ REGISTRY.register(KernelSpec(
 REGISTRY.register(KernelSpec(
     name="coo",
     kinds=frozenset({DIAG, OFFDIAG}),
-    build=lambda coo, coo_t, B: coo,
+    build=lambda coo, coo_t, B, stats: coo,
     matvec=lambda coo, x: ops.coo_matvec(coo, x),
     cost=_coo_cost,
     doc="edge-parallel segment-sum (scatter-add analogue)",
 ))
+
+REGISTRY.register(KernelSpec(
+    name="block_diag_fused",
+    kinds=frozenset({DIAG}),
+    build=None,
+    payload_of="block_diag",
+    matvec=None,
+    fused_matvec=lambda bd, x, w: ops.block_diag_fused_matvec(bd.blocks, x, w),
+    fused_matvec_acc=lambda bd, x, w, y:
+        ops.block_diag_fused_matvec_acc(bd.blocks, x, w, y),
+    cost=_block_diag_fused_cost,
+    doc="fused A @ (X W): weight stripe in VMEM, transform consumed by the "
+        "MXU block contraction without an HBM round-trip",
+))
+
+REGISTRY.register(KernelSpec(
+    name="bell_fused",
+    kinds=frozenset({OFFDIAG}),
+    build=None,
+    payload_of="bell",
+    matvec=None,
+    fused_matvec=lambda p, x, w: ops.bell_fused_matvec(p[0], p[1], x, w),
+    fused_matvec_acc=lambda p, x, w, y:
+        ops.bell_fused_matvec_acc(p[0], p[1], x, w, y),
+    cost=_bell_fused_cost,
+    doc="fused blocked-ELL A @ (X W); trades per-stored-block transform "
+        "recompute for the H round-trip",
+))
+
+# one-file kernel registrations (import side effect registers the spec)
+from repro.kernels import csr  # noqa: E402,F401

@@ -36,14 +36,23 @@ def dense_adj(g, vals):
 PAIRS = [(ik.name, ek.name) for ik in REGISTRY.candidates(DIAG)
          for ek in REGISTRY.candidates(OFFDIAG)]
 
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def cached_dec(k):
+    """One decomposition per bucket count, shared across the PAIRS sweep
+    (formats are read-only; rebuilding them per test is pure overhead)."""
+    g, vals = make_graph()
+    return g, vals, decompose.decompose(g, comm_size=8, method="bfs",
+                                        edge_vals=vals, inter_buckets=k)
+
 
 @pytest.mark.parametrize("k", [1, 2, 4])
 @pytest.mark.parametrize("ik,ek", PAIRS)
 def test_aggregate_matches_dense_fwd_and_grad(ik, ek, k, rng):
-    g, vals = make_graph()
+    g, vals, dec = cached_dec(k)
     a = dense_adj(g, vals)
-    dec = decompose.decompose(g, comm_size=8, method="bfs", edge_vals=vals,
-                              inter_buckets=k)
     x = rng.standard_normal((g.n, 5)).astype(np.float32)
     y_ref = a @ x
 

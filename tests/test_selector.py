@@ -64,13 +64,14 @@ def test_cost_model_coo_wins_at_extreme_sparsity():
 def test_feedback_commit_protocol():
     dec = make_dec(0.5)
     sel = selector.AdaptiveSelector(dec, warmup_iters=2)
-    # feed synthetic timings: make 'ell' fastest intra, 'coo' fastest inter
-    fake = {("intra", "block_diag"): 3e-3, ("intra", "ell"): 1e-4,
-            ("intra", "coo"): 2e-4, ("inter", "bell"): 5e-3,
-            ("inter", "ell"): 2e-4, ("inter", "coo"): 1e-4}
-    for (which, kern), t in fake.items():
-        for _ in range(2):
-            sel.observe(which, kern, t)
+    # feed synthetic timings for every registry candidate: make 'ell'
+    # fastest intra, 'coo' fastest inter
+    fastest = {"intra": "ell", "inter": "coo"}
+    for sub in dec.subgraphs:
+        for spec in REGISTRY.candidates_for(sub):
+            t = 1e-4 if spec.name == fastest[sub.name] else 3e-3
+            for _ in range(2):
+                sel.observe(sub.name, spec.name, t)
     assert sel.ready()
     assert sel.choice() == ("ell", "coo")
     # committed choice is sticky
@@ -113,5 +114,5 @@ def test_calibration_scales_model(rng):
     # calibrated model should predict the probed medians within ~100x
     # (CPU interpret-mode variance is huge; we check order of magnitude)
     t_est = selector.candidate_cost(dec.inters[0], "coo", 16, hw=hw)
-    t_obs = np.median(sel._times[("inter", "coo", 16)])
+    t_obs = np.median(sel._times[("inter", "coo", (0, 16))])
     assert t_est > 0 and 1e-3 < t_obs / t_est < 1e3

@@ -49,7 +49,9 @@ def test_feedback_selector_runs(citeseer):
     dec = gnn.prepare(citeseer, cfg)
     n_cand = 0
     for i, sub in enumerate(dec.subgraphs):
-        cands = [s.name for s in REGISTRY.candidates_for(sub)]
+        # GCN is transform-first, so fused candidates compete in the probe
+        cands = [s.name for s in REGISTRY.candidates_for(sub,
+                                                         include_fused=True)]
         n_cand += len(cands)
         for layer in res.kernels:
             assert layer[i] in cands
