@@ -24,7 +24,8 @@ def main() -> None:
 
     from benchmarks import (ablation_o123, common, density_analysis,
                             end_to_end, format_crossover, fused,
-                            granularity_baselines, memory_overhead, overhead)
+                            granularity_baselines, memory_overhead,
+                            minibatch, overhead)
 
     scale = 0.04 if args.quick else 0.08
     jobs = {
@@ -45,6 +46,9 @@ def main() -> None:
         "sec6_3_overhead": lambda: overhead.run(
             scale=0.05 if args.quick else 0.1,
             steps=10 if args.quick else 20),
+        "minibatch_sampling": lambda: minibatch.run(
+            scale=0.04 if args.quick else 0.05,
+            steps=15 if args.quick else 25),
         "fig12_memory_overhead": lambda: memory_overhead.run(),
     }
     only = set(args.only.split(",")) if args.only else None

@@ -1,0 +1,120 @@
+"""Perf-trend accumulator over the quick-bench machine-readable output.
+
+Folds a directory of ``BENCH_*.json`` (one CI run) into a rolling history
+file and renders a markdown trend table — the across-commits view the
+single-commit regression gate (check_regression.py) cannot give.  CI runs
+it right after the gate and uploads both artifacts; locally:
+
+  PYTHONPATH=src python -m benchmarks.run --quick --json bench-out
+  PYTHONPATH=src python -m benchmarks.trend bench-out \\
+      --history trend-history.json --commit $(git rev-parse HEAD) \\
+      --markdown trend.md
+
+History schema: ``{"entries": [{"commit", "time", "rows": {key: us}}]}``
+with one entry per commit (re-running a commit replaces its entry), capped
+at ``--max-entries``.  The markdown table shows the last ``--last`` commits
+as columns, one benchmark row per line, with the newest column annotated
+by its delta vs the previous commit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+
+from benchmarks.check_regression import load_rows
+
+
+def load_history(path: str) -> dict:
+    if path and os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+        if isinstance(doc.get("entries"), list):
+            return doc
+    return {"entries": []}
+
+
+def accumulate(history: dict, commit: str, rows: dict,
+               max_entries: int = 200, now: float | None = None) -> dict:
+    """Fold one run's rows into the history; keep the newest entries.
+
+    A commit already present is replaced *in place* (a CI re-run of an old
+    commit must not reorder the chronology — deltas compare each column to
+    the one before it); a new commit appends."""
+    entries = list(history.get("entries", []))
+    entry = dict(
+        commit=commit,
+        time=time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                           time.gmtime(now if now is not None else None)),
+        rows={k: round(v, 1) for k, v in sorted(rows.items())
+              if math.isfinite(v)})
+    slots = [i for i, e in enumerate(entries) if e.get("commit") == commit]
+    if slots:
+        entries[slots[0]] = entry
+        entries = [e for i, e in enumerate(entries)
+                   if i == slots[0] or e.get("commit") != commit]
+    else:
+        entries.append(entry)
+    return {"entries": entries[-max_entries:]}
+
+
+def _fmt_us(us: float | None) -> str:
+    return "-" if us is None else f"{us:.0f}"
+
+
+def markdown_table(history: dict, last: int = 10) -> str:
+    """One row per benchmark key, one column per commit (oldest first),
+    newest column annotated with its delta vs the previous commit."""
+    entries = history.get("entries", [])[-last:]
+    if not entries:
+        return "(no perf history)\n"
+    keys = sorted({k for e in entries for k in e["rows"]})
+    heads = [e["commit"][:9] for e in entries]
+    lines = ["# Perf trend (us_per_call)", "",
+             "| benchmark/row | " + " | ".join(heads) + " |",
+             "|---|" + "---|" * len(entries)]
+    for k in keys:
+        cells = [_fmt_us(e["rows"].get(k)) for e in entries]
+        if len(entries) >= 2:
+            cur = entries[-1]["rows"].get(k)
+            prev = entries[-2]["rows"].get(k)
+            if cur is not None and prev:
+                cells[-1] += f" ({(cur / prev - 1) * 100:+.0f}%)"
+        lines.append(f"| {k} | " + " | ".join(cells) + " |")
+    lines += ["", f"({len(history.get('entries', []))} commits tracked; "
+                  f"showing last {len(entries)})", ""]
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_dir", help="directory holding BENCH_*.json")
+    ap.add_argument("--history", default="trend-history.json",
+                    help="rolling JSON history file (read + rewritten)")
+    ap.add_argument("--commit", default="worktree",
+                    help="commit id labelling this run's column")
+    ap.add_argument("--markdown", default=None, metavar="PATH",
+                    help="also render the trend table to PATH")
+    ap.add_argument("--last", type=int, default=10,
+                    help="commits shown in the markdown table")
+    ap.add_argument("--max-entries", type=int, default=200)
+    args = ap.parse_args()
+
+    rows = load_rows(args.bench_dir)
+    history = accumulate(load_history(args.history), args.commit, rows,
+                         max_entries=args.max_entries)
+    with open(args.history, "w") as f:
+        json.dump(history, f, indent=1)
+        f.write("\n")
+    table = markdown_table(history, last=args.last)
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(table)
+    print(table)
+    print(f"history: {len(history['entries'])} entries -> {args.history}")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,29 @@ Architecture (data flow, one arrow per module boundary):
 
 Adding a kernel = one KernelSpec registration (name, kinds, format builder,
 matvec / fused_matvec, cost fn) in one file — kernels/csr.py is the
-template; decomposition, both selectors, dispatch, and the benchmarks pick
-it up with no further edits.
+template (kernels/sell_cs.py, the degree-sorted sell-C-sigma format, is a
+second instance); decomposition, both selectors, dispatch, and the
+benchmarks pick it up with no further edits.
+
+Mini-batch mode (graphs too large for full-batch; repro.sampling +
+train/gnn_steps.py) prepends a sampling stage and amortizes selection:
+
+  graphs.Graph
+      |  sampling.sampler: ClusterSampler (community blocks = the
+      |  decomposition's diagonal blocks, reusing the same orderings) or
+      |  NeighborSampler (layer-wise fanouts, loss on seeds only)
+      v
+  SampledBatch -- fixed node/edge budgets, masked loss: every batch is one
+      |           pytree shape, so the jitted step compiles once
+      |  core.decompose.decompose(reorder=False, keep_empty_buckets=True,
+      |  kernels=MB_KERNELS)   [per batch; budget-paddable formats only]
+      v
+  Decomposed (per batch)
+      |  sampling.plan_cache.PlanCache: quantized density signature
+      |  (per-tier log2-nnz + block-row occupancy) -> memoized KernelPlan;
+      |  cost-model selection on miss, steady-state steps skip selection
+      v
+  train.gnn_steps.make_sampled_step -- jit step(params, opt, dec, batch);
+  fix_shapes pads COO/CSR payloads to the edge budget and scrubs per-batch
+  stats so the traced Decomposed never changes structure (no retrace)
 """

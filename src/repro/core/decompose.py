@@ -196,15 +196,24 @@ def build_subgraph(name: str, kind: str, n_pad: int, block_size: int,
                        if s.build is not None and s.name in wanted]
     else:
         build_specs = [s for s in all_specs if s.build is not None]
-    coo = formats.coo_from_edges(n_pad, n_pad, rows, cols, vals)
-    # the transpose is only materialized when a candidate's VJP needs it
-    coo_t = (formats.coo_from_edges(n_pad, n_pad, cols, rows, vals)
-             if any(s.needs_transpose for s in build_specs) else None)
     nnz = len(rows)
     denom = (n_pad * block_size if kind == DIAG else n_pad * n_pad)
-    stats = dict(nnz=nnz, density=nnz / max(denom, 1))
-    fmts = {s.name: s.build(coo, coo_t, block_size, stats)
-            for s in build_specs}
+    n_brow = max(n_pad // block_size, 1)
+    occ = (len(np.unique(np.asarray(rows) // block_size)) / n_brow
+           if nnz else 0.0)
+    stats = dict(nnz=nnz, density=nnz / max(denom, 1),
+                 brow_occupancy=occ)
+    if build_specs:
+        coo = formats.coo_from_edges(n_pad, n_pad, rows, cols, vals)
+        # the transpose is only materialized when a candidate's VJP needs it
+        coo_t = (formats.coo_from_edges(n_pad, n_pad, cols, rows, vals)
+                 if any(s.needs_transpose for s in build_specs) else None)
+        fmts = {s.name: s.build(coo, coo_t, block_size, stats)
+                for s in build_specs}
+    else:
+        # stats-only subgraph (kernels=()): the mini-batch hot path checks
+        # the PlanCache before materializing any format
+        fmts = {}
     stats["kernels"] = tuple(s.name for s in all_specs
                              if s.payload_key in fmts)
     return Subgraph(
@@ -213,12 +222,21 @@ def build_subgraph(name: str, kind: str, n_pad: int, block_size: int,
 
 
 def _bucket_inter(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-                  n_brow: int, block_size: int, k: int) -> list[tuple]:
+                  n_brow: int, block_size: int, k: int,
+                  keep_empty: bool = False) -> list[tuple]:
     """Partition inter edges into <=k tiers by destination block-row
     occupancy (sparsest tier first).  Tiers that receive no edges are
-    dropped; k=1 (or an empty edge set) is the identity partition."""
-    if k <= 1 or len(rows) == 0:
-        return [(rows, cols, vals)]
+    dropped; k=1 (or an empty edge set) is the identity partition.
+
+    ``keep_empty`` keeps empty tiers (as zero-edge entries) so the result
+    always has exactly ``k`` buckets — the mini-batch path needs a fixed
+    subgraph count across sampled batches so jitted steps never retrace."""
+    if len(rows) == 0 or k <= 1:
+        out = [(rows, cols, vals)]
+        if keep_empty:
+            empty = (rows[:0], cols[:0], vals[:0])
+            out += [empty] * (k - len(out))
+        return out
     brow = rows // block_size
     row_nnz = np.bincount(brow, minlength=n_brow)
     occupied = row_nnz[row_nnz > 0]
@@ -230,7 +248,7 @@ def _bucket_inter(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     out = []
     for t in range(k):
         m = tier == t
-        if m.any():
+        if keep_empty or m.any():
             out.append((rows[m], cols[m], vals[m]))
     return out or [(rows, cols, vals)]
 
@@ -238,7 +256,8 @@ def _bucket_inter(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
 def decompose(graph: Graph, comm_size: int = 16, method: str = "bfs",
               edge_vals: np.ndarray | None = None,
               reorder: bool = True, inter_buckets: int = 1,
-              kernels: Sequence[str] | None = None) -> Decomposed:
+              kernels: Sequence[str] | None = None,
+              keep_empty_buckets: bool = False) -> Decomposed:
     """AG.graph_decompose equivalent (paper Fig. 7 line 19).
 
     1. community reordering (METIS-equivalent),
@@ -247,6 +266,10 @@ def decompose(graph: Graph, comm_size: int = 16, method: str = "bfs",
     3. materialize candidate formats for each subgraph via the kernel
        registry.
     Aggregation convention: rows = receivers (dst), cols = senders (src).
+
+    ``keep_empty_buckets`` pins the bucket count at exactly
+    ``inter_buckets`` (empty tiers included) so repeated per-batch
+    decompositions share one pytree structure (sampling/plan_cache.py).
     """
     n, B = graph.n, comm_size
     effective = method
@@ -271,7 +294,7 @@ def decompose(graph: Graph, comm_size: int = 16, method: str = "bfs",
     subs = [build_subgraph("intra", DIAG, n_pad, B, r_in, c_in, v_in,
                            kernels=kernels)]
     buckets = _bucket_inter(r_out, c_out, v_out, n_pad // B, B,
-                            inter_buckets)
+                            inter_buckets, keep_empty=keep_empty_buckets)
     for t, (rb, cb, vb) in enumerate(buckets):
         name = "inter" if len(buckets) == 1 else f"inter{t}"
         subs.append(build_subgraph(name, OFFDIAG, n_pad, B, rb, cb, vb,

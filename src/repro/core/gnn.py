@@ -42,6 +42,13 @@ class GNNConfig:
     fixed_kernels: tuple = ("block_diag", "bell")
     warmup_iters: int = 2
     seed: int = 0
+    # --- mini-batch sampling (train/gnn_steps.py; "full" = whole graph) ---
+    sampler: str = "full"         # full | cluster | neighbor
+    clusters_per_batch: int = 8   # cluster: batch = q community blocks
+    batch_nodes: int = 128        # neighbor: loss-carrying seeds per batch
+    fanouts: tuple = (8, 4)       # neighbor: per-layer in-neighbor caps
+    edge_budget: int = 0          # cluster: padded edge slots (0 = auto)
+    cache_entries: int = 128      # PlanCache LRU bound
 
 
 def prepare(graph: graph_mod.Graph, cfg: GNNConfig) -> dec_mod.Decomposed:
@@ -249,8 +256,20 @@ def select_plan(dec: dec_mod.Decomposed, cfg: GNNConfig,
 
 
 def train(graph: graph_mod.Graph, cfg: GNNConfig, steps: int = 50,
-          verbose: bool = False) -> TrainResult:
-    """Full training driver with the paper's feedback selection protocol."""
+          verbose: bool = False):
+    """Full training driver with the paper's feedback selection protocol.
+
+    ``cfg.sampler != "full"`` switches to mini-batch sampled-subgraph
+    training (train/gnn_steps.py: Graph -> Sampler -> SampledBatch ->
+    decompose -> PlanCache -> jitted step) and returns its
+    MinibatchResult instead of a TrainResult.  There ``fixed`` selection
+    is honored per batch, while ``feedback`` and ``cost_model`` both
+    resolve to cached cost-model selection (per-batch wall-clock probing
+    cannot amortize over fresh subgraphs — see train_minibatch)."""
+    if cfg.sampler != "full":
+        from repro.train import gnn_steps   # lazy: avoids an import cycle
+        return gnn_steps.train_minibatch(graph, cfg, steps=steps,
+                                         verbose=verbose)
     t0 = time.perf_counter()
     dec = prepare(graph, cfg)
     t_pre = time.perf_counter() - t0

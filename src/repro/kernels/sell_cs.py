@@ -1,0 +1,133 @@
+"""Sell-C-sigma (sliced-ELL, row-sorted) aggregation kernel — one-file
+registration following kernels/csr.py.
+
+Sell-C-sigma (Kreutzer et al., SIAM J. Sci. Comput. 2014) fixes ELL's
+pathology on scale-free degree skew — exactly the profile neighbor-sampled
+batches and power-law inter tiers produce: ELL pads *every* row to the
+global max degree, so one hub row inflates the whole tensor.  Sell-C-sigma
+sorts rows by degree inside windows of ``sigma`` rows, slices the sorted
+rows into chunks of ``C``, and pads each chunk only to its *local* max
+degree: hubs share a fat chunk, leaves share skinny ones, and the stored
+slot count P = sum_c C * maxdeg_c collapses toward nnz.
+
+TPU/XLA analogue of the vectorized row-major kernel: the chunk-padded
+slots flatten to one (P,) gather + a *sorted* segment-sum over the
+degree-sorted row index (slots are emitted chunk-major, so segment ids are
+nondecreasing — gather-efficiency class, like ELL/CSR, never scatter
+class), followed by a single (n,) gather that undoes the row sort.
+Natively differentiable, same as CSR.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import formats
+from repro.kernels.registry import DIAG, OFFDIAG, REGISTRY, KernelSpec
+
+CHUNK = 8          # C: rows per chunk (sublane-friendly)
+SIGMA_CHUNKS = 8   # sigma = SIGMA_CHUNKS * C rows per sort window
+
+
+@dataclass(frozen=True)
+class SellCS:
+    """Chunk-padded slices of the degree-sorted matrix, flattened."""
+    n_rows: int = dataclasses.field(metadata=dict(static=True))
+    n_cols: int = dataclasses.field(metadata=dict(static=True))
+    chunk: int = dataclasses.field(metadata=dict(static=True))
+    sigma: int = dataclasses.field(metadata=dict(static=True))
+    indices: Any = None   # (P,) int32 source (column) ids, 0 where padded
+    vals: Any = None      # (P,) float, 0 where padded
+    srow: Any = None      # (P,) int32 degree-sorted row index, nondecreasing
+    rank: Any = None      # (n_rows,) int32: row id -> degree-sorted position
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.indices.shape[0])
+
+
+jax.tree_util.register_dataclass(
+    SellCS, ["indices", "vals", "srow", "rank"],
+    ["n_rows", "n_cols", "chunk", "sigma"])
+
+
+def coo_to_sell(coo: formats.COO, chunk: int = CHUNK,
+                sigma: int | None = None) -> SellCS:
+    """Host-side builder: degree-sort within sigma windows, chunk, pad each
+    chunk to its local max degree, flatten chunk-major.  Fully vectorized
+    (this runs inside every eager decompose; a per-row Python loop would
+    dominate preprocessing on large graphs)."""
+    n = coo.n_rows
+    sigma = sigma or chunk * SIGMA_CHUNKS
+    rows = np.asarray(jax.device_get(coo.rows))
+    cols = np.asarray(jax.device_get(coo.cols))
+    vals = np.asarray(jax.device_get(coo.vals))
+    if rows.size and np.any(np.diff(rows) < 0):   # builder needs row-sorted
+        edge_order = np.argsort(rows, kind="stable")
+        rows, cols, vals = rows[edge_order], cols[edge_order], vals[edge_order]
+    deg = np.bincount(rows, minlength=n)
+    # stable degree sort inside each sigma window (lexsort: window id is
+    # the primary key, so the community ordering survives across windows)
+    window = np.arange(n) // sigma
+    order = np.lexsort((np.arange(n), -deg, window))
+    rank = np.empty(n, np.int64)
+    rank[order] = np.arange(n)
+    # chunk-local widths; each sorted row owns w[its chunk] slots, laid out
+    # row-major per chunk (consecutive sorted rows -> consecutive slots)
+    n_ch = -(-n // chunk)
+    deg_sorted = np.zeros(n_ch * chunk, np.int64)
+    deg_sorted[:n] = deg[order]
+    w = deg_sorted.reshape(n_ch, chunk).max(axis=1)
+    slots_per_row = np.repeat(w, chunk)[:n]
+    row_off = np.zeros(n + 1, np.int64)
+    np.cumsum(slots_per_row, out=row_off[1:])
+    P = int(row_off[-1])
+    # per-edge slot index: position within its (row-sorted) row
+    indptr = np.zeros(n + 1, np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    slot = np.arange(len(rows), dtype=np.int64) - indptr[rows]
+    flat = row_off[rank[rows]] + slot
+    indices = np.zeros(P, np.int32)
+    out_vals = np.zeros(P, np.float32)
+    indices[flat] = cols
+    out_vals[flat] = vals
+    srow = np.repeat(np.arange(n, dtype=np.int32), slots_per_row)
+    return SellCS(n, coo.n_cols, chunk, sigma,
+                  jnp.asarray(indices), jnp.asarray(out_vals),
+                  jnp.asarray(srow), jnp.asarray(rank.astype(np.int32)))
+
+
+def sell_matvec(p: SellCS, x: jax.Array) -> jax.Array:
+    """Y = A @ x: flat gather over the chunk-padded slots, sorted segment
+    reduce in degree order, then one gather back to row order."""
+    msgs = x[p.indices] * p.vals[:, None]
+    y_sorted = jax.ops.segment_sum(msgs, p.srow, num_segments=p.n_rows,
+                                   indices_are_sorted=True)
+    return y_sorted[p.rank].astype(x.dtype)
+
+
+def _sell_cost(sub, feat_dim, dtype, hw) -> float:
+    be = np.dtype(dtype).itemsize
+    P = sub.formats["sell_cs"].n_slots      # nnz + chunk-local padding only
+    n = sub.n_rows
+    flops = 2.0 * P * feat_dim
+    # padded-slot gather + slot metadata + output write + un-sort gather
+    bytes_ = P * (feat_dim * be + 8) + 2.0 * n * feat_dim * be
+    return max(flops / hw.peak_flops,
+               bytes_ / (hw.hbm_bw * hw.gather_eff)) + hw.launch_overhead_s
+
+
+REGISTRY.register(KernelSpec(
+    name="sell_cs",
+    kinds=frozenset({DIAG, OFFDIAG}),
+    build=lambda coo, coo_t, B, stats: coo_to_sell(coo),
+    matvec=sell_matvec,
+    cost=_sell_cost,
+    doc="sell-C-sigma: degree-sorted chunk-padded slices (scale-free skew; "
+        "pads to chunk-local max degree instead of ELL's global max)",
+))

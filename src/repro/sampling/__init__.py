@@ -1,0 +1,30 @@
+"""Mini-batch sampled-subgraph training (beyond-paper subsystem).
+
+Full-batch AdaptGear exercises kernel selection against one static density
+profile.  Sampling makes every training step a fresh density distribution —
+exactly the regime where the paper's §4 dynamic selection has to be
+*amortized* rather than recomputed:
+
+  graphs.Graph
+      |  sampling.sampler (ClusterSampler | NeighborSampler)
+      v
+  SampledBatch -- fixed-shape padded node/edge budgets (masked loss), so
+      |            every batch shares one pytree structure and the jitted
+      |            step compiles once
+      |  core.decompose.decompose(reorder=False, keep_empty_buckets=True)
+      v
+  Decomposed (per batch)
+      |  sampling.plan_cache.PlanCache -- quantized density signature ->
+      |  memoized KernelPlan (cost-model selection on miss, reuse on hit)
+      v
+  train.gnn_steps.make_sampled_step -- jit step(params, opt, dec, batch)
+"""
+from repro.sampling.sampler import (ClusterSampler, NeighborSampler,
+                                    SampledBatch)
+from repro.sampling.plan_cache import (MB_KERNELS, PlanCache,
+                                       density_signature, fix_shapes,
+                                       plan_payload_keys)
+
+__all__ = ["ClusterSampler", "NeighborSampler", "SampledBatch",
+           "PlanCache", "MB_KERNELS", "density_signature", "fix_shapes",
+           "plan_payload_keys"]

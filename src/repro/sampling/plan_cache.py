@@ -1,0 +1,261 @@
+"""PlanCache: amortized per-batch kernel selection + fixed-shape payloads.
+
+Every sampled batch is a fresh graph, so the paper's dynamic selection
+(§4) would re-run per step.  Two observations make it amortizable:
+
+* Batches drawn from one sampler are *statistically* alike: quantizing
+  each tier's density statistics (log2-bucketed nnz, binned block-row
+  occupancy) collapses the stream of per-batch decompositions onto a
+  handful of :func:`density_signature` keys.  :class:`PlanCache` memoizes
+  the cost-model-selected :class:`KernelPlan` per key — selection runs on
+  a miss, steady-state steps reuse the committed plan (LRU-bounded).
+
+* The jitted train step must not retrace, so the per-batch ``Decomposed``
+  it consumes must present one pytree structure: :func:`fix_shapes` pads
+  every COO/CSR payload to the sampler's edge budget (zero-valued edges
+  in the last row keep the math and the sorted-segment invariant intact)
+  and scrubs the per-batch ``stats`` dicts out of the static metadata
+  (they differ per batch and are unhashable, either of which would force
+  a retrace).  Only budget-paddable formats are materialized per batch —
+  ``MB_KERNELS`` — which is why mini-batch decomposition runs with
+  ``decompose(kernels=MB_KERNELS, keep_empty_buckets=True)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import OrderedDict
+
+import jax
+import numpy as np
+
+from repro.core import formats, selector as sel_mod
+from repro.core.decompose import Decomposed
+from repro.core.plan import KernelPlan
+from repro.kernels.registry import REGISTRY
+
+# Kernels whose payloads have budget-independent or budget-paddable shapes:
+# BlockDiag is (n/B, B, B) for any batch, COO/CSR pad to the edge budget.
+# (ELL / blocked-ELL widths are data-dependent — max degree, stored-block
+# count — so they stay full-batch-only.)  Fused block_diag aliases the
+# block_diag payload, so GCN's transform-first layers keep fused candidates.
+MB_KERNELS = ("block_diag", "block_diag_fused", "coo", "csr")
+
+
+# ---------------------------------------------------------------------------
+# Fixed-shape padding
+# ---------------------------------------------------------------------------
+
+def _padded(arr, budget: int, fill) -> np.ndarray:
+    """Host-side pad-to-budget (numpy on purpose: a jnp.concatenate here
+    would compile one executable per novel nnz, every batch)."""
+    a = np.asarray(jax.device_get(arr))
+    out = np.full((budget,), fill, a.dtype)
+    out[: len(a)] = a
+    return out
+
+
+def _pad_coo(coo: formats.COO, budget: int) -> formats.COO:
+    nnz = int(coo.rows.shape[0])
+    if nnz > budget:
+        raise ValueError(f"COO nnz {nnz} exceeds edge budget {budget}")
+    if nnz == budget:
+        return coo
+    # padded edges live in the last row (keeps rows sorted for the cheap
+    # segment_sum mode) with val 0 (keeps the sum exact)
+    return formats.COO(coo.n_rows, coo.n_cols,
+                       _padded(coo.rows, budget, coo.n_rows - 1),
+                       _padded(coo.cols, budget, 0),
+                       _padded(coo.vals, budget, 0.0))
+
+
+def _pad_csr(csr: formats.CSR, budget: int) -> formats.CSR:
+    nnz = int(csr.indices.shape[0])
+    if nnz > budget:
+        raise ValueError(f"CSR nnz {nnz} exceeds edge budget {budget}")
+    if nnz == budget:
+        return csr
+    # bump only the terminal pointer: the pad entries land in the last
+    # row's segment, where their zero vals vanish
+    indptr = np.asarray(jax.device_get(csr.indptr)).copy()
+    indptr[-1] = budget
+    return formats.CSR(csr.n_rows, csr.n_cols, indptr,
+                       _padded(csr.indices, budget, 0),
+                       _padded(csr.vals, budget, 0.0))
+
+
+def _pad_payload(name: str, payload, budget: int):
+    if isinstance(payload, formats.COO):
+        return _pad_coo(payload, budget)
+    if isinstance(payload, formats.CSR):
+        return _pad_csr(payload, budget)
+    if isinstance(payload, formats.BlockDiag):
+        return payload                      # shape fixed by (n_pad, B)
+    raise TypeError(
+        f"payload {name!r} ({type(payload).__name__}) has no fixed-shape "
+        f"padding; mini-batch decomposition must use kernels={MB_KERNELS}")
+
+
+def fix_shapes(dec: Decomposed, edge_budget: int,
+               keep: frozenset | set | None = None) -> Decomposed:
+    """Pad every payload to the edge budget and scrub per-batch stats.
+
+    The result is safe to pass *as an argument* to a jitted step: across
+    batches from one sampler it always has the same treedef, the same
+    static metadata, and the same leaf ShapeDtypeStructs.
+
+    ``keep`` optionally restricts to the payload keys a committed plan
+    dispatches (see :func:`plan_payload_keys`) so unused candidate formats
+    are not padded and shipped through the jit boundary every step; it
+    must be derived from the plan alone, so batches sharing a step
+    function keep one treedef.
+    """
+    subs = tuple(
+        dataclasses.replace(
+            s, stats=None,
+            formats={k: _pad_payload(k, p, edge_budget)
+                     for k, p in s.formats.items()
+                     if keep is None or k in keep})
+        for s in dec.subgraphs)
+    return dataclasses.replace(dec, subgraphs=subs, stats=None)
+
+
+def plan_payload_keys(plan) -> frozenset:
+    """Payload keys a KernelPlan actually dispatches (fused kernels alias
+    their unfused payload) — the ``keep`` set for :func:`fix_shapes`."""
+    return frozenset(REGISTRY.get(k).payload_key
+                     for layer in plan.layers for k in layer)
+
+
+# ---------------------------------------------------------------------------
+# Density signature + cache
+# ---------------------------------------------------------------------------
+
+def density_signature(dec: Decomposed, nnz_log2_step: float = 2.0,
+                      occ_bins: int = 2) -> tuple:
+    """Quantized per-tier density histogram — the PlanCache key.
+
+    Per tier: (kind, round(log2(nnz+1)/step), ceil(occupancy * bins)).
+    Coarse on purpose: batches from one sampler differ by sampling noise,
+    not by regime, and the cost-model argmin is flat across a density
+    decade — finer keys only manufacture misses (hit rate is the product
+    being bought; tighten the steps if a workload's crossovers are sharp).
+    """
+    tiers = tuple(
+        (s.kind,
+         int(round(math.log2(s.stats["nnz"] + 1) / nnz_log2_step)),
+         int(math.ceil(s.stats.get("brow_occupancy", 0.0) * occ_bins)))
+        for s in dec.subgraphs)
+    return (dec.n_pad, dec.block_size, tiers)
+
+
+class PlanCache:
+    """signature -> KernelPlan memo with cost-model selection on miss.
+
+    ``width_pairs`` are the per-layer ``(in_dim, agg_dim)`` pairs from
+    :func:`repro.core.gnn.agg_width_pairs` (ints accepted, meaning no
+    transform-first fusion); they are fixed per cache instance, so they
+    are part of the cache's identity rather than of each key.
+
+    Lookup is two-stage.  The quantized signature is the exact key; on a
+    key miss, cached *anchors* (the raw per-tier stats that minted each
+    entry) are scanned for a batch within half a quantization cell on
+    every tier — batches straddling a cell boundary flap between two
+    signatures forever, and without this they would re-run selection on
+    every flap.  A near-match reuses the anchor's plan and aliases the
+    new signature to it, so either stage skips selection (both count
+    toward ``hit_rate``); only a genuine miss selects.
+    """
+
+    def __init__(self, width_pairs, dtype=np.float32,
+                 hw: sel_mod.HwModel | None = None,
+                 nnz_log2_step: float = 2.0, occ_bins: int = 2,
+                 max_entries: int = 128):
+        self.pairs = [(None, w) if isinstance(w, int) else tuple(w)
+                      for w in width_pairs]
+        self.dtype = dtype
+        self.hw = hw or sel_mod.default_hw()
+        self.nnz_log2_step = nnz_log2_step
+        self.occ_bins = occ_bins
+        self.max_entries = max_entries
+        # signature -> (plan, anchor); anchor = raw (kind, log2 nnz, occ)
+        # per tier of the decomposition that minted (or aliased) the entry
+        self._entries: OrderedDict[tuple, tuple] = OrderedDict()
+        self.hits = 0
+        self.near_hits = 0
+        self.misses = 0
+
+    def signature(self, dec: Decomposed) -> tuple:
+        return density_signature(dec, self.nnz_log2_step, self.occ_bins)
+
+    @staticmethod
+    def _anchor(dec: Decomposed) -> tuple:
+        return tuple((s.kind, math.log2(s.stats["nnz"] + 1),
+                      s.stats.get("brow_occupancy", 0.0))
+                     for s in dec.subgraphs)
+
+    def _near(self, a: tuple, b: tuple) -> bool:
+        """Within half a quantization cell on every tier."""
+        if len(a) != len(b):
+            return False
+        return all(ka == kb
+                   and abs(la - lb) <= self.nnz_log2_step / 2
+                   and abs(oa - ob) <= 0.5 / self.occ_bins
+                   for (ka, la, oa), (kb, lb, ob) in zip(a, b))
+
+    def select(self, dec: Decomposed) -> KernelPlan:
+        """Uncached cost-model selection (what every step would pay
+        without the cache — the benchmark's 'uncached' row)."""
+        layers = [sel_mod.select_by_cost_model(dec, fout, self.dtype,
+                                               hw=self.hw, in_dim=fin)
+                  for fin, fout in self.pairs]
+        return KernelPlan.make(dec, layers)
+
+    def _store(self, sig: tuple, plan: KernelPlan, anchor: tuple) -> None:
+        self._entries[sig] = (plan, anchor)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
+    def lookup(self, dec: Decomposed) -> KernelPlan | None:
+        """Resident plan for the batch's density signature, or None.
+
+        Works on a *stats-only* decomposition (``decompose(kernels=())``):
+        both the signature and the anchor read tier stats, never payloads
+        — so the hot loop can check the cache before building any format,
+        and on a hit materialize only the committed plan's payloads.
+        Counts hits/near-hits; a failed lookup is not yet a miss (the
+        caller decides whether to select).
+        """
+        sig = self.signature(dec)
+        entry = self._entries.get(sig)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(sig)
+            return entry[0]
+        anchor = self._anchor(dec)
+        for plan, a in reversed(self._entries.values()):   # newest first
+            if self._near(anchor, a):
+                self.near_hits += 1
+                self._store(sig, plan, a)   # alias the boundary cell
+                return plan
+        return None
+
+    def plan_for(self, dec: Decomposed) -> tuple[KernelPlan, bool]:
+        """(plan, hit): memoized plan for the batch's density signature;
+        ``hit`` is True whenever selection was skipped.  ``dec`` must
+        carry candidate payloads (selection validates against them) —
+        the two-phase hot path uses :meth:`lookup` first instead."""
+        plan = self.lookup(dec)
+        if plan is not None:
+            return plan, True
+        self.misses += 1
+        plan = self.select(dec)
+        self._store(self.signature(dec), plan, self._anchor(dec))
+        return plan, False
+
+    @property
+    def stats(self) -> dict:
+        total = self.hits + self.near_hits + self.misses
+        return dict(hits=self.hits, near_hits=self.near_hits,
+                    misses=self.misses, entries=len(self._entries),
+                    hit_rate=(self.hits + self.near_hits) / max(total, 1))

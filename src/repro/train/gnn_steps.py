@@ -1,0 +1,236 @@
+"""Mini-batch GNN training: sampled subgraphs through the AdaptGear stack.
+
+Per step (host side): sample a fixed-shape :class:`SampledBatch`, run the
+paper's decomposition on the sampled subgraph, look its quantized density
+signature up in the :class:`PlanCache` (cost-model selection on miss), pad
+the payloads to the budgets, and feed the jitted step.  The step function
+is keyed by the committed :class:`KernelPlan` (kernel choices are static
+dispatch); batches sharing a plan share one compiled step, and because
+every batch presents identical ShapeDtypeStructs the step never retraces
+after its first compile.
+
+The loop mirrors :func:`repro.core.gnn.train` (same models, same Adam, same
+masked cross-entropy — here masked to the batch's target nodes) but over
+``steps`` sampled batches instead of one full graph.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import decompose as dec_mod, gnn, selector as sel_mod
+from repro.core.plan import KernelPlan
+from repro.graphs import graph as graph_mod
+from repro.sampling.plan_cache import (MB_KERNELS, PlanCache, fix_shapes,
+                                       plan_payload_keys)
+from repro.sampling.sampler import (ClusterSampler, NeighborSampler,
+                                    SampledBatch)
+
+
+def make_sampler(graph: graph_mod.Graph, cfg: gnn.GNNConfig):
+    """Sampler from the GNNConfig knobs (cfg.sampler: cluster | neighbor).
+    Cluster blocks are the decomposition's community size, so per-batch
+    ``decompose(reorder=False)`` sees cluster-aligned diagonal blocks."""
+    if cfg.sampler == "cluster":
+        return ClusterSampler(
+            graph, block=cfg.comm_size,
+            clusters_per_batch=cfg.clusters_per_batch, method=cfg.reorder,
+            edge_budget=cfg.edge_budget or None, seed=cfg.seed)
+    if cfg.sampler == "neighbor":
+        return NeighborSampler(
+            graph, batch_nodes=cfg.batch_nodes, fanouts=cfg.fanouts,
+            method=cfg.reorder, block=cfg.comm_size, seed=cfg.seed)
+    raise ValueError(f"unknown sampler {cfg.sampler!r} "
+                     "(expected 'cluster' or 'neighbor')")
+
+
+def prepare_batch(batch: SampledBatch, cfg: gnn.GNNConfig,
+                  kernels: tuple = MB_KERNELS
+                  ) -> tuple[dec_mod.Decomposed, np.ndarray]:
+    """Per-batch preprocessing: (GCN: self-loops + symmetric norm, over the
+    *sampled* subgraph) then the paper's decomposition with a pinned bucket
+    count and the budget-paddable kernel set.  Returns the decomposition
+    (real, un-padded stats — what selection and the signature read) and the
+    batch's inverse in-degree (SAGE's mean aggregator).
+
+    ``kernels=()`` gives a stats-only decomposition (no format payloads) —
+    enough for a PlanCache lookup; on a hit the hot loop re-runs this with
+    just the committed plan's kernels, so cache-hit steps never build the
+    candidate formats selection would have compared."""
+    s, r = batch.real_edges()
+    vals = None
+    if cfg.model == "gcn":
+        loops = batch.node_mask.nonzero()[0].astype(np.int32)
+        s = np.concatenate([s, loops])
+        r = np.concatenate([r, loops])
+        vals = graph_mod.gcn_norm_values(batch.n, s, r)
+    g = graph_mod.Graph(batch.n, s, r, batch.features, batch.labels,
+                        n_classes=1, name="batch")
+    dec = dec_mod.decompose(
+        g, comm_size=cfg.comm_size, reorder=False,
+        inter_buckets=max(cfg.inter_buckets, 1), edge_vals=vals,
+        kernels=kernels, keep_empty_buckets=True)
+    deg = np.bincount(r, minlength=batch.n).astype(np.float32)
+    inv_deg = np.where(batch.node_mask, 1.0 / np.maximum(deg, 1.0), 0.0)
+    return dec, inv_deg.astype(np.float32)
+
+
+def make_sampled_step(cfg: gnn.GNNConfig, plan, counters: dict):
+    """jit step(params, opt, dec, x, labels, target_mask, inv_deg).
+
+    ``dec`` is a *traced argument* (unlike the full-batch step, which
+    closes over its static decomposition): its payload arrays change every
+    batch while its structure — after :func:`fix_shapes` — does not.
+    ``counters['traces']`` increments once per retrace, making the
+    no-retrace contract observable by tests and benchmarks."""
+
+    def step(params, opt, dec, x, labels, target_mask, inv_deg):
+        counters["traces"] += 1
+        loss, grads = jax.value_and_grad(gnn._loss)(
+            params, cfg, dec, x, labels, target_mask, plan, inv_deg)
+        new_params, new_opt = gnn._adam_update(params, grads, opt, cfg.lr)
+        return new_params, new_opt, loss
+
+    return jax.jit(step)
+
+
+@dataclass
+class MinibatchResult:
+    losses: list
+    accuracy: float
+    cache: dict                  # PlanCache.stats snapshot
+    hit_history: list            # per-step cache hit booleans
+    plans: list                  # distinct plan layer tuples, first-seen order
+    n_traces: int                # total jit traces across all step fns
+    step_seconds: float          # median jitted-step wall time (post-compile)
+    sample_seconds: float        # median sampler time per batch
+    prepare_seconds: float       # median decompose+select+pad time per batch
+    dropped_edges: int           # edges truncated by the budget, total
+    plan_cache: Any = None
+
+    def hit_rate(self, warmup: int = 0) -> float:
+        h = self.hit_history[warmup:]
+        return sum(h) / max(len(h), 1)
+
+
+def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
+                    steps: int = 50, verbose: bool = False,
+                    eval_batches: int = 4,
+                    plan_cache: PlanCache | None = None) -> MinibatchResult:
+    """Mini-batch driver: Graph -> Sampler -> SampledBatch -> decompose ->
+    PlanCache -> jitted step, with per-phase timing and cache accounting.
+
+    Selector modes: ``fixed`` is honored (the configured kernels dispatch
+    every batch, no cache needed — they must be budget-paddable, e.g.
+    ``("block_diag", "coo")``); ``feedback`` and ``cost_model`` both
+    select analytically through the PlanCache — per-batch wall-clock
+    probing cannot amortize over a stream of fresh subgraphs (probing on
+    Nth miss is a ROADMAP item)."""
+    if cfg.model not in ("gcn", "gin", "sage"):
+        raise ValueError(f"mini-batch training supports gcn/gin/sage, "
+                         f"not {cfg.model!r}")
+    fixed_names = (tuple(cfg.fixed_kernels) if cfg.selector == "fixed"
+                   else None)
+    sampler = make_sampler(graph, cfg)
+    in_dim = graph.features.shape[-1]
+    pairs = gnn.agg_width_pairs(cfg, in_dim, graph.n_classes)
+    cache = plan_cache or PlanCache(pairs, dtype=np.float32,
+                                    hw=sel_mod.default_hw(),
+                                    max_entries=cfg.cache_entries)
+    # total budget the padded payloads see: sampled edges + GCN self-loops
+    pad_budget = sampler.edge_budget + (sampler.node_budget
+                                        if cfg.model == "gcn" else 0)
+
+    key = jax.random.PRNGKey(cfg.seed)
+    params = gnn.init_model(key, cfg, in_dim, graph.n_classes)
+    opt = gnn._adam_init(params)
+
+    def plan_and_fix(batch):
+        """Two-phase prepare: stats-only decomposition for the cache
+        lookup; payloads built only for the committed plan on a hit (the
+        full candidate set only when selection actually runs).  A fixed
+        selector skips the cache outright."""
+        if fixed_names is not None:
+            dec, inv_deg = prepare_batch(batch, cfg, kernels=fixed_names)
+            plan = KernelPlan.make(dec, fixed_names, n_layers=cfg.n_layers)
+            fixed = fix_shapes(dec, pad_budget,
+                               keep=plan_payload_keys(plan))
+            return plan, fixed, inv_deg, True
+        dec0, inv_deg = prepare_batch(batch, cfg, kernels=())
+        plan = cache.lookup(dec0)
+        hit = plan is not None
+        if hit:
+            names = tuple({k for layer in plan.layers for k in layer})
+            dec, _ = prepare_batch(batch, cfg, kernels=names)
+        else:
+            dec, _ = prepare_batch(batch, cfg)
+            plan, _ = cache.plan_for(dec)
+        # only the payloads this plan dispatches cross the jit boundary;
+        # the keep set is a function of the plan, so batches sharing a
+        # step function share one treedef
+        fixed = fix_shapes(dec, pad_budget, keep=plan_payload_keys(plan))
+        return plan, fixed, inv_deg, hit
+
+    counters = dict(traces=0)
+    step_fns: dict[tuple, Any] = {}
+    losses, hit_history = [], []
+    t_sample, t_prepare, t_step = [], [], []
+    dropped = 0
+    for i in range(steps):
+        t0 = time.perf_counter()
+        batch = sampler.sample()
+        t_sample.append(time.perf_counter() - t0)
+        dropped += batch.meta.get("dropped_edges", 0)
+
+        t0 = time.perf_counter()
+        plan, fixed, inv_deg, hit = plan_and_fix(batch)
+        t_prepare.append(time.perf_counter() - t0)
+        hit_history.append(hit)
+
+        pkey = plan.layers
+        if pkey not in step_fns:
+            step_fns[pkey] = make_sampled_step(cfg, plan, counters)
+        t0 = time.perf_counter()
+        params, opt, loss = step_fns[pkey](
+            params, opt, fixed, jnp.asarray(batch.features),
+            jnp.asarray(batch.labels), jnp.asarray(batch.target_mask),
+            jnp.asarray(inv_deg))
+        loss.block_until_ready()
+        t_step.append(time.perf_counter() - t0)
+        losses.append(float(loss))
+        if verbose and i % 10 == 0:
+            print(f"batch {i:4d} loss {float(loss):.4f} "
+                  f"cache_hit={hit} plan={plan.layers[0]}")
+
+    # snapshot before the eval loop below adds its own (mostly-hit)
+    # lookups: the reported rate is the *training* steady state
+    cache_stats = dict(cache.stats)
+
+    # masked accuracy over a few fresh batches (cluster sampling cycles
+    # clusters, so enough eval batches approach full-graph accuracy)
+    correct = total = 0
+    for _ in range(eval_batches):
+        batch = sampler.sample()
+        plan, fixed, inv_deg, _ = plan_and_fix(batch)
+        logits = gnn.forward(params, cfg, fixed,
+                             jnp.asarray(batch.features), plan,
+                             jnp.asarray(inv_deg))
+        pred = np.asarray(jnp.argmax(logits, -1))
+        tm = batch.target_mask
+        correct += int((pred[tm] == batch.labels[tm]).sum())
+        total += int(tm.sum())
+
+    med = lambda ts, skip=0: float(np.median(ts[skip:])) if ts[skip:] else 0.0
+    return MinibatchResult(
+        losses=losses, accuracy=correct / max(total, 1),
+        cache=cache_stats, hit_history=hit_history,
+        plans=list(step_fns),
+        n_traces=counters["traces"],
+        step_seconds=med(t_step, skip=min(len(t_step) - 1, 1)),
+        sample_seconds=med(t_sample), prepare_seconds=med(t_prepare),
+        dropped_edges=dropped, plan_cache=cache)

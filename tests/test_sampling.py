@@ -1,0 +1,297 @@
+"""Mini-batch sampling subsystem: sampler determinism, fixed-shape padded
+batches (the no-retrace contract), masked-loss equivalence to full-batch,
+PlanCache hit/miss behavior, and the warn-once metis fallback that keeps
+per-batch decomposition from warning every step."""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import decompose as dec_mod, gnn, selector as sel_mod
+from repro.graphs import graph as G
+from repro.sampling import (ClusterSampler, NeighborSampler, PlanCache,
+                            density_signature, fix_shapes)
+from repro.train import gnn_steps
+
+
+def small_graph(n=96, e=700, nf=5, nc=3, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    key = src.astype(np.int64) * n + dst
+    _, keep = np.unique(key, return_index=True)
+    src, dst = src[keep], dst[keep]
+    feats = rng.standard_normal((n, nf)).astype(np.float32)
+    labels = rng.integers(0, nc, n).astype(np.int32)
+    return G.Graph(n, src, dst, feats, labels, nc)
+
+
+def batch_equal(a, b):
+    return (np.array_equal(a.nodes, b.nodes)
+            and np.array_equal(a.node_mask, b.node_mask)
+            and np.array_equal(a.senders, b.senders)
+            and np.array_equal(a.receivers, b.receivers)
+            and np.array_equal(a.edge_mask, b.edge_mask)
+            and np.array_equal(a.target_mask, b.target_mask)
+            and np.allclose(a.features, b.features))
+
+
+@pytest.mark.parametrize("make", [
+    lambda g, s: ClusterSampler(g, block=8, clusters_per_batch=4,
+                                method="bfs", seed=s),
+    lambda g, s: NeighborSampler(g, batch_nodes=16, fanouts=(4, 2),
+                                 method="bfs", block=8, seed=s),
+])
+def test_sampler_deterministic_under_fixed_seed(make):
+    g = small_graph()
+    s1, s2 = make(g, 7), make(g, 7)
+    for _ in range(3):
+        assert batch_equal(s1.sample(), s2.sample())
+    # a different seed diverges (not a constant sampler); compare several
+    # batches so a single coincidental collision cannot fail the test
+    sa, sb = make(g, 7), make(g, 8)
+    assert any(not batch_equal(sa.sample(), sb.sample()) for _ in range(3))
+    b = s1.sample()
+    assert b.n_real_edges == b.edge_mask.sum()
+    real_s, real_r = b.real_edges()
+    assert real_s.min(initial=0) >= 0
+    assert b.node_mask[real_r].all() and b.node_mask[real_s].all()
+
+
+def _shape_sig(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return treedef, [jax.ShapeDtypeStruct(np.shape(l), np.asarray(l).dtype)
+                     for l in leaves]
+
+
+def test_padded_shape_invariance_across_batches():
+    """Every batch's fixed decomposition presents the same treedef and the
+    same ShapeDtypeStructs — the precondition for a single jit trace."""
+    g = small_graph(n=128, e=1200)
+    cfg = gnn.GNNConfig(model="gcn", sampler="cluster", comm_size=8,
+                        clusters_per_batch=4, inter_buckets=2,
+                        reorder="bfs")
+    sampler = gnn_steps.make_sampler(g, cfg)
+    budget = sampler.edge_budget + sampler.node_budget
+    sigs = []
+    for _ in range(4):
+        dec, _ = gnn_steps.prepare_batch(sampler.sample(), cfg)
+        assert len(dec.subgraphs) == 3          # intra + 2 pinned buckets
+        fixed = fix_shapes(dec, budget)
+        assert fixed.stats is None
+        assert all(s.stats is None for s in fixed.subgraphs)
+        sigs.append(_shape_sig(fixed))
+    treedef0, leaves0 = sigs[0]
+    for treedef, leaves in sigs[1:]:
+        assert treedef == treedef0
+        assert leaves == leaves0
+
+
+def test_no_retrace_across_batches():
+    g = small_graph(n=128, e=1200)
+    cfg = gnn.GNNConfig(model="gin", sampler="cluster", comm_size=8,
+                        clusters_per_batch=4, inter_buckets=2,
+                        reorder="bfs")
+    res = gnn_steps.train_minibatch(g, cfg, steps=6, eval_batches=1)
+    # one trace per distinct committed plan, none per batch
+    assert res.n_traces == len(res.plans)
+    assert res.n_traces <= 2
+    assert len(res.losses) == 6 and np.isfinite(res.losses).all()
+
+
+def test_masked_loss_matches_full_batch_when_sampling_whole_graph():
+    """clusters_per_batch = n_clusters makes the 'mini'-batch the whole
+    graph; the sampled masked loss must equal the full-batch loss."""
+    g = small_graph(n=64, e=500)
+    cfg = gnn.GNNConfig(model="gcn", comm_size=8, reorder="bfs",
+                        inter_buckets=2, sampler="cluster",
+                        clusters_per_batch=8)
+
+    key = jax.random.PRNGKey(0)
+    params = gnn.init_model(key, cfg, g.features.shape[-1], g.n_classes)
+
+    # --- full-batch loss (core/gnn.py path)
+    dec_full = gnn.prepare(g, cfg)
+    x = gnn.adaptgear.to_reordered(dec_full, jnp.asarray(g.features))
+    labels_r = np.zeros((dec_full.n_pad,), np.int32)
+    labels_r[np.asarray(dec_full.perm)] = g.labels
+    node_mask = np.zeros((dec_full.n_pad,), bool)
+    node_mask[np.asarray(dec_full.perm)] = True
+    plan_full = gnn.KernelPlan.make(
+        dec_full, sel_mod.select_by_cost_model(dec_full, g.n_classes),
+        n_layers=cfg.n_layers)
+    loss_full = gnn._loss(params, cfg, dec_full, x, jnp.asarray(labels_r),
+                          jnp.asarray(node_mask), plan_full, None)
+
+    # --- sampled loss over the whole graph in one batch
+    sampler = gnn_steps.make_sampler(g, cfg)
+    batch = sampler.sample()
+    assert batch.n_real_nodes == g.n and batch.meta["dropped_edges"] == 0
+    dec_b, inv_deg = gnn_steps.prepare_batch(batch, cfg)
+    cache = PlanCache(gnn.agg_width_pairs(cfg, g.features.shape[-1],
+                                          g.n_classes))
+    plan_b, hit = cache.plan_for(dec_b)
+    assert not hit
+    fixed = fix_shapes(dec_b, sampler.edge_budget + sampler.node_budget)
+    loss_mb = gnn._loss(params, cfg, fixed, jnp.asarray(batch.features),
+                        jnp.asarray(batch.labels),
+                        jnp.asarray(batch.target_mask), plan_b,
+                        jnp.asarray(inv_deg))
+    np.testing.assert_allclose(float(loss_mb), float(loss_full),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_plan_cache_hit_miss_and_eviction():
+    g = small_graph(n=128, e=1000)
+    cfg = gnn.GNNConfig(model="gcn", sampler="cluster", comm_size=8,
+                        clusters_per_batch=4, inter_buckets=2,
+                        reorder="bfs")
+    sampler = gnn_steps.make_sampler(g, cfg)
+    dec, _ = gnn_steps.prepare_batch(sampler.sample(), cfg)
+    pairs = gnn.agg_width_pairs(cfg, g.features.shape[-1], g.n_classes)
+
+    cache = PlanCache(pairs)
+    plan1, hit1 = cache.plan_for(dec)
+    plan2, hit2 = cache.plan_for(dec)
+    assert not hit1 and hit2 and plan2 is plan1
+    assert cache.stats == dict(hits=1, near_hits=0, misses=1, entries=1,
+                               hit_rate=0.5)
+    # the memoized plan equals fresh selection (cache changes cost, not
+    # outcome)
+    assert cache.select(dec).layers == plan1.layers
+
+    # near-hit: a batch straddling a quantization-cell boundary lands on
+    # a new signature but matches the resident anchor within half a cell,
+    # reusing the plan without re-selection (simulated by re-keying the
+    # entry so the exact lookup misses while the anchor stays resident)
+    near = PlanCache(pairs)
+    plan_a, _ = near.plan_for(dec)
+    entry = near._entries.pop(near.signature(dec))
+    near._entries[("boundary-neighbor",)] = entry
+    plan_b, hit = near.plan_for(dec)
+    assert hit and plan_b is plan_a
+    assert near.near_hits == 1 and near.misses == 1
+    # and the flapping signature is now aliased: next lookup is exact
+    _, hit = near.plan_for(dec)
+    assert hit and near.hits == 1
+
+    # a structurally different graph (much denser) misses
+    g2 = small_graph(n=128, e=4000, seed=3)
+    dec2, _ = gnn_steps.prepare_batch(
+        gnn_steps.make_sampler(g2, cfg).sample(), cfg)
+    assert cache.signature(dec2) != cache.signature(dec)
+    _, hit3 = cache.plan_for(dec2)
+    assert not hit3
+
+    # LRU bound evicts the oldest signature
+    tiny = PlanCache(pairs, max_entries=1)
+    tiny.plan_for(dec)
+    tiny.plan_for(dec2)
+    assert tiny.stats["entries"] == 1
+    _, hit = tiny.plan_for(dec)      # evicted -> miss again
+    assert not hit
+
+
+def test_density_signature_quantizes():
+    g = small_graph(n=128, e=1000)
+    dec = dec_mod.decompose(g, comm_size=8, method="bfs", inter_buckets=2)
+    sig = density_signature(dec)
+    assert sig[0] == dec.n_pad and sig[1] == 8
+    assert len(sig[2]) == len(dec.subgraphs)
+    # coarse: identical decomposition -> identical signature
+    assert sig == density_signature(
+        dec_mod.decompose(g, comm_size=8, method="bfs", inter_buckets=2))
+    for s in dec.subgraphs:
+        assert 0.0 <= s.stats["brow_occupancy"] <= 1.0
+
+
+def test_keep_empty_buckets_pins_tier_count():
+    # a graph whose inter edges cannot fill 4 occupancy tiers
+    g = small_graph(n=32, e=40)
+    dec = dec_mod.decompose(g, comm_size=8, method="bfs", inter_buckets=4,
+                            keep_empty_buckets=True)
+    assert len(dec.subgraphs) == 5
+    dec_drop = dec_mod.decompose(g, comm_size=8, method="bfs",
+                                 inter_buckets=4)
+    assert len(dec_drop.subgraphs) <= len(dec.subgraphs)
+    assert sum(s.stats["nnz"] for s in dec.subgraphs) == g.n_edges
+
+
+def test_metis_fallback_warns_once_per_process():
+    """Per-batch decomposition must not re-warn every step."""
+    g = small_graph(n=48, e=200)
+    dec_mod._warned_substitutions.discard("metis")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        dec_mod.decompose(g, comm_size=8, method="metis")
+        dec_mod.decompose(g, comm_size=8, method="metis")
+    ours = [x for x in w if "substituting" in str(x.message)]
+    assert len(ours) == 1
+    assert dec_mod.decompose(g, comm_size=8,
+                             method="metis").stats["effective_method"] == \
+        "louvain"
+
+
+def test_no_duplicate_draws_across_epoch_boundaries():
+    """Batches straddling an epoch refill must not contain a duplicate
+    cluster/seed (duplicated nodes would double-count in the masked loss,
+    duplicated seeds would emit their sampled edges twice)."""
+    g = small_graph(n=96, e=800)
+    s = ClusterSampler(g, block=8, clusters_per_batch=5, method="bfs",
+                       seed=0)           # 12 clusters: boundary every 3rd
+    for _ in range(8):
+        b = s.sample()
+        real = b.nodes[b.node_mask]
+        assert len(np.unique(real)) == len(real)
+    ns = NeighborSampler(g, batch_nodes=40, fanouts=(3,), method="bfs",
+                         block=8, seed=0)  # 96 nodes: boundary every 3rd
+    for _ in range(8):
+        b = ns.sample()
+        real = b.nodes[b.node_mask]
+        assert len(np.unique(real)) == len(real)
+        es, er = b.real_edges()
+        eid = es.astype(np.int64) * b.n + er
+        assert len(np.unique(eid)) == len(eid)
+
+
+def test_neighbor_sampler_targets_only_seeds():
+    g = small_graph(n=128, e=1500)
+    s = NeighborSampler(g, batch_nodes=16, fanouts=(4,), method="bfs",
+                        block=8, seed=0)
+    b = s.sample()
+    assert b.target_mask.sum() == 16
+    assert (b.target_mask & ~b.node_mask).sum() == 0
+    # every real edge's destination aggregates toward the batch
+    _, r = b.real_edges()
+    assert b.node_mask[r].all()
+    # budgets honored
+    assert len(b.senders) == s.edge_budget
+    assert len(b.nodes) == s.node_budget
+
+
+def test_neighbor_budgets_clamped_to_graph():
+    """Worst-case fanout budgets must not pad batches past the graph."""
+    g = small_graph(n=96, e=700)
+    s = NeighborSampler(g, batch_nodes=64, fanouts=(8, 4), method="bfs",
+                        block=8, seed=0)
+    assert s.node_budget <= -(-g.n // 8) * 8
+    assert s.edge_budget <= g.n_edges
+    b = s.sample()
+    assert b.n_real_nodes <= s.node_budget
+    assert b.n_real_edges <= s.edge_budget
+
+
+def test_minibatch_fixed_selector_is_honored():
+    g = small_graph(n=96, e=700)
+    cfg = gnn.GNNConfig(model="gin", sampler="cluster", comm_size=8,
+                        clusters_per_batch=4, reorder="bfs",
+                        selector="fixed",
+                        fixed_kernels=("block_diag", "coo"))
+    res = gnn_steps.train_minibatch(g, cfg, steps=4, eval_batches=1)
+    n_sub = 2  # intra + 1 inter bucket (cfg.inter_buckets=1)
+    expect = ("block_diag",) + ("coo",) * (n_sub - 1)
+    assert res.plans == [(expect,) * cfg.n_layers]
+    assert res.cache["misses"] == 0          # no selection ran
+    assert all(res.hit_history)

@@ -1,0 +1,35 @@
+"""benchmarks/trend.py: history accumulation semantics + markdown render."""
+from benchmarks import trend
+
+
+ROWS_A = {"bench/row1": 100.0, "bench/row2": 50.0}
+ROWS_B = {"bench/row1": 130.0, "bench/row3": 10.0}
+
+
+def test_accumulate_appends_replaces_and_caps():
+    h = trend.accumulate({"entries": []}, "aaa", ROWS_A, now=0)
+    h = trend.accumulate(h, "bbb", ROWS_B, now=1)
+    assert [e["commit"] for e in h["entries"]] == ["aaa", "bbb"]
+    # a CI re-run of an old commit replaces its entry IN PLACE: the
+    # chronology (and thus the delta columns) must not reorder
+    h = trend.accumulate(h, "aaa", {"bench/row1": 90.0}, now=2)
+    assert [e["commit"] for e in h["entries"]] == ["aaa", "bbb"]
+    assert h["entries"][0]["rows"] == {"bench/row1": 90.0}
+    # cap keeps the newest
+    h = trend.accumulate(h, "ccc", ROWS_A, max_entries=2, now=3)
+    assert [e["commit"] for e in h["entries"]] == ["bbb", "ccc"]
+    # non-finite rows dropped
+    h2 = trend.accumulate({"entries": []}, "x",
+                          {"ok": 1.0, "bad": float("nan")}, now=0)
+    assert set(h2["entries"][0]["rows"]) == {"ok"}
+
+
+def test_markdown_table_shows_delta_and_missing_rows():
+    h = trend.accumulate({"entries": []}, "aaa1aaa1a", ROWS_A, now=0)
+    h = trend.accumulate(h, "bbb2bbb2b", ROWS_B, now=1)
+    md = trend.markdown_table(h)
+    assert "| aaa1aaa1a | bbb2bbb2b |" in md
+    assert "| bench/row1 | 100 | 130 (+30%) |" in md
+    assert "| bench/row2 | 50 | - |" in md       # gone in newest commit
+    assert "| bench/row3 | - | 10 |" in md       # new in newest commit
+    assert trend.markdown_table({"entries": []}).startswith("(no perf")
