@@ -23,6 +23,10 @@ def main():
     ap.add_argument("--clusters-per-batch", type=int, default=16)
     ap.add_argument("--batch-nodes", type=int, default=128)
     ap.add_argument("--inter-buckets", type=int, default=2)
+    ap.add_argument("--probe-every", type=int, default=0,
+                    help="wall-clock the top-2 cost-model candidates on "
+                         "every Nth PlanCache miss and pin the winner "
+                         "(0 = cost model only)")
     ap.add_argument("--full-batch", action="store_true",
                     help="also train full-batch for a step-time reference")
     args = ap.parse_args()
@@ -34,7 +38,8 @@ def main():
     cfg = gnn.GNNConfig(
         model=args.model, sampler=args.sampler, reorder="louvain",
         clusters_per_batch=args.clusters_per_batch,
-        batch_nodes=args.batch_nodes, inter_buckets=args.inter_buckets)
+        batch_nodes=args.batch_nodes, inter_buckets=args.inter_buckets,
+        probe_every=args.probe_every)
     res = gnn.train(graph, cfg, steps=args.steps)
     warm = min(args.steps // 4, 10)
     print(f"{args.model}/{args.sampler}: {res.step_seconds*1e3:.2f} ms/step "

@@ -45,7 +45,8 @@ second instance); decomposition, both selectors, dispatch, and the
 benchmarks pick it up with no further edits.
 
 Mini-batch mode (graphs too large for full-batch; repro.sampling +
-train/gnn_steps.py) prepends a sampling stage and amortizes selection:
+train/gnn_steps.py) prepends a sampling stage and amortizes selection with
+a SINGLE-PASS skeleton prepare:
 
   graphs.Graph
       |  sampling.sampler: ClusterSampler (community blocks = the
@@ -54,15 +55,36 @@ train/gnn_steps.py) prepends a sampling stage and amortizes selection:
       v
   SampledBatch -- fixed node/edge budgets, masked loss: every batch is one
       |           pytree shape, so the jitted step compiles once
-      |  core.decompose.decompose(reorder=False, keep_empty_buckets=True,
-      |  kernels=MB_KERNELS)   [per batch; budget-paddable formats only]
+      |  core.decompose.decompose_skeleton(reorder=False,
+      |  keep_empty_buckets=True, edge_budget=...)   [ONE partition+stats
+      |  pass per batch; tiers row-sorted once, payloads NOT built yet]
       v
-  Decomposed (per batch)
-      |  sampling.plan_cache.PlanCache: quantized density signature
-      |  (per-tier log2-nnz + block-row occupancy) -> memoized KernelPlan;
-      |  cost-model selection on miss, steady-state steps skip selection
+  DecomposeSkeleton -- per-tier edge arrays + density stats
+      |  sampling.plan_cache.PlanCache.lookup(skel): quantized density
+      |  signature (per-tier log2-nnz + block-row occupancy) -> memoized
+      |  KernelPlan, read straight off the skeleton's tier stats;
+      |  cost-model selection on a miss only (materializing the full
+      |  MB_KERNELS candidate set from the same skeleton); probe-on-Nth-
+      |  miss (cfg.probe_every) wall-clocks the top-2 modeled candidates
+      |  and pins the measured winner in the cached entry
+      v
+  skel.materialize(plan_payload_keys(plan)) -- tier i builds only the
+      |  payloads the committed plan dispatches on tier i; the edges are
+      |  never re-partitioned (the old two-pass prepare decomposed twice)
       v
   train.gnn_steps.make_sampled_step -- jit step(params, opt, dec, batch);
-  fix_shapes pads COO/CSR payloads to the edge budget and scrubs per-batch
-  stats so the traced Decomposed never changes structure (no retrace)
+  fix_shapes pads COO/CSR payloads to the edge budget, scrubs per-batch
+  stats, and stamps the plan's quantized signature bins (one canonical
+  value per step function) so the traced Decomposed never changes
+  structure (no retrace) yet stays debuggable
+
+MB_KERNELS membership rule: a kernel is admissible iff its payload has a
+fixed pytree shape *at the edge budget* — every array dim a function of
+(edge budget, node budget, block size), nothing data-dependent.  BlockDiag
+is shape-fixed by (n_pad, B); COO/CSR pad to the budget; blocked-ELL
+qualifies via its budget-padded variant: K capped at
+formats.bell_budget_k(budget, n_pad, B), block payloads padded to the cap
+with masked zero-blocks, overflow edges spilled to an in-payload COO tier
+(aggregated by segment-sum unfused, by per-edge gathered transform fused).
+ELL stays full-batch-only (max-degree width is data-dependent).
 """

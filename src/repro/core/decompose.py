@@ -175,19 +175,30 @@ jax.tree_util.register_dataclass(
     ["n", "n_pad", "block_size", "stats"])
 
 
-def build_subgraph(name: str, kind: str, n_pad: int, block_size: int,
-                   rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
-                   kernels: Sequence[str] | None = None) -> Subgraph:
-    """Materialize every registered candidate format for one edge tier.
+def _tier_stats(kind: str, n_pad: int, block_size: int, rows: np.ndarray,
+                edge_budget: int | None = None) -> dict:
+    """Density statistics for one edge tier — everything the selectors, the
+    PlanCache signature, and the format builders read.  Computed exactly
+    once per tier per batch (the skeleton carries it forward to every
+    materialization)."""
+    nnz = len(rows)
+    denom = (n_pad * block_size if kind == DIAG else n_pad * n_pad)
+    n_brow = max(n_pad // block_size, 1)
+    occ = (len(np.unique(np.asarray(rows) // block_size)) / n_brow
+           if nnz else 0.0)
+    stats = dict(nnz=nnz, density=nnz / max(denom, 1), brow_occupancy=occ)
+    if edge_budget:
+        # budget-paddable builders key off this (blocked-ELL caps K from it)
+        stats["edge_budget"] = int(edge_budget)
+    return stats
 
-    ``kernels`` optionally restricts materialization (memory-lean mode for
-    deployments that already know their plan); by default every registry
-    candidate for the subgraph kind is built eagerly.  Fused kernels alias
-    their unfused counterpart's payload (``KernelSpec.payload_of``): they
-    never build anything, but requesting one materializes its base payload.
-    Density stats are computed first and handed to each builder so formats
-    can pick per-bucket tiling (blocked-ELL block size / feature-tile cap).
-    """
+
+def _materialize_subgraph(name: str, kind: str, n_pad: int, block_size: int,
+                          rows: np.ndarray, cols: np.ndarray,
+                          vals: np.ndarray, stats: dict,
+                          kernels: Sequence[str] | None = None) -> Subgraph:
+    """Materialize candidate format payloads for one tier, given its
+    precomputed stats.  See :func:`build_subgraph` for semantics."""
     all_specs = REGISTRY.candidates(kind, include_fused=True)
     if kernels is not None:
         wanted = {REGISTRY.get(k).payload_key for k in kernels
@@ -196,18 +207,13 @@ def build_subgraph(name: str, kind: str, n_pad: int, block_size: int,
                        if s.build is not None and s.name in wanted]
     else:
         build_specs = [s for s in all_specs if s.build is not None]
-    nnz = len(rows)
-    denom = (n_pad * block_size if kind == DIAG else n_pad * n_pad)
-    n_brow = max(n_pad // block_size, 1)
-    occ = (len(np.unique(np.asarray(rows) // block_size)) / n_brow
-           if nnz else 0.0)
-    stats = dict(nnz=nnz, density=nnz / max(denom, 1),
-                 brow_occupancy=occ)
+    stats = dict(stats)         # per-materialization copy ("kernels" differs)
     if build_specs:
         coo = formats.coo_from_edges(n_pad, n_pad, rows, cols, vals)
         # the transpose is only materialized when a candidate's VJP needs it
         coo_t = (formats.coo_from_edges(n_pad, n_pad, cols, rows, vals)
-                 if any(s.needs_transpose for s in build_specs) else None)
+                 if any(s.wants_transpose(stats) for s in build_specs)
+                 else None)
         fmts = {s.name: s.build(coo, coo_t, block_size, stats)
                 for s in build_specs}
     else:
@@ -219,6 +225,27 @@ def build_subgraph(name: str, kind: str, n_pad: int, block_size: int,
     return Subgraph(
         name=name, kind=kind, n_rows=n_pad, block_size=block_size,
         formats=fmts, stats=stats)
+
+
+def build_subgraph(name: str, kind: str, n_pad: int, block_size: int,
+                   rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                   kernels: Sequence[str] | None = None,
+                   edge_budget: int | None = None) -> Subgraph:
+    """Materialize every registered candidate format for one edge tier.
+
+    ``kernels`` optionally restricts materialization (memory-lean mode for
+    deployments that already know their plan); by default every registry
+    candidate for the subgraph kind is built eagerly.  Fused kernels alias
+    their unfused counterpart's payload (``KernelSpec.payload_of``): they
+    never build anything, but requesting one materializes its base payload.
+    Density stats are computed first and handed to each builder so formats
+    can pick per-bucket tiling (blocked-ELL block size / feature-tile cap) —
+    with ``edge_budget`` set, budget-paddable variants instead (blocked-ELL
+    caps its stored-block count from the budget and spills the overflow).
+    """
+    stats = _tier_stats(kind, n_pad, block_size, rows, edge_budget)
+    return _materialize_subgraph(name, kind, n_pad, block_size, rows, cols,
+                                 vals, stats, kernels)
 
 
 def _bucket_inter(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
@@ -253,24 +280,103 @@ def _bucket_inter(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     return out or [(rows, cols, vals)]
 
 
-def decompose(graph: Graph, comm_size: int = 16, method: str = "bfs",
-              edge_vals: np.ndarray | None = None,
-              reorder: bool = True, inter_buckets: int = 1,
-              kernels: Sequence[str] | None = None,
-              keep_empty_buckets: bool = False) -> Decomposed:
-    """AG.graph_decompose equivalent (paper Fig. 7 line 19).
+@dataclass(frozen=True)
+class TierEdges:
+    """One tier's partitioned edge arrays + precomputed density stats —
+    everything a later materialization needs, so the partition pass never
+    re-runs."""
+    name: str
+    kind: str                    # diag | offdiag
+    rows: np.ndarray
+    cols: np.ndarray
+    vals: np.ndarray
+    stats: dict
 
-    1. community reordering (METIS-equivalent),
-    2. one pass over edges: block(src) == block(dst) -> intra else inter,
-       then the inter edges split into ``inter_buckets`` density tiers,
-    3. materialize candidate formats for each subgraph via the kernel
-       registry.
-    Aggregation convention: rows = receivers (dst), cols = senders (src).
 
-    ``keep_empty_buckets`` pins the bucket count at exactly
-    ``inter_buckets`` (empty tiers included) so repeated per-batch
-    decompositions share one pytree structure (sampling/plan_cache.py).
+@dataclass(frozen=True)
+class DecomposeSkeleton:
+    """The single-pass decomposition skeleton (partition + stats, no format
+    payloads).
+
+    The mini-batch hot path partitions each batch's edges exactly once into
+    this, runs the PlanCache lookup against :meth:`stats_only`, and then
+    :meth:`materialize`\\ s only the payloads the committed plan dispatches
+    (or the full candidate set when selection actually runs on a miss) —
+    the double host-side decompose the old two-pass prepare paid is gone.
     """
+    n: int
+    n_pad: int
+    block_size: int
+    perm: np.ndarray             # (n,) int32 new_id of old_id
+    inv_perm: np.ndarray
+    tiers: tuple                 # tuple[TierEdges, ...], intra first
+    stats: dict                  # whole-graph stats (decompose-compatible)
+
+    def materialize(self, kernels=None, device: bool = False) -> Decomposed:
+        """Build a :class:`Decomposed` from the skeleton: per-tier format
+        payloads for ``kernels`` (None = every registry candidate, ``()``
+        = stats-only), reusing the partition and stats already computed.
+
+        ``kernels`` is either one name sequence applied to every tier, or
+        a per-tier sequence of name collections (the committed-plan hot
+        path: tier i materializes only what the plan dispatches on it).
+
+        Payload leaves stay host numpy by default — right for the
+        mini-batch hot loop, where each payload crosses the jit boundary
+        exactly once as a traced argument (an eager device_put here would
+        just add a host round-trip before fix_shapes).  Pass
+        ``device=True`` for long-lived decompositions whose payloads are
+        re-dispatched many times (the full-batch path): they are placed on
+        device once so per-call kernels never re-upload them."""
+        per_tier = (tuple(kernels)
+                    if (kernels is not None and len(kernels) == len(self.tiers)
+                        and not any(isinstance(k, str) for k in kernels))
+                    else (kernels,) * len(self.tiers))
+        subs = tuple(
+            _materialize_subgraph(t.name, t.kind, self.n_pad,
+                                  self.block_size, t.rows, t.cols, t.vals,
+                                  t.stats, ks)
+            for t, ks in zip(self.tiers, per_tier))
+        if device:
+            subs = tuple(
+                dataclasses.replace(s, formats=jax.device_put(s.formats))
+                for s in subs)
+        return Decomposed(
+            n=self.n, n_pad=self.n_pad, block_size=self.block_size,
+            perm=self.perm, inv_perm=self.inv_perm, subgraphs=subs,
+            stats=dict(self.stats))
+
+    @property
+    def subgraphs(self) -> tuple:
+        """Duck-typed Decomposed view: TierEdges carry the same ``name`` /
+        ``kind`` / ``stats`` attributes a Subgraph does, so stats readers
+        (PlanCache signature/anchor) consume the skeleton directly without
+        constructing a payload-free Decomposed first."""
+        return self.tiers
+
+    def stats_only(self) -> Decomposed:
+        """Payload-free view for PlanCache signature/lookup, memoized: the
+        hot loop reads it twice per batch (lookup + preserved signature)
+        and it never changes once the skeleton exists."""
+        cached = self.__dict__.get("_stats_only")
+        if cached is None:
+            cached = self.materialize(())
+            object.__setattr__(self, "_stats_only", cached)
+        return cached
+
+
+def decompose_skeleton(graph: Graph, comm_size: int = 16,
+                       method: str = "bfs",
+                       edge_vals: np.ndarray | None = None,
+                       reorder: bool = True, inter_buckets: int = 1,
+                       keep_empty_buckets: bool = False,
+                       edge_budget: int | None = None) -> DecomposeSkeleton:
+    """Steps 1-2 of the decomposition (reorder + partition + stats) as a
+    reusable skeleton; :meth:`DecomposeSkeleton.materialize` is step 3.
+
+    ``edge_budget`` marks the skeleton budget-paddable: it lands in every
+    tier's stats, and format builders that support budget padding (the
+    blocked-ELL K cap) key off it."""
     n, B = graph.n, comm_size
     effective = method
     if reorder:
@@ -291,19 +397,25 @@ def decompose(graph: Graph, comm_size: int = 16, method: str = "bfs",
     r_in, c_in, v_in = rows[on_diag], cols[on_diag], vals[on_diag]
     r_out, c_out, v_out = rows[~on_diag], cols[~on_diag], vals[~on_diag]
 
-    subs = [build_subgraph("intra", DIAG, n_pad, B, r_in, c_in, v_in,
-                           kernels=kernels)]
+    def _tier(name, kind, r, c, v):
+        # row-sort once here: every later materialization (possibly one per
+        # cache outcome) then takes coo_from_edges' sorted fast path
+        order = np.argsort(r, kind="stable")
+        r, c, v = r[order], c[order], v[order]
+        return TierEdges(name, kind, r, c, v,
+                         _tier_stats(kind, n_pad, B, r, edge_budget))
+
+    tiers = [_tier("intra", DIAG, r_in, c_in, v_in)]
     buckets = _bucket_inter(r_out, c_out, v_out, n_pad // B, B,
                             inter_buckets, keep_empty=keep_empty_buckets)
     for t, (rb, cb, vb) in enumerate(buckets):
         name = "inter" if len(buckets) == 1 else f"inter{t}"
-        subs.append(build_subgraph(name, OFFDIAG, n_pad, B, rb, cb, vb,
-                                   kernels=kernels))
+        tiers.append(_tier(name, OFFDIAG, rb, cb, vb))
 
-    return Decomposed(
+    return DecomposeSkeleton(
         n=n, n_pad=n_pad, block_size=B,
         perm=perm.astype(np.int32), inv_perm=inv.astype(np.int32),
-        subgraphs=tuple(subs),
+        tiers=tuple(tiers),
         stats=dict(
             n=n, n_edges=len(rows), comm_size=B,
             method=method, effective_method=effective,
@@ -311,10 +423,46 @@ def decompose(graph: Graph, comm_size: int = 16, method: str = "bfs",
             intra_edges=int(on_diag.sum()), inter_edges=int((~on_diag).sum()),
             intra_density=float(on_diag.sum()) / max(n_pad * B, 1),
             inter_density=float((~on_diag).sum()) / max(n_pad * n_pad, 1),
-            subgraphs=tuple((s.name, s.stats["nnz"], s.stats["density"])
-                            for s in subs),
+            subgraphs=tuple((t.name, t.stats["nnz"], t.stats["density"])
+                            for t in tiers),
         ),
     )
+
+
+def decompose(graph: Graph, comm_size: int = 16, method: str = "bfs",
+              edge_vals: np.ndarray | None = None,
+              reorder: bool = True, inter_buckets: int = 1,
+              kernels: Sequence[str] | None = None,
+              keep_empty_buckets: bool = False,
+              edge_budget: int | None = None) -> Decomposed:
+    """AG.graph_decompose equivalent (paper Fig. 7 line 19).
+
+    1. community reordering (METIS-equivalent),
+    2. one pass over edges: block(src) == block(dst) -> intra else inter,
+       then the inter edges split into ``inter_buckets`` density tiers,
+    3. materialize candidate formats for each subgraph via the kernel
+       registry.
+    Aggregation convention: rows = receivers (dst), cols = senders (src).
+
+    ``keep_empty_buckets`` pins the bucket count at exactly
+    ``inter_buckets`` (empty tiers included) so repeated per-batch
+    decompositions share one pytree structure (sampling/plan_cache.py);
+    ``edge_budget`` switches budget-paddable builders on (ditto).  Callers
+    that need both a stats-only view *and* payloads should use
+    :func:`decompose_skeleton` + ``materialize`` instead of calling this
+    twice — the partition runs once per skeleton.
+
+    Payloads are placed on device (``materialize(device=True)``): a
+    decomposition built through this API is long-lived and re-dispatched
+    every step, so the one-time transfer amortizes — unlike the mini-batch
+    skeleton path, whose single-use payloads stay host-side until the jit
+    boundary.
+    """
+    return decompose_skeleton(
+        graph, comm_size=comm_size, method=method, edge_vals=edge_vals,
+        reorder=reorder, inter_buckets=inter_buckets,
+        keep_empty_buckets=keep_empty_buckets,
+        edge_budget=edge_budget).materialize(kernels, device=True)
 
 
 def decomposition_quality(dec: Decomposed) -> dict:

@@ -23,10 +23,20 @@ from dataclasses import dataclass
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 Array = Any
+
+
+
+def _np(arr) -> np.ndarray:
+    """Host view of a (possibly device) array.  The numpy short-circuit
+    matters: converters run per batch on the mini-batch hot path, where
+    payload leaves are host numpy until the jit boundary, and
+    jax.device_get's tree dispatch costs more than the work itself."""
+    if isinstance(arr, np.ndarray):
+        return arr
+    return np.asarray(jax.device_get(arr))
 
 
 def _register(cls, data_fields, meta_fields):
@@ -79,7 +89,7 @@ class ELL:
 
     @property
     def nnz(self) -> int:
-        return int(np.asarray(jax.device_get(self.mask)).sum())
+        return int(_np(self.mask).sum())
 
 
 @dataclass(frozen=True)
@@ -96,7 +106,7 @@ class BlockDiag:
 
     @property
     def nnz(self) -> int:
-        return int((np.asarray(jax.device_get(self.blocks)) != 0).sum())
+        return int((_np(self.blocks) != 0).sum())
 
     @property
     def density(self) -> float:
@@ -118,6 +128,12 @@ class BlockELL:
     # per-bucket feature-tile cap chosen from the bucket's density stats at
     # build time (VMEM working-set budget); ops._f_tile clamps to a divisor
     f_tile_cap: int = dataclasses.field(default=512, metadata=dict(static=True))
+    # True when K came from an edge *budget* rather than from this input's
+    # max stored-block count: every array dim is then a function of
+    # (budget, n_pad, B) alone — the contract the mini-batch no-retrace
+    # path requires (sampling.plan_cache admits only budgeted payloads)
+    budgeted: bool = dataclasses.field(default=False,
+                                       metadata=dict(static=True))
     blocks: Array = None    # (n_brow, K, B, B) float
     col_idx: Array = None   # (n_brow, K) int32 block-column ids
     n_valid: Array = None   # (n_brow,) int32 number of real blocks per row
@@ -128,7 +144,7 @@ class BlockELL:
 
     @property
     def nnz(self) -> int:
-        return int((np.asarray(jax.device_get(self.blocks)) != 0).sum())
+        return int((_np(self.blocks) != 0).sum())
 
 
 for _cls, _data, _meta in [
@@ -137,7 +153,8 @@ for _cls, _data, _meta in [
     (ELL, ("indices", "vals", "mask"), ("n_rows", "n_cols", "max_deg")),
     (BlockDiag, ("blocks",), ("n", "block_size")),
     (BlockELL, ("blocks", "col_idx", "n_valid"),
-     ("n_rows", "n_cols", "block_size", "max_blocks", "f_tile_cap")),
+     ("n_rows", "n_cols", "block_size", "max_blocks", "f_tile_cap",
+      "budgeted")),
 ]:
     _register(_cls, list(_data), list(_meta))
 
@@ -154,24 +171,28 @@ def coo_from_edges(n_rows: int, n_cols: int, rows: np.ndarray, cols: np.ndarray,
     if vals is None:
         vals = np.ones(rows.shape[0], np.float32)
     # Sort by destination row: makes segment_sum use sorted (cheap) mode and
-    # makes CSR conversion a cumsum.
-    order = np.argsort(rows, kind="stable")
-    return COO(n_rows, n_cols, jnp.asarray(rows[order]), jnp.asarray(cols[order]),
-               jnp.asarray(np.asarray(vals, np.float32)[order]))
+    # makes CSR conversion a cumsum.  Skipped when the caller already sorted
+    # (the decompose skeleton row-sorts each tier once, so every per-batch
+    # materialization takes the O(E) check instead of the O(E log E) sort).
+    if rows.size and np.any(rows[1:] < rows[:-1]):
+        order = np.argsort(rows, kind="stable")
+        rows, cols = rows[order], cols[order]
+        vals = np.asarray(vals, np.float32)[order]
+    return COO(n_rows, n_cols, rows, cols, np.asarray(vals, np.float32))
 
 
 def coo_to_csr(coo: COO) -> CSR:
-    rows = np.asarray(jax.device_get(coo.rows))
+    rows = _np(coo.rows)
     counts = np.bincount(rows, minlength=coo.n_rows)
     indptr = np.zeros(coo.n_rows + 1, np.int32)
     np.cumsum(counts, out=indptr[1:])
-    return CSR(coo.n_rows, coo.n_cols, jnp.asarray(indptr), coo.cols, coo.vals)
+    return CSR(coo.n_rows, coo.n_cols, indptr, coo.cols, coo.vals)
 
 
 def coo_to_ell(coo: COO, max_deg: int | None = None) -> ELL:
-    rows = np.asarray(jax.device_get(coo.rows))
-    cols = np.asarray(jax.device_get(coo.cols))
-    vals = np.asarray(jax.device_get(coo.vals))
+    rows = _np(coo.rows)
+    cols = _np(coo.cols)
+    vals = _np(coo.vals)
     counts = np.bincount(rows, minlength=coo.n_rows)
     K = int(counts.max()) if counts.size and max_deg is None else int(max_deg or 1)
     K = max(K, 1)
@@ -186,8 +207,7 @@ def coo_to_ell(coo: COO, max_deg: int | None = None) -> ELL:
             v[r, s] = w
             m[r, s] = True
             slot[r] = s + 1
-    return ELL(coo.n_rows, coo.n_cols, K, jnp.asarray(idx), jnp.asarray(v),
-               jnp.asarray(m))
+    return ELL(coo.n_rows, coo.n_cols, K, idx, v, m)
 
 
 def coo_to_blockdiag(coo: COO, block_size: int) -> BlockDiag:
@@ -196,14 +216,14 @@ def coo_to_blockdiag(coo: COO, block_size: int) -> BlockDiag:
     B = block_size
     n_pad = ((coo.n_rows + B - 1) // B) * B
     nb = n_pad // B
-    rows = np.asarray(jax.device_get(coo.rows))
-    cols = np.asarray(jax.device_get(coo.cols))
-    vals = np.asarray(jax.device_get(coo.vals))
+    rows = _np(coo.rows)
+    cols = _np(coo.cols)
+    vals = _np(coo.vals)
     blocks = np.zeros((nb, B, B), np.float32)
     b = rows // B
     assert np.all(b == cols // B), "coo_to_blockdiag: edge off the block diagonal"
     blocks[b, rows % B, cols % B] = vals
-    return BlockDiag(n_pad, B, jnp.asarray(blocks))
+    return BlockDiag(n_pad, B, blocks)
 
 
 def coo_to_bell(coo: COO, block_size: int, n_cols_pad: int | None = None,
@@ -213,9 +233,9 @@ def coo_to_bell(coo: COO, block_size: int, n_cols_pad: int | None = None,
     n_rpad = ((coo.n_rows + B - 1) // B) * B
     n_cpad = n_cols_pad or ((coo.n_cols + B - 1) // B) * B
     nbr = n_rpad // B
-    rows = np.asarray(jax.device_get(coo.rows))
-    cols = np.asarray(jax.device_get(coo.cols))
-    vals = np.asarray(jax.device_get(coo.vals))
+    rows = _np(coo.rows)
+    cols = _np(coo.cols)
+    vals = _np(coo.vals)
     brow, bcol = rows // B, cols // B
     # group edges per (brow, bcol)
     blk_of: dict[tuple[int, int], int] = {}
@@ -237,8 +257,99 @@ def coo_to_bell(coo: COO, block_size: int, n_cols_pad: int | None = None,
     for r in range(len(rows)):
         i, j = int(brow[r]), int(bcol[r])
         blocks[i, blk_of[(i, j)], rows[r] % B, cols[r] % B] = vals[r]
-    return BlockELL(n_rpad, n_cpad, B, K, f_tile_cap, jnp.asarray(blocks),
-                    jnp.asarray(col_idx), jnp.asarray(n_valid))
+    return BlockELL(n_rpad, n_cpad, B, K, f_tile_cap,
+                    blocks=blocks, col_idx=col_idx, n_valid=n_valid)
+
+
+# ---------------------------------------------------------------------------
+# Budget-padded blocked-ELL (the mini-batch fixed-shape variant)
+# ---------------------------------------------------------------------------
+
+def bell_budget_k(edge_budget: int, n_pad: int, block_size: int,
+                  slack: float = 2.0) -> int:
+    """Stored-block cap K for the budget-padded blocked-ELL.
+
+    Derived from the sampler's *edge budget* alone — never from a batch's
+    actual edges — so every batch's payload shares one (n_brow, K, B, B)
+    shape.  K covers ``slack``x the per-block-row average stored-block
+    count under dense packing (each stored block absorbing ~B edges); the
+    block-column count bounds it above (a row cannot store more distinct
+    blocks than exist — at that bound the cap is vacuous and nothing ever
+    spills)."""
+    nbr = max(n_pad // block_size, 1)
+    k = -(-int(slack * edge_budget) // max(nbr * block_size, 1))
+    return int(max(1, min(k, nbr)))
+
+
+def coo_to_bell_capped(coo: COO, block_size: int, k_max: int,
+                       n_cols_pad: int | None = None,
+                       f_tile_cap: int = 512, build_blocks: bool = True
+                       ) -> tuple[BlockELL | None, COO, COO]:
+    """Blocked-ELL with exactly ``k_max`` stored-block slots per block row.
+
+    Rows needing more keep their *densest* ``k_max`` blocks (ties broken
+    toward the lower block column); the remaining edges come back as a
+    row-sorted *spill* COO, and the stored edges as a third COO (what the
+    transpose pass caps again — see the registry's capped builder).  Slots
+    past a row's real block count stay all-zero pointing at block column 0,
+    so the kernel needs no mask.  Returns ``(bell, spill, stored)`` with
+    ``bell.budgeted=True``: all three shapes are functions of
+    ``(k_max, n_pad, B)`` and the edge count only.
+
+    ``build_blocks=False`` skips the (n_brow, K, B, B) scatter and returns
+    ``bell=None`` — for callers that only need the stored/spill edge split
+    (the capped builder's first partition pass discards its bell and
+    rebuilds from the transpose-capped survivors)."""
+    B = block_size
+    n_rpad = ((coo.n_rows + B - 1) // B) * B
+    n_cpad = n_cols_pad or ((coo.n_cols + B - 1) // B) * B
+    nbr = n_rpad // B
+    nbc = n_cpad // B
+    K = int(max(1, min(k_max, nbc)))
+    rows = _np(coo.rows)
+    cols = _np(coo.cols)
+    vals = _np(coo.vals)
+    if build_blocks:
+        blocks = np.zeros((nbr, K, B, B), np.float32)
+        col_idx = np.zeros((nbr, K), np.int32)
+        n_valid = np.zeros((nbr,), np.int32)
+
+    if len(rows):
+        brow = (rows // B).astype(np.int64)
+        bcol = (cols // B).astype(np.int64)
+        key = brow * nbc + bcol
+        uniq, inv, counts = np.unique(key, return_inverse=True,
+                                      return_counts=True)
+        ubrow, ubcol = uniq // nbc, uniq % nbc
+        # rank each block-row's blocks densest-first; the slot of a block is
+        # its rank within its row (vectorized segmented rank: after the
+        # lexsort rows are contiguous, so rank = index - first-in-group)
+        order = np.lexsort((ubcol, -counts, ubrow))
+        sorted_brow = ubrow[order]
+        rank_sorted = (np.arange(len(uniq))
+                       - np.searchsorted(sorted_brow, sorted_brow))
+        slot = np.empty(len(uniq), np.int64)
+        slot[order] = rank_sorted
+
+        edge_slot = slot[inv]
+        stored_m = edge_slot < K
+        if build_blocks:
+            sb = np.flatnonzero(slot < K)
+            col_idx[ubrow[sb], slot[sb]] = ubcol[sb]
+            n_valid[:] = np.minimum(np.bincount(ubrow, minlength=nbr), K)
+            blocks[brow[stored_m], edge_slot[stored_m],
+                   rows[stored_m] % B, cols[stored_m] % B] = vals[stored_m]
+    else:
+        stored_m = np.zeros(0, bool)
+
+    bell = (BlockELL(n_rpad, n_cpad, B, K, f_tile_cap, budgeted=True,
+                     blocks=blocks, col_idx=col_idx, n_valid=n_valid)
+            if build_blocks else None)
+    spill = coo_from_edges(n_rpad, n_cpad, rows[~stored_m], cols[~stored_m],
+                           vals[~stored_m])
+    stored = coo_from_edges(n_rpad, n_cpad, rows[stored_m], cols[stored_m],
+                            vals[stored_m])
+    return bell, spill, stored
 
 
 def format_stats(fmt) -> dict:

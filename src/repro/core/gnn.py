@@ -49,6 +49,9 @@ class GNNConfig:
     fanouts: tuple = (8, 4)       # neighbor: per-layer in-neighbor caps
     edge_budget: int = 0          # cluster: padded edge slots (0 = auto)
     cache_entries: int = 128      # PlanCache LRU bound
+    # probe-on-Nth-miss: every Nth PlanCache miss wall-clocks the top-2
+    # cost-model candidates and pins the winner (0 = cost model only)
+    probe_every: int = 0
 
 
 def prepare(graph: graph_mod.Graph, cfg: GNNConfig) -> dec_mod.Decomposed:

@@ -27,6 +27,7 @@ import time
 from dataclasses import dataclass, field, replace
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.decompose import Decomposed, Subgraph
@@ -143,6 +144,88 @@ def plan_layer_cost(dec: Decomposed, feat_dim: int, dtype=np.float32,
         total += min(candidate_cost(sub, s.name, feat_dim, dtype, hw,
                                     in_dim, share) for s in specs)
     return total
+
+
+def _time_candidate(sub: Subgraph, spec, fin: int | None, fout: int,
+                    dtype, iters: int) -> float:
+    """Median wall seconds for one candidate on synthetic full-width
+    operands (compile excluded) — the measurement unit probe_topk and the
+    PlanCache's Nth-miss probe share with the full-batch feedback path."""
+    from repro.core import adaptgear  # local import to avoid cycle
+    if spec.fused:
+        x_in = jnp.ones((sub.n_rows, fin), dtype)
+        w = jnp.ones((fin, fout), dtype)
+        fn = jax.jit(lambda xi, wi, s=sub, k=spec.name:
+                     adaptgear.aggregate_sub_fused(s, xi, wi, k))
+        args = (x_in, w)
+    else:
+        x = jnp.ones((sub.n_rows, fout), dtype)
+        fn = jax.jit(lambda xx, s=sub, k=spec.name:
+                     adaptgear.aggregate_sub(s, xx, k))
+        args = (x,)
+    fn(*args).block_until_ready()          # compile outside the timing
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def probe_topk(dec: Decomposed, pairs, dtype=np.float32,
+               hw: HwModel | None = None, k: int = 2,
+               iters: int = 2, time_dec: Decomposed | None = None
+               ) -> list[tuple[str, ...]]:
+    """Wall-clock probe restricted to the ``k`` cheapest cost-model
+    candidates per (layer, subgraph).
+
+    This is the amortized feedback mode the PlanCache runs on every Nth
+    miss: instead of timing every registered candidate (the full-batch
+    AdaptiveSelector warmup), only the plausible frontier — the top-k by
+    modeled cost — is compiled and measured, and the measured argmin is
+    pinned.  Unfused candidates carry the *modeled* shared-transform share
+    (measuring H = X W per probe would triple the compile bill for a term
+    the model prices well); fused candidates are timed end-to-end.
+    ``pairs`` are ``(in_dim, agg_dim)`` per layer as in PlanCache.  Returns
+    one kernel-name tuple per pair.
+
+    ``time_dec`` optionally supplies the payloads to *time* (aligned with
+    ``dec.subgraphs``) while ``dec`` still drives the cost-model ranking:
+    the mini-batch probe passes the budget-padded twin, because that —
+    not the real-nnz payload — is what the jitted step executes (a COO
+    timed at 500 real edges but run at a 10k-slot budget would be pinned
+    on the wrong side of the crossover).
+    """
+    hw = hw or default_hw()
+    timed: dict[tuple, float] = {}
+    layers = []
+    time_subs = (time_dec or dec).subgraphs
+    for fin, fout in pairs:
+        share = _transform_share(dec, fout, dtype, hw, fin)
+        choice = []
+        for sub, tsub in zip(dec.subgraphs, time_subs):
+            specs = REGISTRY.candidates_for(sub,
+                                            include_fused=fin is not None)
+            if not specs:
+                raise ValueError(
+                    f"no kernel candidates for subgraph {sub.name!r}")
+            ranked = sorted(specs, key=lambda s: candidate_cost(
+                sub, s.name, fout, dtype, hw, fin, share))[:max(k, 1)]
+            if len(ranked) < 2:
+                choice.append(ranked[0].name)
+                continue
+            best_name, best_t = None, None
+            for spec in ranked:
+                key = (sub.name, spec.name, fin or 0, fout)
+                if key not in timed:
+                    timed[key] = _time_candidate(tsub, spec, fin, fout,
+                                                 dtype, iters)
+                t = timed[key] + (0.0 if spec.fused else share)
+                if best_t is None or t < best_t:
+                    best_name, best_t = spec.name, t
+            choice.append(best_name)
+        layers.append(tuple(choice))
+    return layers
 
 
 @dataclass

@@ -13,6 +13,14 @@ Grid = (block-rows, feature-tiles, K); K is the innermost reduction
 ("arbitrary") dimension accumulated in a VMEM scratch and flushed at k==K-1.
 Padding tiles are all-zero and point at block-column 0, so no masking is
 needed inside the kernel (no data-dependent control flow on TPU).
+
+That zero-padding contract is what makes the *budget-padded* variant free
+at kernel level: the mini-batch path caps K from the sampler's edge budget
+(formats.bell_budget_k) and pads every block-row to exactly that many
+slots, so this kernel runs an identical grid for every sampled batch — the
+jitted step never retraces — while executing the masked zero-blocks as
+ordinary (correct, zero-contributing) MXU tiles.  Overflow edges never
+reach this kernel; they ride the COO spill tier of the payload.
 """
 from __future__ import annotations
 

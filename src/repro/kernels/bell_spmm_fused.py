@@ -15,6 +15,13 @@ as a single blocked reduction sum_{i,k} x_i^T (A^T[i,k] @ dy[col_idx[i,k]])
 over the materialized transpose payload — no (n, F) intermediate is ever
 written.  The block-diagonal kernel reuses it with K=1 and identity block
 columns (ops.py), so both fused VJPs share one Pallas reduction.
+
+Under the mini-batch edge budget both kernels run on the budget-padded
+payload (stored-block count capped at a budget-derived K, masked
+zero-blocks padding, overflow edges spilled to an in-payload COO): the
+grid shape is then batch-invariant, and the spilled edges transform their
+gathered source rows per edge (ops.coo_transform_matvec) instead of
+forcing an H = X W materialization.
 """
 from __future__ import annotations
 

@@ -333,5 +333,19 @@ def ell_matvec(ell: formats.ELL, x: jax.Array) -> jax.Array:
 def coo_matvec(coo: formats.COO, x: jax.Array) -> jax.Array:
     return ref.coo_spmm(coo.rows, coo.cols, coo.vals, x, coo.n_rows)
 
+
+def coo_transform_matvec(coo: formats.COO, x: jax.Array,
+                         w: jax.Array) -> jax.Array:
+    """Y = A_coo @ (x @ w) without materializing H = x @ w: each edge
+    transforms only its gathered source row, (E, Fi) @ (Fi, Fo).
+
+    This is the spill path of the budget-padded fused blocked-ELL — E is
+    the (small) overflow the stored-block cap rejected, so per-edge
+    transform recompute beats an (n, Fo) H round-trip.  Natively
+    differentiable (gather + matmul + sorted segment-sum)."""
+    h_e = (x[coo.cols] @ w) * coo.vals[:, None]
+    return jax.ops.segment_sum(h_e, coo.rows, num_segments=coo.n_rows,
+                               indices_are_sorted=True).astype(x.dtype)
+
 # Candidate enumeration lives in repro.kernels.registry (KernelSpec.kinds);
 # this module only provides the matvec implementations the registry binds.

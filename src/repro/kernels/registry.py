@@ -68,7 +68,15 @@ class KernelSpec:
     build: Callable[[formats.COO, formats.COO, int, dict], Any] | None
     matvec: Callable[[Any, jax.Array], jax.Array] | None
     cost: Callable[[Any, Any, Any, Any], float]
-    needs_transpose: bool = False   # build consumes coo_t (for the VJP)
+    # build consumes coo_t (for the VJP); a callable form decides from the
+    # tier stats so budget-capped builds (which derive their own transpose
+    # from the stored-edge subset) don't force a full transpose COO
+    needs_transpose: Any = False    # bool | Callable[[dict], bool]
+
+    def wants_transpose(self, stats: dict | None) -> bool:
+        if callable(self.needs_transpose):
+            return bool(self.needs_transpose(stats or {}))
+        return bool(self.needs_transpose)
     matvec_acc: Callable[[Any, jax.Array, jax.Array], jax.Array] | None = None
     fused_matvec: Callable[..., jax.Array] | None = None
     fused_matvec_acc: Callable[..., jax.Array] | None = None
@@ -173,8 +181,8 @@ def _bell_pick_block(coo: formats.COO, base_block: int) -> int:
     scattered buckets keep the small base block since K barely drops while
     padding quadruples."""
     n_pad = coo.n_rows
-    rows = np.asarray(jax.device_get(coo.rows))
-    cols = np.asarray(jax.device_get(coo.cols))
+    rows = formats._np(coo.rows)
+    cols = formats._np(coo.cols)
     if len(rows) == 0:
         return base_block
     best, best_score = base_block, None
@@ -202,10 +210,85 @@ def _bell_f_cap(block_size: int) -> int:
 
 
 def _bell_build(coo, coo_t, block_size, stats):
+    """Blocked-ELL payload; two variants keyed by the subgraph stats.
+
+    With ``stats['edge_budget']`` set (the mini-batch path) the payload is
+    the *budget-padded* triple ``(bell, bell_t, spill)`` whose every array
+    dim is a function of (budget, n_pad, B) — see :func:`_bell_build_capped`.
+    Otherwise (full batch) it is the classic ``(bell, bell_t)`` pair with
+    the data-dependent per-bucket block size and K."""
+    budget = (stats or {}).get("edge_budget")
+    if budget:
+        return _bell_build_capped(coo, block_size, int(budget))
     Bb = _bell_pick_block(coo, block_size)
     cap = _bell_f_cap(Bb)
     return (formats.coo_to_bell(coo, Bb, f_tile_cap=cap),
             formats.coo_to_bell(coo_t, Bb, f_tile_cap=cap))
+
+
+def _np_edges(coo):
+    return (formats._np(coo.rows), formats._np(coo.cols),
+            formats._np(coo.vals))
+
+
+def _bell_build_capped(coo, block_size, edge_budget):
+    """Budget-padded blocked-ELL payload ``(bell, bell_t, spill)``.
+
+    The block size is pinned to the community size and K to
+    :func:`formats.bell_budget_k` (a data-dependent block merge or K would
+    change the pytree shape per batch and retrace the jitted step).  The
+    forward cap keeps each block-row's densest blocks; the transpose of the
+    *stored* edges is capped again, and stored edges whose transposed block
+    did not fit move to the spill alongside the forward overflow.  That
+    makes ``bell_t`` exactly the transpose of ``bell``, so the existing
+    blocked-ELL custom VJPs stay correct as-is, while every spilled edge
+    flows through the natively-differentiable segment-sum path in both
+    directions."""
+    K = formats.bell_budget_k(edge_budget, coo.n_rows, block_size)
+    cap = _bell_f_cap(block_size)
+    _, spill_fwd, stored = formats.coo_to_bell_capped(
+        coo, block_size, K, f_tile_cap=cap, build_blocks=False)
+    sr, sc, sv = _np_edges(stored)
+    coo_st = formats.coo_from_edges(stored.n_cols, stored.n_rows, sc, sr, sv)
+    bell_t, spill_t, stored_t = formats.coo_to_bell_capped(
+        coo_st, block_size, K, f_tile_cap=cap)
+    # forward payload = exactly the transpose-capped survivors
+    tr, tc, tv = _np_edges(stored_t)
+    bell, leftover, _ = formats.coo_to_bell_capped(
+        formats.coo_from_edges(coo.n_rows, coo.n_cols, tc, tr, tv),
+        block_size, K, f_tile_cap=cap)
+    assert leftover.nnz == 0  # a subset of a K-fitting edge set fits K
+    fr, fc, fv = _np_edges(spill_fwd)
+    xr, xc, xv = _np_edges(spill_t)      # transpose orientation: swap back
+    spill = formats.coo_from_edges(
+        coo.n_rows, coo.n_cols, np.concatenate([fr, xc]),
+        np.concatenate([fc, xr]), np.concatenate([fv, xv]))
+    return (bell, bell_t, spill)
+
+
+# Dispatch shims shared by the two blocked-ELL payload layouts: the classic
+# (bell, bell_t) pair and the budget-padded (bell, bell_t, spill) triple.
+# The spill aggregates through the COO segment-sum path (unfused) or the
+# per-edge gathered transform (fused — H is never materialized for it).
+
+def _bell_mv(p, x):
+    y = ops.bell_matvec(p[0], p[1], x)
+    return y + ops.coo_matvec(p[2], x) if len(p) > 2 else y
+
+
+def _bell_mv_acc(p, x, y_in):
+    y = ops.bell_matvec_acc(p[0], p[1], x, y_in)
+    return y + ops.coo_matvec(p[2], x) if len(p) > 2 else y
+
+
+def _bell_fmv(p, x, w):
+    y = ops.bell_fused_matvec(p[0], p[1], x, w)
+    return y + ops.coo_transform_matvec(p[2], x, w) if len(p) > 2 else y
+
+
+def _bell_fmv_acc(p, x, w, y_in):
+    y = ops.bell_fused_matvec_acc(p[0], p[1], x, w, y_in)
+    return y + ops.coo_transform_matvec(p[2], x, w) if len(p) > 2 else y
 
 
 # ---------------------------------------------------------------------------
@@ -224,14 +307,31 @@ def _block_diag_cost(sub, feat_dim, dtype, hw) -> float:
     return t + hw.launch_overhead_s
 
 
+def _bell_spill_cost(nnz, n_rows, feat_dim, dtype, hw) -> float:
+    """Scatter-class seconds for the capped payload's spilled edges (same
+    shape as the COO term; no extra launch — the spill rides the same
+    dispatch).  Priced at the *real* spill nnz, matching the convention of
+    the COO/CSR cost fns (padding to the edge budget executes zero-valued
+    edges for every candidate alike)."""
+    be = _bytes_el(dtype)
+    flops = 2.0 * nnz * feat_dim
+    bytes_ = nnz * (2 * feat_dim * be + 8) + n_rows * feat_dim * be
+    return max(flops / hw.peak_flops, bytes_ / (hw.hbm_bw * hw.scatter_eff))
+
+
 def _bell_cost(sub, feat_dim, dtype, hw) -> float:
     be = _bytes_el(dtype)
-    bl = sub.formats["bell"][0]
+    p = sub.formats["bell"]
+    bl = p[0]
     B = bl.block_size
-    nblk = bl.n_brow * bl.max_blocks       # kernel executes padding too
+    # padding-waste term is inherent: the kernel executes all n_brow * K
+    # slots, so a budget-capped K prices its masked zero-blocks here
+    nblk = bl.n_brow * bl.max_blocks
     flops = 2.0 * nblk * B * B * feat_dim
     bytes_ = nblk * (B * B * be + B * feat_dim * be) + sub.n_rows * feat_dim * be
     t = max(flops / (hw.peak_flops * hw.mxu_eff(B)), bytes_ / hw.hbm_bw)
+    if len(p) > 2 and p[2].nnz:          # budget-capped: spill-cost term
+        t += _bell_spill_cost(p[2].nnz, sub.n_rows, feat_dim, dtype, hw)
     return t + hw.launch_overhead_s
 
 
@@ -280,9 +380,10 @@ def _block_diag_fused_cost(sub, feat_dims, dtype, hw) -> float:
 def _bell_fused_cost(sub, feat_dims, dtype, hw) -> float:
     fin, fout = feat_dims
     be = _bytes_el(dtype)
-    bl = sub.formats["bell"][0]
+    p = sub.formats["bell"]
+    bl = p[0]
     B = bl.block_size
-    nblk = bl.n_brow * bl.max_blocks
+    nblk = bl.n_brow * bl.max_blocks     # includes budget-cap padding waste
     ft = min(bl.f_tile_cap, ops._fused_f_cap(B, _lane_pad(fin)),
              _lane_pad(fout))
     njt = max(1, -(-_lane_pad(fout) // ft))
@@ -294,6 +395,15 @@ def _bell_fused_cost(sub, feat_dims, dtype, hw) -> float:
               + nblk * fin * fout * be           # weight stripe per step
               + sub.n_rows * fout * be)
     t = max(flops / (hw.peak_flops * hw.mxu_eff(B)), bytes_ / hw.hbm_bw)
+    if len(p) > 2 and p[2].nnz:
+        # spilled edges transform their gathered source rows one-by-one
+        # (coo_transform_matvec): E*fin*fout recompute + scatter-class bytes
+        E = p[2].nnz
+        flops_s = 2.0 * E * (fin * fout + fout)
+        bytes_s = (E * (fin * be + fout * be + 8)
+                   + sub.n_rows * fout * be)
+        t += max(flops_s / hw.peak_flops,
+                 bytes_s / (hw.hbm_bw * hw.scatter_eff))
     return t + hw.launch_overhead_s
 
 
@@ -311,12 +421,14 @@ REGISTRY.register(KernelSpec(
     name="bell",
     kinds=frozenset({OFFDIAG}),
     build=_bell_build,
-    matvec=lambda p, x: ops.bell_matvec(p[0], p[1], x),
-    matvec_acc=lambda p, x, y: ops.bell_matvec_acc(p[0], p[1], x, y),
+    matvec=_bell_mv,
+    matvec_acc=_bell_mv_acc,
     cost=_bell_cost,
-    needs_transpose=True,
+    # full-batch builds consume coo_t; the budget-capped build re-derives
+    # its transpose from the stored-edge subset, so no coo_t is needed
+    needs_transpose=lambda stats: not stats.get("edge_budget"),
     doc="blocked-ELL over per-bucket (B,B) tiles; transpose materialized "
-        "for the VJP",
+        "for the VJP; budget-capped K + COO spill under an edge budget",
 ))
 
 REGISTRY.register(KernelSpec(
@@ -357,9 +469,8 @@ REGISTRY.register(KernelSpec(
     build=None,
     payload_of="bell",
     matvec=None,
-    fused_matvec=lambda p, x, w: ops.bell_fused_matvec(p[0], p[1], x, w),
-    fused_matvec_acc=lambda p, x, w, y:
-        ops.bell_fused_matvec_acc(p[0], p[1], x, w, y),
+    fused_matvec=_bell_fmv,
+    fused_matvec_acc=_bell_fmv_acc,
     cost=_bell_fused_cost,
     doc="fused blocked-ELL A @ (X W); trades per-stored-block transform "
         "recompute for the H round-trip",

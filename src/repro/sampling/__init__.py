@@ -11,11 +11,15 @@ exactly the regime where the paper's §4 dynamic selection has to be
   SampledBatch -- fixed-shape padded node/edge budgets (masked loss), so
       |            every batch shares one pytree structure and the jitted
       |            step compiles once
-      |  core.decompose.decompose(reorder=False, keep_empty_buckets=True)
+      |  core.decompose.decompose_skeleton(reorder=False,
+      |  keep_empty_buckets=True, edge_budget=...)  [one partition pass]
       v
-  Decomposed (per batch)
-      |  sampling.plan_cache.PlanCache -- quantized density signature ->
-      |  memoized KernelPlan (cost-model selection on miss, reuse on hit)
+  DecomposeSkeleton (per batch)
+      |  sampling.plan_cache.PlanCache -- quantized density signature read
+      |  off the skeleton -> memoized KernelPlan (cost-model selection on
+      |  miss, probe-on-Nth-miss pinning, reuse on hit); then
+      |  skel.materialize(plan_payload_keys(plan)) builds only the
+      |  committed payloads
       v
   train.gnn_steps.make_sampled_step -- jit step(params, opt, dec, batch)
 """

@@ -17,8 +17,11 @@ Every sampled batch is a fresh graph, so the paper's dynamic selection
   and scrubs the per-batch ``stats`` dicts out of the static metadata
   (they differ per batch and are unhashable, either of which would force
   a retrace).  Only budget-paddable formats are materialized per batch —
-  ``MB_KERNELS`` — which is why mini-batch decomposition runs with
-  ``decompose(kernels=MB_KERNELS, keep_empty_buckets=True)``.
+  ``MB_KERNELS`` — which is why the mini-batch hot loop partitions each
+  batch once into a ``decompose_skeleton(keep_empty_buckets=True,
+  edge_budget=...)`` and materializes payloads from it (the full
+  ``MB_KERNELS`` candidate set only when selection runs on a miss, the
+  committed plan's per-tier payload keys on a hit).
 """
 from __future__ import annotations
 
@@ -26,7 +29,6 @@ import dataclasses
 import math
 from collections import OrderedDict
 
-import jax
 import numpy as np
 
 from repro.core import formats, selector as sel_mod
@@ -34,12 +36,19 @@ from repro.core.decompose import Decomposed
 from repro.core.plan import KernelPlan
 from repro.kernels.registry import REGISTRY
 
-# Kernels whose payloads have budget-independent or budget-paddable shapes:
-# BlockDiag is (n/B, B, B) for any batch, COO/CSR pad to the edge budget.
-# (ELL / blocked-ELL widths are data-dependent — max degree, stored-block
-# count — so they stay full-batch-only.)  Fused block_diag aliases the
-# block_diag payload, so GCN's transform-first layers keep fused candidates.
-MB_KERNELS = ("block_diag", "block_diag_fused", "coo", "csr")
+# Kernels admitted to the mini-batch path.  Membership rule: a kernel is
+# admissible iff its payload has a *fixed pytree shape at the edge budget* —
+# every array dim a function of (budget, node budget, block size) alone,
+# nothing data-dependent.  BlockDiag is (n/B, B, B) for any batch, COO/CSR
+# pad to the edge budget, and blocked-ELL qualifies through its
+# budget-padded variant: decomposing with an ``edge_budget`` caps the
+# stored-block count at K = bell_budget_k(budget, n_pad, B), pads block
+# payloads to that cap with masked zero-blocks, and spills overflow edges
+# to an in-payload COO tier (padded to the budget like any other COO).
+# ELL stays out (max-degree width is data-dependent).  Fused kernels alias
+# their unfused payload, so GCN's transform-first layers keep them.
+MB_KERNELS = ("block_diag", "block_diag_fused", "coo", "csr", "bell",
+              "bell_fused")
 
 
 # ---------------------------------------------------------------------------
@@ -48,10 +57,13 @@ MB_KERNELS = ("block_diag", "block_diag_fused", "coo", "csr")
 
 def _padded(arr, budget: int, fill) -> np.ndarray:
     """Host-side pad-to-budget (numpy on purpose: a jnp.concatenate here
-    would compile one executable per novel nnz, every batch)."""
-    a = np.asarray(jax.device_get(arr))
-    out = np.full((budget,), fill, a.dtype)
+    would compile one executable per novel nnz, every batch).  Each region
+    is written exactly once (empty + copy + fill-tail, not full + copy):
+    this runs per payload array per batch on the hot path."""
+    a = formats._np(arr)
+    out = np.empty((budget,), a.dtype)
     out[: len(a)] = a
+    out[len(a):] = fill
     return out
 
 
@@ -77,7 +89,7 @@ def _pad_csr(csr: formats.CSR, budget: int) -> formats.CSR:
         return csr
     # bump only the terminal pointer: the pad entries land in the last
     # row's segment, where their zero vals vanish
-    indptr = np.asarray(jax.device_get(csr.indptr)).copy()
+    indptr = formats._np(csr.indptr).copy()
     indptr[-1] = budget
     return formats.CSR(csr.n_rows, csr.n_cols, indptr,
                        _padded(csr.indices, budget, 0),
@@ -91,13 +103,23 @@ def _pad_payload(name: str, payload, budget: int):
         return _pad_csr(payload, budget)
     if isinstance(payload, formats.BlockDiag):
         return payload                      # shape fixed by (n_pad, B)
+    if (isinstance(payload, tuple) and len(payload) == 3
+            and all(isinstance(b, formats.BlockELL) and b.budgeted
+                    for b in payload[:2])):
+        # budget-padded blocked-ELL (bell, bell_t, spill): the bells are
+        # already shape-fixed by construction (K from the edge budget),
+        # only the spill COO needs the budget pad
+        return payload[:2] + (_pad_coo(payload[2], budget),)
     raise TypeError(
         f"payload {name!r} ({type(payload).__name__}) has no fixed-shape "
-        f"padding; mini-batch decomposition must use kernels={MB_KERNELS}")
+        f"padding; mini-batch decomposition must use kernels={MB_KERNELS} "
+        f"and pass the sampler's edge_budget to decompose (budget-capped "
+        f"blocked-ELL only)")
 
 
 def fix_shapes(dec: Decomposed, edge_budget: int,
-               keep: frozenset | set | None = None) -> Decomposed:
+               keep: frozenset | set | None = None,
+               stats: tuple | None = None) -> Decomposed:
     """Pad every payload to the edge budget and scrub per-batch stats.
 
     The result is safe to pass *as an argument* to a jitted step: across
@@ -106,34 +128,65 @@ def fix_shapes(dec: Decomposed, edge_budget: int,
 
     ``keep`` optionally restricts to the payload keys a committed plan
     dispatches (see :func:`plan_payload_keys`) so unused candidate formats
-    are not padded and shipped through the jit boundary every step; it
-    must be derived from the plan alone, so batches sharing a step
-    function keep one treedef.
+    are not padded and shipped through the jit boundary every step: either
+    one set applied to every subgraph, or a per-subgraph sequence of sets
+    (the plan_payload_keys form — tier i keeps only what some layer
+    dispatches *on tier i*).  It must be derived from the plan alone, so
+    batches sharing a step function keep one treedef.
+
+    ``stats`` optionally replaces the scrub with a *hashable* summary —
+    the quantized :func:`density_signature` bins of the plan that the step
+    was compiled for, so debugging a cached plan doesn't require
+    re-deriving them from raw payloads.  It is static jit metadata: the
+    caller must pass the same value for every batch sharing a step
+    function (canonicalize per plan, never per batch — a per-batch value
+    would retrace every step).  The per-subgraph dicts are still scrubbed
+    (unhashable); their bins live inside the signature tuple.
     """
+    if isinstance(keep, (tuple, list)):
+        if len(keep) != len(dec.subgraphs):
+            raise ValueError(
+                f"per-subgraph keep has {len(keep)} entries for "
+                f"{len(dec.subgraphs)} subgraphs (one set per subgraph; "
+                f"wrap a single shared key set in frozenset, not tuple)")
+        if any(isinstance(k, str) for k in keep):
+            raise TypeError(
+                "keep entries must be collections of payload keys, not "
+                "strings (a tuple of names would filter by substring)")
+        keeps = keep
+    else:
+        keeps = [keep] * len(dec.subgraphs)
     subs = tuple(
         dataclasses.replace(
             s, stats=None,
             formats={k: _pad_payload(k, p, edge_budget)
                      for k, p in s.formats.items()
-                     if keep is None or k in keep})
-        for s in dec.subgraphs)
-    return dataclasses.replace(dec, subgraphs=subs, stats=None)
+                     if ki is None or k in ki})
+        for s, ki in zip(dec.subgraphs, keeps))
+    return dataclasses.replace(dec, subgraphs=subs, stats=stats)
 
 
-def plan_payload_keys(plan) -> frozenset:
-    """Payload keys a KernelPlan actually dispatches (fused kernels alias
-    their unfused payload) — the ``keep`` set for :func:`fix_shapes`."""
-    return frozenset(REGISTRY.get(k).payload_key
-                     for layer in plan.layers for k in layer)
+def plan_payload_keys(plan) -> tuple[frozenset, ...]:
+    """Per-subgraph payload keys a KernelPlan actually dispatches (fused
+    kernels alias their unfused payload) — the ``keep`` sets for
+    :func:`fix_shapes` and the per-tier kernel lists for
+    ``DecomposeSkeleton.materialize``.  Tier i's set covers only the
+    kernels some layer assigns to tier i, so a format another tier picked
+    is neither built nor padded nor shipped for this one."""
+    return tuple(
+        frozenset(REGISTRY.get(layer[i]).payload_key for layer in plan.layers)
+        for i in range(len(plan.subgraph_names)))
 
 
 # ---------------------------------------------------------------------------
 # Density signature + cache
 # ---------------------------------------------------------------------------
 
-def density_signature(dec: Decomposed, nnz_log2_step: float = 2.0,
+def density_signature(dec, nnz_log2_step: float = 2.0,
                       occ_bins: int = 2) -> tuple:
-    """Quantized per-tier density histogram — the PlanCache key.
+    """Quantized per-tier density histogram — the PlanCache key.  ``dec``
+    is anything exposing ``n_pad`` / ``block_size`` / ``subgraphs`` with
+    per-tier ``kind`` + ``stats`` (a Decomposed or a DecomposeSkeleton).
 
     Per tier: (kind, round(log2(nnz+1)/step), ceil(occupancy * bins)).
     Coarse on purpose: batches from one sampler differ by sampling noise,
@@ -170,7 +223,8 @@ class PlanCache:
     def __init__(self, width_pairs, dtype=np.float32,
                  hw: sel_mod.HwModel | None = None,
                  nnz_log2_step: float = 2.0, occ_bins: int = 2,
-                 max_entries: int = 128):
+                 max_entries: int = 128, probe_every: int = 0,
+                 probe_iters: int = 2, edge_budget: int | None = None):
         self.pairs = [(None, w) if isinstance(w, int) else tuple(w)
                       for w in width_pairs]
         self.dtype = dtype
@@ -178,18 +232,30 @@ class PlanCache:
         self.nnz_log2_step = nnz_log2_step
         self.occ_bins = occ_bins
         self.max_entries = max_entries
+        # feedback probing: on every ``probe_every``-th miss, wall-clock the
+        # cost model's top-2 candidates per (layer, subgraph) and pin the
+        # measured winner in the cached entry (0 = cost model only).  The
+        # probe compiles its candidates, so the cost amortizes across the
+        # cache's lifetime the way full-batch warmup amortizes over steps.
+        self.probe_every = probe_every
+        self.probe_iters = probe_iters
+        # the sampler's padded edge-slot count: probes time candidates on
+        # payloads padded to it, because that is what the step executes
+        self.edge_budget = edge_budget
         # signature -> (plan, anchor); anchor = raw (kind, log2 nnz, occ)
         # per tier of the decomposition that minted (or aliased) the entry
         self._entries: OrderedDict[tuple, tuple] = OrderedDict()
         self.hits = 0
         self.near_hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.probes = 0
 
-    def signature(self, dec: Decomposed) -> tuple:
+    def signature(self, dec) -> tuple:
         return density_signature(dec, self.nnz_log2_step, self.occ_bins)
 
     @staticmethod
-    def _anchor(dec: Decomposed) -> tuple:
+    def _anchor(dec) -> tuple:
         return tuple((s.kind, math.log2(s.stats["nnz"] + 1),
                       s.stats.get("brow_occupancy", 0.0))
                      for s in dec.subgraphs)
@@ -215,16 +281,18 @@ class PlanCache:
         self._entries[sig] = (plan, anchor)
         while len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)
+            self.evictions += 1
 
-    def lookup(self, dec: Decomposed) -> KernelPlan | None:
+    def lookup(self, dec) -> KernelPlan | None:
         """Resident plan for the batch's density signature, or None.
 
-        Works on a *stats-only* decomposition (``decompose(kernels=())``):
-        both the signature and the anchor read tier stats, never payloads
-        — so the hot loop can check the cache before building any format,
-        and on a hit materialize only the committed plan's payloads.
-        Counts hits/near-hits; a failed lookup is not yet a miss (the
-        caller decides whether to select).
+        Works on a *stats-only* decomposition (``decompose(kernels=())``)
+        or directly on a :class:`~repro.core.decompose.DecomposeSkeleton`:
+        both the signature and the anchor read per-tier stats, never
+        payloads — so the hot loop checks the cache straight off the
+        skeleton and on a hit materializes only the committed plan's
+        payloads.  Counts hits/near-hits; a failed lookup is not yet a
+        miss (the caller decides whether to select).
         """
         sig = self.signature(dec)
         entry = self._entries.get(sig)
@@ -243,19 +311,40 @@ class PlanCache:
     def plan_for(self, dec: Decomposed) -> tuple[KernelPlan, bool]:
         """(plan, hit): memoized plan for the batch's density signature;
         ``hit`` is True whenever selection was skipped.  ``dec`` must
-        carry candidate payloads (selection validates against them) —
-        the two-phase hot path uses :meth:`lookup` first instead."""
+        carry candidate payloads (selection validates against them, and a
+        scheduled probe times them) — the two-phase hot path uses
+        :meth:`lookup` first instead."""
         plan = self.lookup(dec)
         if plan is not None:
             return plan, True
         self.misses += 1
         plan = self.select(dec)
+        if self.probe_every and self.misses % self.probe_every == 0:
+            plan = self._probe_pin(dec)
         self._store(self.signature(dec), plan, self._anchor(dec))
         return plan, False
+
+    def _probe_pin(self, dec: Decomposed) -> KernelPlan:
+        """Feedback probing through the cache (ROADMAP probe-on-Nth-miss):
+        wall-clock-time the cost model's two cheapest candidates per
+        (layer, subgraph) and pin the measured winner — closing the loop
+        the way full-batch warmup does, amortized over every future hit on
+        this signature.  With an ``edge_budget`` the timing runs on the
+        budget-padded payload twin (the shapes the jitted step executes —
+        a real-nnz COO would underprice its padded runtime cost); the
+        cost-model ranking still reads the real stats."""
+        self.probes += 1
+        time_dec = (fix_shapes(dec, self.edge_budget)
+                    if self.edge_budget else None)
+        layers = sel_mod.probe_topk(dec, self.pairs, self.dtype, hw=self.hw,
+                                    iters=self.probe_iters,
+                                    time_dec=time_dec)
+        return KernelPlan.make(dec, layers)
 
     @property
     def stats(self) -> dict:
         total = self.hits + self.near_hits + self.misses
         return dict(hits=self.hits, near_hits=self.near_hits,
                     misses=self.misses, entries=len(self._entries),
+                    evictions=self.evictions, probes=self.probes,
                     hit_rate=(self.hits + self.near_hits) / max(total, 1))

@@ -49,19 +49,25 @@ def make_sampler(graph: graph_mod.Graph, cfg: gnn.GNNConfig):
                      "(expected 'cluster' or 'neighbor')")
 
 
-def prepare_batch(batch: SampledBatch, cfg: gnn.GNNConfig,
-                  kernels: tuple = MB_KERNELS
-                  ) -> tuple[dec_mod.Decomposed, np.ndarray]:
-    """Per-batch preprocessing: (GCN: self-loops + symmetric norm, over the
-    *sampled* subgraph) then the paper's decomposition with a pinned bucket
-    count and the budget-paddable kernel set.  Returns the decomposition
-    (real, un-padded stats — what selection and the signature read) and the
-    batch's inverse in-degree (SAGE's mean aggregator).
+def batch_edge_budget(batch: SampledBatch, cfg: gnn.GNNConfig) -> int:
+    """Padded edge-slot count the fixed-shape payloads are built to: the
+    sampler's edge budget plus one self-loop slot per (padded) node for
+    GCN.  Derived from the batch arrays alone, so it equals
+    ``sampler.edge_budget (+ sampler.node_budget)`` for every batch."""
+    return len(batch.senders) + (batch.n if cfg.model == "gcn" else 0)
 
-    ``kernels=()`` gives a stats-only decomposition (no format payloads) —
-    enough for a PlanCache lookup; on a hit the hot loop re-runs this with
-    just the committed plan's kernels, so cache-hit steps never build the
-    candidate formats selection would have compared."""
+
+def prepare_skeleton(batch: SampledBatch, cfg: gnn.GNNConfig
+                     ) -> tuple[dec_mod.DecomposeSkeleton, np.ndarray]:
+    """Single-pass per-batch preprocessing: (GCN: self-loops + symmetric
+    norm over the *sampled* subgraph) then ONE partition+stats pass
+    producing a :class:`DecomposeSkeleton` with a pinned bucket count and
+    the edge budget threaded through (budget-paddable builders key off it).
+    Also returns the batch's inverse in-degree (SAGE's mean aggregator).
+
+    The hot loop runs the PlanCache lookup against ``skel.stats_only()``
+    and materializes payloads from the same skeleton — the edges are never
+    re-partitioned, halving host-side prep vs the old two-pass flow."""
     s, r = batch.real_edges()
     vals = None
     if cfg.model == "gcn":
@@ -71,13 +77,28 @@ def prepare_batch(batch: SampledBatch, cfg: gnn.GNNConfig,
         vals = graph_mod.gcn_norm_values(batch.n, s, r)
     g = graph_mod.Graph(batch.n, s, r, batch.features, batch.labels,
                         n_classes=1, name="batch")
-    dec = dec_mod.decompose(
+    skel = dec_mod.decompose_skeleton(
         g, comm_size=cfg.comm_size, reorder=False,
         inter_buckets=max(cfg.inter_buckets, 1), edge_vals=vals,
-        kernels=kernels, keep_empty_buckets=True)
+        keep_empty_buckets=True, edge_budget=batch_edge_budget(batch, cfg))
     deg = np.bincount(r, minlength=batch.n).astype(np.float32)
     inv_deg = np.where(batch.node_mask, 1.0 / np.maximum(deg, 1.0), 0.0)
-    return dec, inv_deg.astype(np.float32)
+    return skel, inv_deg.astype(np.float32)
+
+
+def prepare_batch(batch: SampledBatch, cfg: gnn.GNNConfig,
+                  kernels: tuple = MB_KERNELS
+                  ) -> tuple[dec_mod.Decomposed, np.ndarray]:
+    """One-shot prepare: skeleton + materialize in a single call.  Returns
+    the decomposition (real, un-padded stats — what selection and the
+    signature read) and the inverse in-degree.
+
+    ``kernels=()`` gives a stats-only decomposition (no format payloads).
+    Callers that need both a lookup view and payloads should hold the
+    :func:`prepare_skeleton` result and materialize from it instead of
+    calling this twice — that is the single-pass hot path."""
+    skel, inv_deg = prepare_skeleton(batch, cfg)
+    return skel.materialize(kernels), inv_deg
 
 
 def make_sampled_step(cfg: gnn.GNNConfig, plan, counters: dict):
@@ -127,10 +148,12 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
 
     Selector modes: ``fixed`` is honored (the configured kernels dispatch
     every batch, no cache needed — they must be budget-paddable, e.g.
-    ``("block_diag", "coo")``); ``feedback`` and ``cost_model`` both
+    ``("block_diag", "bell")``); ``feedback`` and ``cost_model`` both
     select analytically through the PlanCache — per-batch wall-clock
-    probing cannot amortize over a stream of fresh subgraphs (probing on
-    Nth miss is a ROADMAP item)."""
+    probing cannot amortize over a stream of fresh subgraphs, but
+    ``cfg.probe_every`` re-adds feedback amortized over the cache's
+    lifetime: every Nth miss times the top-2 cost-model candidates and
+    pins the winner in the cached entry."""
     if cfg.model not in ("gcn", "gin", "sage"):
         raise ValueError(f"mini-batch training supports gcn/gin/sage, "
                          f"not {cfg.model!r}")
@@ -139,41 +162,54 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     sampler = make_sampler(graph, cfg)
     in_dim = graph.features.shape[-1]
     pairs = gnn.agg_width_pairs(cfg, in_dim, graph.n_classes)
-    cache = plan_cache or PlanCache(pairs, dtype=np.float32,
-                                    hw=sel_mod.default_hw(),
-                                    max_entries=cfg.cache_entries)
     # total budget the padded payloads see: sampled edges + GCN self-loops
     pad_budget = sampler.edge_budget + (sampler.node_budget
                                         if cfg.model == "gcn" else 0)
+    cache = plan_cache or PlanCache(pairs, dtype=np.float32,
+                                    hw=sel_mod.default_hw(),
+                                    max_entries=cfg.cache_entries,
+                                    probe_every=cfg.probe_every,
+                                    edge_budget=pad_budget)
 
     key = jax.random.PRNGKey(cfg.seed)
     params = gnn.init_model(key, cfg, in_dim, graph.n_classes)
     opt = gnn._adam_init(params)
 
+    # canonical preserved signature per step-fn key (= plan.layers): the
+    # bins fix_shapes stamps on the traced Decomposed are static jit
+    # metadata, so every batch sharing a step function must carry the SAME
+    # value — first signature seen for a layer tuple wins
+    sig_of_layers: dict[tuple, tuple] = {}
+
     def plan_and_fix(batch):
-        """Two-phase prepare: stats-only decomposition for the cache
-        lookup; payloads built only for the committed plan on a hit (the
-        full candidate set only when selection actually runs).  A fixed
-        selector skips the cache outright."""
+        """Single-pass prepare: one partition into a skeleton, cache
+        lookup on its stats-only view, then payloads materialized from the
+        *same* skeleton — only the committed plan's on a hit, the full
+        candidate set only when selection (or a scheduled probe) actually
+        runs.  A fixed selector skips the cache outright."""
+        skel, inv_deg = prepare_skeleton(batch, cfg)
         if fixed_names is not None:
-            dec, inv_deg = prepare_batch(batch, cfg, kernels=fixed_names)
+            dec = skel.materialize(fixed_names)
             plan = KernelPlan.make(dec, fixed_names, n_layers=cfg.n_layers)
-            fixed = fix_shapes(dec, pad_budget,
-                               keep=plan_payload_keys(plan))
-            return plan, fixed, inv_deg, True
-        dec0, inv_deg = prepare_batch(batch, cfg, kernels=())
-        plan = cache.lookup(dec0)
-        hit = plan is not None
-        if hit:
-            names = tuple({k for layer in plan.layers for k in layer})
-            dec, _ = prepare_batch(batch, cfg, kernels=names)
+            hit = True
         else:
-            dec, _ = prepare_batch(batch, cfg)
-            plan, _ = cache.plan_for(dec)
+            # signature/anchor read tier stats only, so the skeleton is
+            # consumed directly — no payload-free Decomposed on the hot path
+            plan = cache.lookup(skel)
+            hit = plan is not None
+            if hit:
+                # tier i materializes only the payloads the plan
+                # dispatches on tier i (per-subgraph keep sets)
+                dec = skel.materialize(plan_payload_keys(plan))
+            else:
+                dec = skel.materialize(MB_KERNELS)
+                plan, _ = cache.plan_for(dec)
+        sig = sig_of_layers.setdefault(plan.layers, cache.signature(skel))
         # only the payloads this plan dispatches cross the jit boundary;
-        # the keep set is a function of the plan, so batches sharing a
+        # the keep sets are a function of the plan, so batches sharing a
         # step function share one treedef
-        fixed = fix_shapes(dec, pad_budget, keep=plan_payload_keys(plan))
+        fixed = fix_shapes(dec, pad_budget, keep=plan_payload_keys(plan),
+                           stats=sig)
         return plan, fixed, inv_deg, hit
 
     counters = dict(traces=0)
@@ -204,8 +240,12 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         t_step.append(time.perf_counter() - t0)
         losses.append(float(loss))
         if verbose and i % 10 == 0:
+            cs = cache.stats
             print(f"batch {i:4d} loss {float(loss):.4f} "
-                  f"cache_hit={hit} plan={plan.layers[0]}")
+                  f"cache_hit={hit} plan={plan.layers[0]} "
+                  f"cache[h={cs['hits']} nh={cs['near_hits']} "
+                  f"m={cs['misses']} ev={cs['evictions']} "
+                  f"pr={cs['probes']} rate={cs['hit_rate']:.2f}]")
 
     # snapshot before the eval loop below adds its own (mostly-hit)
     # lookups: the reported rate is the *training* steady state

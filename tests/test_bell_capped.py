@@ -1,0 +1,186 @@
+"""Budget-padded blocked-ELL (capped K + COO spill): the mini-batch variant
+of the flagship inter kernel.
+
+Property tests: for any random graph tier and any cap, the capped payload's
+forward AND backward (through the registry dispatch, i.e. the Pallas kernel
++ the spill segment-sum, with their custom VJPs) must match the uncapped
+``bell`` kernel and the dense reference — pad + spill is a *decomposition*
+of the same matrix, never an approximation.  Plus the fixed-shape contract
+itself: payloads built at one budget share one pytree/shape signature no
+matter the batch's edges, which is what admits ``bell`` to ``MB_KERNELS``
+and keeps the jitted step at one trace.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import formats, gnn
+from repro.graphs import graph as G
+from repro.kernels.registry import REGISTRY
+from repro.sampling.plan_cache import MB_KERNELS
+from repro.train import gnn_steps
+
+
+def random_tier(seed, n, nnz):
+    rng = np.random.default_rng(seed)
+    r = rng.integers(0, n, nnz)
+    c = rng.integers(0, n, nnz)
+    key = r.astype(np.int64) * n + c
+    _, keep = np.unique(key, return_index=True)
+    r, c = r[keep], c[keep]
+    v = rng.standard_normal(len(r)).astype(np.float32)
+    return formats.coo_from_edges(n, n, r, c, v), \
+        formats.coo_from_edges(n, n, c, r, v)
+
+
+def dense_of(coo: formats.COO) -> np.ndarray:
+    a = np.zeros((coo.n_rows, coo.n_cols), np.float32)
+    a[np.asarray(coo.rows), np.asarray(coo.cols)] = np.asarray(coo.vals)
+    return a
+
+
+def capped_payload(coo, coo_t, B, k_max):
+    """Registry build path, with the budget reverse-engineered so
+    bell_budget_k lands exactly on k_max (inf -> the uncapped-equivalent
+    block-column bound)."""
+    nbr = coo.n_rows // B
+    if k_max is None:                      # "infinite" cap
+        budget = coo.n_rows * coo.n_cols   # -> K = nbr (vacuous cap)
+    else:
+        budget = max(1, int(k_max * nbr * B / 2.0))   # slack = 2.0
+        assert formats.bell_budget_k(budget, coo.n_rows, B) == min(k_max, nbr)
+    stats = dict(nnz=coo.nnz, edge_budget=budget)
+    return REGISTRY.get("bell").build(coo, coo_t, B, stats)
+
+
+CAPS = [1, 2, 8, None]     # None = unbounded (no spill)
+
+
+@settings(max_examples=14, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nnz=st.integers(1, 600),
+       cap_i=st.integers(0, len(CAPS) - 1), bf16=st.booleans())
+def test_capped_bell_matches_uncapped_and_dense(seed, nnz, cap_i, bf16):
+    dtype, tol = (jnp.bfloat16, 2e-1) if bf16 else (jnp.float32, 1e-4)
+    n, B, F = 64, 8, 16
+    k_max = CAPS[cap_i]
+    coo, coo_t = random_tier(seed, n, nnz)
+    A = dense_of(coo)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(rng.standard_normal((n, F)).astype(np.float32), dtype)
+    spec = REGISTRY.get("bell")
+
+    p = capped_payload(coo, coo_t, B, k_max)
+    assert len(p) == 3 and p[0].budgeted and p[1].budgeted
+    if k_max is None:
+        assert p[2].nnz == 0               # unbounded cap never spills
+    # stored + spilled edges partition the tier exactly (no dup, no drop)
+    stored_nnz = int(np.count_nonzero(np.asarray(jax.device_get(p[0].blocks))))
+    assert stored_nnz + p[2].nnz == coo.nnz
+    y = np.asarray(jax.device_get(spec.matvec(p, x)), np.float32)
+
+    # uncapped bell payload (full-batch build path)
+    p_full = spec.build(coo, coo_t, B, dict(nnz=coo.nnz))
+    y_full = np.asarray(jax.device_get(spec.matvec(p_full, x)), np.float32)
+    y_ref = A @ np.asarray(jax.device_get(x), np.float32)
+
+    np.testing.assert_allclose(y, y_ref, rtol=tol, atol=tol)
+    np.testing.assert_allclose(y, y_full, rtol=tol, atol=tol)
+
+    # backward: d sum(A@x) / dx = A^T 1 through the capped custom VJP +
+    # natively-differentiated spill
+    g = jax.grad(lambda xx: spec.matvec(p, xx).astype(jnp.float32).sum())(x)
+    g_ref = A.T @ np.ones((n, F), np.float32)
+    np.testing.assert_allclose(np.asarray(jax.device_get(g), np.float32),
+                               g_ref, rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nnz=st.integers(1, 600),
+       cap_i=st.integers(0, len(CAPS) - 1), bf16=st.booleans())
+def test_capped_bell_fused_matches_dense(seed, nnz, cap_i, bf16):
+    dtype, tol = (jnp.bfloat16, 2e-1) if bf16 else (jnp.float32, 1e-4)
+    n, B, Fi, Fo = 64, 8, 12, 16
+    coo, coo_t = random_tier(seed, n, nnz)
+    A = dense_of(coo)
+    rng = np.random.default_rng(seed + 2)
+    x = jnp.asarray(rng.standard_normal((n, Fi)).astype(np.float32), dtype)
+    w = jnp.asarray(rng.standard_normal((Fi, Fo)).astype(np.float32), dtype)
+    p = capped_payload(coo, coo_t, B, CAPS[cap_i])
+    spec = REGISTRY.get("bell_fused")
+
+    xf = np.asarray(jax.device_get(x), np.float32)
+    wf = np.asarray(jax.device_get(w), np.float32)
+    y = np.asarray(jax.device_get(spec.fused_matvec(p, x, w)), np.float32)
+    np.testing.assert_allclose(y, A @ (xf @ wf), rtol=tol, atol=tol)
+
+    gx, gw = jax.grad(
+        lambda xx, ww: spec.fused_matvec(p, xx, ww).astype(jnp.float32).sum(),
+        argnums=(0, 1))(x, w)
+    ones = np.ones((n, Fo), np.float32)
+    np.testing.assert_allclose(np.asarray(jax.device_get(gx), np.float32),
+                               (A.T @ ones) @ wf.T, rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(jax.device_get(gw), np.float32),
+                               xf.T @ (A.T @ ones), rtol=tol, atol=tol)
+
+
+def test_capped_payload_shape_fixed_across_edge_sets():
+    """Two batches with very different edges but one budget must produce
+    identical treedefs and leaf shapes — the MB_KERNELS admission rule."""
+    n, B, budget = 64, 8, 500
+    sigs = []
+    for seed, nnz in [(0, 30), (1, 480), (2, 1)]:
+        coo, coo_t = random_tier(seed, n, nnz)
+        p = REGISTRY.get("bell").build(coo, coo_t, B,
+                                       dict(nnz=coo.nnz, edge_budget=budget))
+        # pad the spill like fix_shapes would
+        from repro.sampling.plan_cache import _pad_coo
+        p = p[:2] + (_pad_coo(p[2], budget),)
+        leaves, treedef = jax.tree_util.tree_flatten(p)
+        sigs.append((treedef, [(np.shape(l), np.asarray(l).dtype)
+                               for l in leaves]))
+    assert sigs[0] == sigs[1] == sigs[2]
+
+
+def test_bell_budget_k_bounds():
+    assert formats.bell_budget_k(0, 64, 8) == 1
+    assert formats.bell_budget_k(10**9, 64, 8) == 8      # <= block columns
+    k1 = formats.bell_budget_k(200, 64, 8)
+    k2 = formats.bell_budget_k(400, 64, 8)
+    assert 1 <= k1 <= k2 <= 8                            # monotone in budget
+
+
+def test_uncapped_payload_rejected_by_fix_shapes():
+    """A data-dependent-K payload must not silently enter the mini-batch
+    path (it would retrace every batch)."""
+    from repro.sampling.plan_cache import _pad_payload
+    coo, coo_t = random_tier(0, 64, 200)
+    p = REGISTRY.get("bell").build(coo, coo_t, 8, dict(nnz=coo.nnz))
+    with pytest.raises(TypeError, match="budget"):
+        _pad_payload("bell", p, 500)
+
+
+def test_no_retrace_with_bell_in_mb_kernels():
+    """Trace-counter contract: with bell admitted to MB_KERNELS the jitted
+    step still compiles exactly once across batches (fixed selector pins
+    the plan so the count isolates payload-shape stability)."""
+    assert "bell" in MB_KERNELS and "bell_fused" in MB_KERNELS
+    rng = np.random.default_rng(0)
+    n = 128
+    src = rng.integers(0, n, 1500).astype(np.int32)
+    dst = rng.integers(0, n, 1500).astype(np.int32)
+    key = src.astype(np.int64) * n + dst
+    _, keep = np.unique(key, return_index=True)
+    src, dst = src[keep], dst[keep]
+    feats = rng.standard_normal((n, 5)).astype(np.float32)
+    labels = rng.integers(0, 3, n).astype(np.int32)
+    g = G.Graph(n, src, dst, feats, labels, 3)
+    cfg = gnn.GNNConfig(model="gin", sampler="cluster", comm_size=8,
+                        clusters_per_batch=4, inter_buckets=2,
+                        reorder="bfs", selector="fixed",
+                        fixed_kernels=("block_diag", "bell"))
+    res = gnn_steps.train_minibatch(g, cfg, steps=6, eval_batches=1)
+    assert res.n_traces == 1
+    assert res.plans == [(("block_diag", "bell", "bell"),) * cfg.n_layers]
+    assert np.isfinite(res.losses).all()

@@ -157,7 +157,7 @@ def test_plan_cache_hit_miss_and_eviction():
     plan2, hit2 = cache.plan_for(dec)
     assert not hit1 and hit2 and plan2 is plan1
     assert cache.stats == dict(hits=1, near_hits=0, misses=1, entries=1,
-                               hit_rate=0.5)
+                               evictions=0, probes=0, hit_rate=0.5)
     # the memoized plan equals fresh selection (cache changes cost, not
     # outcome)
     assert cache.select(dec).layers == plan1.layers
@@ -185,13 +185,15 @@ def test_plan_cache_hit_miss_and_eviction():
     _, hit3 = cache.plan_for(dec2)
     assert not hit3
 
-    # LRU bound evicts the oldest signature
+    # LRU bound evicts the oldest signature (and counts the eviction)
     tiny = PlanCache(pairs, max_entries=1)
     tiny.plan_for(dec)
     tiny.plan_for(dec2)
     assert tiny.stats["entries"] == 1
+    assert tiny.stats["evictions"] == 1
     _, hit = tiny.plan_for(dec)      # evicted -> miss again
     assert not hit
+    assert tiny.stats["evictions"] == 2
 
 
 def test_density_signature_quantizes():
@@ -281,6 +283,106 @@ def test_neighbor_budgets_clamped_to_graph():
     b = s.sample()
     assert b.n_real_nodes <= s.node_budget
     assert b.n_real_edges <= s.edge_budget
+
+
+def dense_community_graph(nb=4, B=64, inter_draws=100, intra_draws=6,
+                          seed=0, nf=16, nc=4):
+    """Fully-connected dense communities: every off-diagonal (B,B) block is
+    ~80% dense — the blocked-ELL regime (few stored blocks, each nearly
+    full, so the MXU path beats gather/scatter on any sampled pair)."""
+    n = nb * B
+    rng = np.random.default_rng(seed)
+    src_l, dst_l = [], []
+    for i in range(nb):
+        s = rng.integers(0, B, intra_draws * B)
+        d = rng.integers(0, B, intra_draws * B)
+        src_l.append(i * B + s)
+        dst_l.append(i * B + d)
+        for j in range(nb):
+            if i == j:
+                continue
+            s = rng.integers(0, B, inter_draws * B)
+            d = rng.integers(0, B, inter_draws * B)
+            src_l.append(j * B + s)
+            dst_l.append(i * B + d)
+    src = np.concatenate(src_l)
+    dst = np.concatenate(dst_l)
+    eid = src.astype(np.int64) * n + dst
+    _, keep = np.unique(eid, return_index=True)
+    src, dst = src[keep].astype(np.int32), dst[keep].astype(np.int32)
+    feats = rng.standard_normal((n, nf)).astype(np.float32)
+    labels = rng.integers(0, nc, n).astype(np.int32)
+    return G.Graph(n, src, dst, feats, labels, nc)
+
+
+def test_cost_model_selects_bell_on_dense_inter_profile():
+    """Acceptance bar for the budget-padded blocked-ELL: on a sampled
+    batch whose inter tiers are dense block neighborhoods, the cost model
+    must commit bell (unfused, GIN) / bell_fused (transform-first, GCN)
+    for inter tiers, and the jitted step must compile exactly once across
+    batches with them dispatched."""
+    g = dense_community_graph()
+    for model, kernel in (("gin", "bell"), ("gcn", "bell_fused")):
+        cfg = gnn.GNNConfig(model=model, sampler="cluster", comm_size=64,
+                            clusters_per_batch=2, reorder="bfs",
+                            inter_buckets=2)
+        res = gnn_steps.train_minibatch(g, cfg, steps=6, eval_batches=1)
+        used = {k for plan in res.plans for layer in plan for k in layer}
+        assert kernel in used, (model, res.plans)
+        assert res.n_traces == 1            # one compile, bell dispatched
+        assert np.isfinite(res.losses).all()
+
+
+def test_fix_shapes_preserves_signature_bins():
+    """fix_shapes used to scrub *all* stats; with ``stats=`` it stamps the
+    plan's quantized signature bins on the fixed Decomposed (per-subgraph
+    dicts stay scrubbed — their bins live in the signature tuple)."""
+    g = small_graph(n=128, e=1200)
+    cfg = gnn.GNNConfig(model="gcn", sampler="cluster", comm_size=8,
+                        clusters_per_batch=4, inter_buckets=2,
+                        reorder="bfs")
+    sampler = gnn_steps.make_sampler(g, cfg)
+    budget = sampler.edge_budget + sampler.node_budget
+    dec, _ = gnn_steps.prepare_batch(sampler.sample(), cfg)
+    sig = density_signature(dec)
+    fixed = fix_shapes(dec, budget, stats=sig)
+    assert fixed.stats == sig
+    assert hash(fixed.stats) is not None     # static jit metadata: hashable
+    assert all(s.stats is None for s in fixed.subgraphs)
+    # default stays the full scrub
+    assert fix_shapes(dec, budget).stats is None
+    # and the training loop stamps one canonical signature per step fn
+    res = gnn_steps.train_minibatch(g, cfg, steps=4, eval_batches=1)
+    assert res.n_traces == len(res.plans)
+
+
+def test_plan_cache_probe_on_nth_miss():
+    """Every Nth miss wall-clocks the top-2 cost-model candidates and pins
+    the measured winner (the full-batch probe machinery, amortized through
+    the cache)."""
+    g = small_graph(n=96, e=700)
+    cfg = gnn.GNNConfig(model="gin", sampler="cluster", comm_size=8,
+                        clusters_per_batch=4, inter_buckets=2,
+                        reorder="bfs")
+    sampler = gnn_steps.make_sampler(g, cfg)
+    dec, _ = gnn_steps.prepare_batch(sampler.sample(), cfg)
+    pairs = gnn.agg_width_pairs(cfg, g.features.shape[-1], g.n_classes)
+
+    probing = PlanCache(pairs, probe_every=1)
+    plan, hit = probing.plan_for(dec)
+    assert not hit and probing.stats["probes"] == 1
+    # the pinned plan is a valid registry plan over this decomposition
+    assert len(plan.layers) == len(pairs)
+    for layer in plan.layers:
+        assert len(layer) == len(dec.subgraphs)
+    # second lookup reuses the pinned entry, no new probe
+    plan2, hit2 = probing.plan_for(dec)
+    assert hit2 and plan2 is plan and probing.stats["probes"] == 1
+
+    # probe_every=0 (default) never probes
+    cold = PlanCache(pairs)
+    cold.plan_for(dec)
+    assert cold.stats["probes"] == 0
 
 
 def test_minibatch_fixed_selector_is_honored():
