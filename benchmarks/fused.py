@@ -1,13 +1,22 @@
-"""Fused transform+aggregate vs the unfused two-pass GCN layer.
+"""Fused transform+aggregate vs the unfused two-pass layer, per model.
 
-Rows measure one GCN layer Y = A (X W) + b on the block-diagonal-dominant
+GCN rows measure one layer Y = A (X W) + b on the block-diagonal-dominant
 synthetic graph (aligned MXU-scale communities, ring-structured inter
 edges): the fully-fused plan against the unfused Pallas pair with the
 standalone XLA transform, plus per-tier kernel rows isolating where the
 saved H round-trip lands.  The expanding layer width (fin < fout) is the
 regime fusion targets — the unfused path materializes the *wide* H.
+
+GIN/SAGE rows measure the epilogue-fused layers (core.epilogue) against
+the *legacy* unfused layers that aggregate raw features and apply the
+dense epilogue after.  Their winning regime is the contracting width
+(fin > fout): pushing W through the aggregation shrinks the aggregated
+width from fin to fout/hidden and kills the (n, fin) intermediate, so the
+model rows run the GCN widths in the opposite direction.
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 import jax
@@ -67,6 +76,99 @@ def run(n: int = 2048, e: int = 30000, fin: int = 64, fout: int = 512,
     rows.append(dict(n=n, fin=fin, fout=fout, speedup=speedup,
                      **{k: v * 1e6 for k, v in times.items()},
                      **{k: v * 1e6 for k, v in tier_times.items()}))
+    # epilogue-fused GIN/SAGE on the contracting profile (widths reversed)
+    rows += run_models(n=n, e=e, fin=fout, fout=fin, verbose=verbose)
+    return rows
+
+
+def run_models(n: int = 2048, e: int = 30000, fin: int = 512, fout: int = 64,
+               verbose: bool = True) -> list[dict]:
+    """Epilogue-fused GIN/SAGE layers vs their legacy unfused forms.
+
+    The unfused baselines aggregate raw features at width ``fin`` and
+    apply the dense epilogue after (the pre-epilogue-fusion dispatch).
+    The epilogue layers push the weight through the aggregation (width
+    ``fout``) and dispatch the plan the cost model commits *under the
+    layer's epilogue on this machine's hw model* — exactly what training
+    does: fused Pallas kernels where they are modeled to win (SAGE's dual
+    epilogue pays the shared-transform surcharge unfused), unfused
+    candidates where the epilogue makes the transform free and the
+    pushdown alone carries the win (GIN on compute-bound backends)."""
+    from repro.core import epilogue as ep_mod, selector as sel_mod
+    src, dst = G.aligned_community_graph(n, e, block=128, intra_frac=0.9,
+                                         seed=0)
+    g = G.Graph(n, src, dst, np.zeros((n, 4), np.float32),
+                np.zeros(n, np.int32), 2)
+    # SAGE's mean norm baked into the edge values (core.gnn.prepare does
+    # this); GIN sums, so the same unit-valued decomposition serves both
+    dec_mean = decompose.decompose(
+        g, comm_size=128, method="bfs", reorder=False, inter_buckets=1,
+        edge_vals=G.mean_norm_values(n, src, dst))
+    dec_sum = decompose.decompose(g, comm_size=128, method="bfs",
+                                  reorder=False, inter_buckets=1)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((dec_sum.n_pad, fin)), jnp.float32)
+    w_n = jnp.asarray(rng.standard_normal((fin, fout)), jnp.float32)
+    w_s = jnp.asarray(rng.standard_normal((fin, fout)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(fout), jnp.float32)
+    gin_p = dict(eps=jnp.zeros(()), w1=w_n, b1=b,
+                 w2=jnp.asarray(rng.standard_normal((fout, 16)), jnp.float32),
+                 b2=jnp.asarray(rng.standard_normal(16), jnp.float32))
+    hw = sel_mod.default_hw()
+    plans = {
+        "sage": sel_mod.select_by_cost_model(
+            dec_mean, fout, hw=hw, in_dim=fin,
+            epilogue=ep_mod.EpilogueSpec(kind="dual", mean_norm=True)),
+        "gin": sel_mod.select_by_cost_model(
+            dec_sum, fout, hw=hw, in_dim=fin,
+            epilogue=ep_mod.EpilogueSpec(kind="mlp", activation="relu",
+                                         out_dim=16)),
+    }
+
+    def sage_unfused(x):
+        agg = adaptgear.aggregate(dec_mean, x, UNFUSED_PLAN, acc=False)
+        return x @ w_s + agg @ w_n + b
+
+    def gin_unfused(x):
+        agg = adaptgear.aggregate(dec_sum, x, UNFUSED_PLAN, acc=False)
+        h = (1.0 + gin_p["eps"]) * x + agg
+        return jax.nn.relu(h @ w_n + b) @ gin_p["w2"] + gin_p["b2"]
+
+    layers = {
+        "sage": (jax.jit(sage_unfused),
+                 jax.jit(lambda x: adaptgear.sage_conv(
+                     dict(w_self=w_s, w_neigh=w_n, b=b), dec_mean, x,
+                     plans["sage"]))),
+        "gin": (jax.jit(gin_unfused),
+                jax.jit(lambda x: adaptgear.gin_conv(
+                    gin_p, dec_sum, x, plans["gin"]))),
+    }
+    rows = []
+    for model, (unf, fus) in layers.items():
+        # interleave the pair so machine-load noise hits both alike (the
+        # paired-ratio estimator minibatch.py uses for host prepare): an
+        # unpaired A-then-B measurement inverts the ratio under load spikes
+        jax.block_until_ready(unf(x))
+        jax.block_until_ready(fus(x))
+        tu_s, tf_s = [], []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(unf(x))
+            tu_s.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fus(x))
+            tf_s.append(time.perf_counter() - t0)
+        tu, tf = min(tu_s), min(tf_s)
+        speedup = float(np.median(np.asarray(tu_s) / np.asarray(tf_s)))
+        if verbose:
+            emit(f"fused_{model}_layer_unfused", tu * 1e6,
+                 f"n={n};fin={fin};fout={fout} (legacy aggregate-at-fin)")
+            emit(f"fused_{model}_layer_fused", tf * 1e6,
+                 f"paired_speedup_vs_unfused={speedup:.2f}x "
+                 f"plan={','.join(plans[model])}")
+        rows.append(dict(model=model, n=n, fin=fin, fout=fout,
+                         unfused_us=tu * 1e6, fused_us=tf * 1e6,
+                         speedup=speedup, plan=plans[model]))
     return rows
 
 

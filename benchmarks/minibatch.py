@@ -19,6 +19,13 @@ Rows (the *_us rows are gated by benchmarks/baseline.json in CI):
   * ``cache_hit_rate_pct``    — PlanCache health (hits / near-hits /
     misses / evictions / probes in the derived column) so the trend table
     tracks cache behavior per commit
+  * ``skeleton_hit_rate_pct`` — repeated cluster tuples reusing a cached
+    DecomposeSkeleton (skipping even the single partition pass)
+  * ``sage_fused_step`` — mini-batch SAGE step time with the cost model
+    free to commit the fused dual-weight epilogue plan
+  * ``budget_k_slack``  — adapted blocked-ELL budget slack (value column =
+    the slack factor; spill fraction and slack steps in the derived
+    column), from a short run with ``adapt_budget_k`` on
 """
 from __future__ import annotations
 
@@ -127,11 +134,40 @@ def run(dataset: str = "pubmed", scale: float = 0.05, steps: int = 25,
         model="gcn", selector="cost_model", reorder="louvain",
         inter_buckets=2), steps=6)
 
+    # epilogue-fused mini-batch SAGE (dual-weight plan when the cost model
+    # commits it) — the hot path the epilogue fusion targets
+    sage_cfg = gnn.GNNConfig(model="sage", sampler="cluster",
+                             reorder="louvain",
+                             clusters_per_batch=clusters_per_batch,
+                             inter_buckets=2)
+    sage_res = gnn_steps.train_minibatch(graph, sage_cfg,
+                                         steps=max(steps // 2, 6),
+                                         eval_batches=1)
+    sage_used = sorted({k for plan in sage_res.plans
+                        for layer in plan for k in layer})
+
+    # budget-K autotuning: short adaptive run, slack + spill in the JSON
+    adapt_cfg = gnn.GNNConfig(model="gin", sampler="cluster",
+                              reorder="louvain",
+                              clusters_per_batch=clusters_per_batch,
+                              inter_buckets=2, adapt_budget_k=True)
+    adapt_res = gnn_steps.train_minibatch(graph, adapt_cfg,
+                                          steps=max(steps // 2, 8),
+                                          eval_batches=1)
+    ac = adapt_res.cache
+
+    skel_total = res.skeleton_hits + res.skeleton_misses
+    skel_rate = res.skeleton_hits / max(skel_total, 1)
+
     out = dict(hit_rate=hit_rate, cache=res.cache, n_traces=res.n_traces,
                t_cached=t_cached, t_uncached=t_uncached,
                prepare_us=prep_one_us, prepare_twopass_us=prep_two_us,
                prepare_speedup=prep_speedup,
-               sampled_step=res.step_seconds, full_step=full.step_seconds)
+               sampled_step=res.step_seconds, full_step=full.step_seconds,
+               sage_step=sage_res.step_seconds, sage_plans=sage_used,
+               skeleton_hit_rate=skel_rate,
+               bell_slack=ac.get("bell_slack"),
+               spill_frac=ac.get("spill_frac"))
     if verbose:
         emit("selection_uncached_us", t_uncached * 1e6,
              f"per-batch cost-model selection x{len(decs)}")
@@ -154,6 +190,15 @@ def run(dataset: str = "pubmed", scale: float = 0.05, steps: int = 25,
              f"hits={c['hits']} near={c['near_hits']} miss={c['misses']} "
              f"evict={c['evictions']} probes={c['probes']} "
              f"entries={c['entries']}")
+        emit("skeleton_hit_rate_pct", skel_rate * 100,
+             f"hits={res.skeleton_hits} misses={res.skeleton_misses} "
+             "(repeated cluster tuples skip decompose_skeleton)")
+        emit("sage_fused_step", sage_res.step_seconds * 1e6,
+             f"traces={sage_res.n_traces} kernels={','.join(sage_used)}")
+        emit("budget_k_slack", ac.get("bell_slack", 0.0),
+             f"spill_frac={ac.get('spill_frac', 0.0):.4f} "
+             f"slack_changes={ac.get('slack_changes', 0)} "
+             f"spill_nnz={ac.get('spill_nnz', 0)}")
     return out
 
 

@@ -16,15 +16,25 @@ Architecture (data flow, one arrow per module boundary):
       |         device memory.
       |  core.selector (feedback probe | analytic cost model), candidates
       |  enumerated from the registry per subgraph; on transform-first
-      |  layers (GCN) fused transform+aggregate kernels compete: the cost
+      |  layers fused transform+aggregate kernels compete: the cost
       |  model surcharges unfused candidates their share of the shared
-      |  H = X W pass, the feedback probe times it
+      |  H = X W pass, the feedback probe times it.  Every model's dense
+      |  epilogue is described by a core.epilogue.EpilogueSpec (linear =
+      |  GCN bias, dual = SAGE's W_self x + W_neigh agg with the mean
+      |  norm baked into the edge values, mlp = GIN's 2-layer MLP whose
+      |  W1 pushes through the aggregation by linearity): the spec makes
+      |  GIN/SAGE transform-first too, zeroes the unfused surcharge where
+      |  the epilogue's self term computes H anyway (mlp free_transform),
+      |  and adds the flat dense epilogue terms to whole-layer totals
       v
-  core.plan.KernelPlan -- per-layer x per-subgraph kernel names
-      |  core.adaptgear.aggregate / aggregate_transform / core.gnn.forward
+  core.plan.KernelPlan -- per-layer x per-subgraph kernel names (+ the
+      |  per-layer EpilogueSpecs the plan was selected under)
+      |  core.adaptgear.aggregate / aggregate_transform(_dual) /
+      |  core.gnn.forward
       v
-  Y = sum_s A_s @ X   (or A_s @ (X W) + b fused), each subgraph dispatched
-  through its registered kernel:
+  Y = sum_s A_s @ X   (or A_s @ (X W) + seed fused — the seed carries the
+  epilogue self terms: GCN's bias, SAGE's X W_self, GIN's (1+eps) X W1),
+  each subgraph dispatched through its registered kernel:
     * unfused matvec      -- Pallas MXU block kernels, XLA gather/segment
     * matvec_acc          -- accumulation mode: one output buffer threads
                              through the subgraph list, Pallas kernels seed
@@ -36,7 +46,13 @@ Architecture (data flow, one arrow per module boundary):
                              consumed immediately; the custom VJP runs the
                              same fused form over the materialized transpose
                              payload for dX and a blocked dW reduction —
-                             no (n, F) intermediate in forward or backward
+                             no (n, F) intermediate in forward or backward.
+                             CSR/sell-C-sigma get per-edge gathered-
+                             transform fused paths (csr_fused, sell_fused)
+    * fused_dual_matvec   -- the dual-weight epilogue on the diagonal tier:
+                             X W_self + A (X W_neigh) with BOTH stripes in
+                             VMEM (the row block is its own source block),
+                             gated on accumulation mode like matvec_acc
 
 Adding a kernel = one KernelSpec registration (name, kinds, format builder,
 matvec / fused_matvec, cost fn) in one file — kernels/csr.py is the
@@ -59,14 +75,22 @@ a SINGLE-PASS skeleton prepare:
       |  keep_empty_buckets=True, edge_budget=...)   [ONE partition+stats
       |  pass per batch; tiers row-sorted once, payloads NOT built yet]
       v
-  DecomposeSkeleton -- per-tier edge arrays + density stats
+  DecomposeSkeleton -- per-tier edge arrays + density stats (repeated
+      |  cluster tuples skip even this: a small LRU keyed by the drawn
+      |  tuple memoizes the skeleton, cfg.skeleton_cache_entries)
       |  sampling.plan_cache.PlanCache.lookup(skel): quantized density
       |  signature (per-tier log2-nnz + block-row occupancy) -> memoized
       |  KernelPlan, read straight off the skeleton's tier stats;
       |  cost-model selection on a miss only (materializing the full
       |  MB_KERNELS candidate set from the same skeleton); probe-on-Nth-
-      |  miss (cfg.probe_every) wall-clocks the top-2 modeled candidates
-      |  and pins the measured winner in the cached entry
+      |  miss (cfg.probe_every) wall-clocks the modeled frontier — top-2,
+      |  widened up to cfg.probe_k_max when the modeled margin sits
+      |  inside the model's own observed error band, capped at
+      |  cfg.probe_budget_s wall seconds — and pins the measured winner
+      |  in the cached entry.  With cfg.adapt_budget_k the cache also
+      |  feeds committed capped-bell spill back into the blocked-ELL
+      |  budget cap's slack factor (padding waste vs spill volume per
+      |  workload; the adapted slack keys the signature)
       v
   skel.materialize(plan_payload_keys(plan)) -- tier i builds only the
       |  payloads the committed plan dispatches on tier i; the edges are

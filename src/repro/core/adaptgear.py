@@ -96,14 +96,24 @@ def aggregate(dec: Decomposed, x: jax.Array,
 def aggregate_transform(dec: Decomposed, x: jax.Array, w: jax.Array,
                         kernels: Sequence[str] = DEFAULT_KERNELS,
                         bias: jax.Array | None = None, *,
+                        seed: jax.Array | None = None,
+                        h: jax.Array | None = None,
                         acc: bool | None = None) -> jax.Array:
-    """Y = A @ (X W) (+ bias) with per-subgraph fused/unfused kernels.
+    """Y = A @ (X W) (+ bias / + seed) with per-subgraph fused/unfused
+    kernels.
 
-    The transform-first hot path (GCN): fused kernels consume the raw
-    features and weight directly (H = X W never round-trips HBM); H is
-    materialized once only if some subgraph picked an unfused kernel.  The
-    bias seeds the threaded accumulator, so it rides along for free in
-    accumulation mode.
+    The transform-first hot path (GCN, and through the epilogue rewrite
+    also GIN/SAGE): fused kernels consume the raw features and weight
+    directly (H = X W never round-trips HBM); H is materialized once only
+    if some subgraph picked an unfused kernel.  The bias seeds the threaded
+    accumulator, so it rides along for free in accumulation mode.
+
+    ``seed`` generalizes ``bias`` to a full (n, Fo) accumulator seed — the
+    epilogue self terms (GIN's ``(1+eps) X W1 + b1``) enter the threaded
+    accumulation through it instead of a separate add.  ``h`` optionally
+    supplies a precomputed transform for the unfused candidates (GIN's
+    ``S = X W1`` is already materialized for the self term; recomputing it
+    here would double the transform).
 
     ``acc=None`` resolves by backend: on TPU the threaded accumulator saves
     one full-width HBM tensor per density bucket; on CPU (interpret mode)
@@ -113,9 +123,14 @@ def aggregate_transform(dec: Decomposed, x: jax.Array, w: jax.Array,
         acc = jax.default_backend() == "tpu"
     names = plan_mod.normalize_layer(dec, kernels)
     specs = [REGISTRY.get(k) for k in names]
-    h = x @ w if any(not s.fused for s in specs) else None
+    if h is None:
+        h = x @ w if any(not s.fused for s in specs) else None
     y = None
-    if bias is not None:
+    if seed is not None:
+        if bias is not None:
+            raise ValueError("pass either bias or seed, not both")
+        y = seed.astype(x.dtype)
+    elif bias is not None:
         y = jnp.broadcast_to(bias.astype(x.dtype), (x.shape[0], w.shape[-1]))
     for sub, spec in zip(dec.subgraphs, specs):
         payload = sub.formats[spec.payload_key]
@@ -134,6 +149,57 @@ def aggregate_transform(dec: Decomposed, x: jax.Array, w: jax.Array,
             else:
                 y = y + spec.matvec(payload, h)
     return y
+
+
+def aggregate_transform_dual(dec: Decomposed, x: jax.Array, w: jax.Array,
+                             w_self: jax.Array,
+                             kernels: Sequence[str] = DEFAULT_KERNELS,
+                             bias: jax.Array | None = None, *,
+                             acc: bool | None = None) -> jax.Array:
+    """Y = X W_self + A @ (X W) (+ bias): the dual-weight (SAGE) epilogue.
+
+    Mean normalization is baked into the decomposition's edge values
+    (``core.gnn.prepare``), so ``A @ (X W)`` *is* the normalized neighbor
+    term — no per-row rescale separates the self term from the threaded
+    accumulation.  When the first tier's committed kernel provides the
+    ``fused_dual_matvec`` hook (the diagonal tier's Pallas kernel), the
+    self-weight stripe rides in VMEM next to the neighbor stripe and the
+    self term never materializes separately; otherwise it seeds the
+    accumulator as a dense XLA matmul (still only (n, Fo)-wide — the
+    (n, Fi) aggregation intermediate of the unfused layer is gone either
+    way).
+
+    The hook is gated on accumulation mode (``acc=None`` resolves by
+    backend, like :func:`aggregate_transform`): it exists to keep the self
+    term out of HBM, which only pays on TPU — in CPU interpret mode the
+    extra per-grid-step matmul costs more than the one XLA matmul it
+    replaces, so the seed path runs there."""
+    if acc is None:
+        acc = jax.default_backend() == "tpu"
+    names = plan_mod.normalize_layer(dec, kernels)
+    first = REGISTRY.get(names[0])
+    if acc and first.fused_dual_matvec is not None:
+        payload = dec.subgraphs[0].formats[first.payload_key]
+        if bias is not None and acc and first.fused_dual_matvec_acc is not None:
+            y0 = jnp.broadcast_to(bias.astype(x.dtype),
+                                  (x.shape[0], w.shape[-1]))
+            seed = first.fused_dual_matvec_acc(payload, x, w, w_self, y0)
+        else:
+            seed = first.fused_dual_matvec(payload, x, w, w_self)
+            if bias is not None:
+                seed = seed + bias.astype(x.dtype)
+        rest = dec.subgraphs[1:]
+        rest_names = names[1:]
+    else:
+        seed = x @ w_self
+        if bias is not None:
+            seed = seed + bias.astype(x.dtype)
+        rest = dec.subgraphs
+        rest_names = names
+    sub_dec = Decomposed(n=dec.n, n_pad=dec.n_pad, block_size=dec.block_size,
+                         perm=dec.perm, inv_perm=dec.inv_perm,
+                         subgraphs=tuple(rest), stats=None)
+    return aggregate_transform(sub_dec, x, w, rest_names, seed=seed, acc=acc)
 
 
 def aggregate_full_static(dec: Decomposed, x: jax.Array,
@@ -181,11 +247,23 @@ def init_gin_conv(key, in_dim: int, hidden: int, out_dim: int) -> Params:
 
 def gin_conv(params: Params, dec: Decomposed, x: jax.Array,
              kernels: Sequence[str]) -> jax.Array:
-    """GIN layer: MLP((1+eps) x + sum-agg(x)) (Xu et al.)."""
-    agg = aggregate(dec, x, kernels)
-    h = (1.0 + params["eps"]) * x + agg
-    h = jax.nn.relu(h @ params["w1"] + params["b1"])
-    return h @ params["w2"] + params["b2"]
+    """GIN layer: MLP((1+eps) x + sum-agg(x)) (Xu et al.), with the MLP's
+    first weight pushed *through* the aggregation (linearity):
+
+        h1 = relu((1+eps) S + A (X W1) + b1),   S = X W1
+        y  = h1 W2 + b2
+
+    The aggregation runs at the MLP hidden width instead of the raw feature
+    width, the (n, Fi) aggregated intermediate is gone, and fused kernels
+    compete on ``A (X W1)``.  ``S`` is needed by the self term regardless,
+    so it doubles as the unfused candidates' precomputed transform (the
+    selector prices their shared-transform share at zero — EpilogueSpec
+    ``free_transform``)."""
+    s = x @ params["w1"]
+    seed = (1.0 + params["eps"]) * s + params["b1"]
+    h1 = jax.nn.relu(aggregate_transform(dec, x, params["w1"], kernels,
+                                         seed=seed, h=s))
+    return h1 @ params["w2"] + params["b2"]
 
 
 def init_sage_conv(key, in_dim: int, out_dim: int) -> Params:
@@ -196,10 +274,27 @@ def init_sage_conv(key, in_dim: int, out_dim: int) -> Params:
 
 
 def sage_conv(params: Params, dec: Decomposed, x: jax.Array,
-              kernels: Sequence[str], inv_deg: jax.Array) -> jax.Array:
-    """GraphSAGE mean-aggregator: W_s x + W_n mean_agg(x)."""
-    agg = aggregate(dec, x, kernels) * inv_deg[:, None]
-    return x @ params["w_self"] + agg @ params["w_neigh"] + params["b"]
+              kernels: Sequence[str],
+              inv_deg: jax.Array | None = None) -> jax.Array:
+    """GraphSAGE mean-aggregator: W_self x + W_neigh mean_agg(x) + b.
+
+    With ``inv_deg=None`` (the fused dual-weight epilogue path) the
+    decomposition's edge values must already carry the mean normalization
+    (``core.gnn.prepare`` / ``train.gnn_steps.prepare_skeleton`` bake
+    ``1/deg(dst)`` exactly like GCN's symmetric norm): the neighbor weight
+    pushes through the aggregation — ``mean(A@X) W == (D^-1 A)(X W)`` —
+    so the aggregation runs at the output width, the (n, Fi) aggregated
+    intermediate is gone, and the self term fuses into the diagonal tier's
+    dual-stripe kernel when the plan picked it.
+
+    Passing ``inv_deg`` keeps the legacy unbaked form (aggregate raw x,
+    rescale, transform after) for callers with unnormalized edge values."""
+    if inv_deg is not None:
+        agg = aggregate(dec, x, kernels) * inv_deg[:, None]
+        return x @ params["w_self"] + agg @ params["w_neigh"] + params["b"]
+    return aggregate_transform_dual(dec, x, params["w_neigh"],
+                                    params["w_self"], kernels,
+                                    bias=params["b"])
 
 
 def init_gat_conv(key, in_dim: int, out_dim: int) -> Params:

@@ -176,7 +176,8 @@ jax.tree_util.register_dataclass(
 
 
 def _tier_stats(kind: str, n_pad: int, block_size: int, rows: np.ndarray,
-                edge_budget: int | None = None) -> dict:
+                edge_budget: int | None = None,
+                bell_slack: float | None = None) -> dict:
     """Density statistics for one edge tier — everything the selectors, the
     PlanCache signature, and the format builders read.  Computed exactly
     once per tier per batch (the skeleton carries it forward to every
@@ -190,6 +191,9 @@ def _tier_stats(kind: str, n_pad: int, block_size: int, rows: np.ndarray,
     if edge_budget:
         # budget-paddable builders key off this (blocked-ELL caps K from it)
         stats["edge_budget"] = int(edge_budget)
+        if bell_slack is not None:
+            # adapted blocked-ELL budget slack (PlanCache budget-K feedback)
+            stats["bell_slack"] = float(bell_slack)
     return stats
 
 
@@ -370,13 +374,16 @@ def decompose_skeleton(graph: Graph, comm_size: int = 16,
                        edge_vals: np.ndarray | None = None,
                        reorder: bool = True, inter_buckets: int = 1,
                        keep_empty_buckets: bool = False,
-                       edge_budget: int | None = None) -> DecomposeSkeleton:
+                       edge_budget: int | None = None,
+                       bell_slack: float | None = None) -> DecomposeSkeleton:
     """Steps 1-2 of the decomposition (reorder + partition + stats) as a
     reusable skeleton; :meth:`DecomposeSkeleton.materialize` is step 3.
 
     ``edge_budget`` marks the skeleton budget-paddable: it lands in every
     tier's stats, and format builders that support budget padding (the
-    blocked-ELL K cap) key off it."""
+    blocked-ELL K cap) key off it.  ``bell_slack`` rides along as the
+    capped build's slack factor (the PlanCache's budget-K autotuner feeds
+    observed spill back through it)."""
     n, B = graph.n, comm_size
     effective = method
     if reorder:
@@ -403,7 +410,8 @@ def decompose_skeleton(graph: Graph, comm_size: int = 16,
         order = np.argsort(r, kind="stable")
         r, c, v = r[order], c[order], v[order]
         return TierEdges(name, kind, r, c, v,
-                         _tier_stats(kind, n_pad, B, r, edge_budget))
+                         _tier_stats(kind, n_pad, B, r, edge_budget,
+                                     bell_slack))
 
     tiers = [_tier("intra", DIAG, r_in, c_in, v_in)]
     buckets = _bucket_inter(r_out, c_out, v_out, n_pad // B, B,
@@ -434,7 +442,8 @@ def decompose(graph: Graph, comm_size: int = 16, method: str = "bfs",
               reorder: bool = True, inter_buckets: int = 1,
               kernels: Sequence[str] | None = None,
               keep_empty_buckets: bool = False,
-              edge_budget: int | None = None) -> Decomposed:
+              edge_budget: int | None = None,
+              bell_slack: float | None = None) -> Decomposed:
     """AG.graph_decompose equivalent (paper Fig. 7 line 19).
 
     1. community reordering (METIS-equivalent),
@@ -462,7 +471,8 @@ def decompose(graph: Graph, comm_size: int = 16, method: str = "bfs",
         graph, comm_size=comm_size, method=method, edge_vals=edge_vals,
         reorder=reorder, inter_buckets=inter_buckets,
         keep_empty_buckets=keep_empty_buckets,
-        edge_budget=edge_budget).materialize(kernels, device=True)
+        edge_budget=edge_budget,
+        bell_slack=bell_slack).materialize(kernels, device=True)
 
 
 def decomposition_quality(dec: Decomposed) -> dict:

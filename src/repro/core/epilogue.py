@@ -1,0 +1,114 @@
+"""Epilogue specifications: the dense per-model compute fused *around* the
+sparse aggregation.
+
+AdaptGear's fused kernels were introduced for GCN's transform-first layer
+``Y = A (X W) + b``.  GIN and SAGE wrap the same aggregation in different
+dense epilogues — and because aggregation is linear, each epilogue's weight
+can be pushed *through* the aggregation so the fused kernels apply:
+
+  linear (GCN)   Y = A (X W) + b
+  dual   (SAGE)  Y = X W_self + A (X W_neigh) + b
+                 (mean normalization baked into the decomposition's edge
+                 values, exactly like GCN's symmetric norm — see
+                 ``core.gnn.prepare``; row scaling commutes with the right
+                 weight multiply, so ``mean(A@X) @ W == (D^-1 A) @ (X W)``)
+  mlp    (GIN)   Y = relu((1+eps) S + A (X W1) + b1) W2 + b2,  S = X W1
+                 (the shared first-layer transform ``S`` is needed by the
+                 self term anyway, so unfused aggregation candidates get
+                 it for free — ``free_transform``)
+
+An :class:`EpilogueSpec` is a tiny frozen (hashable) record of that shape.
+It is threaded from ``core.gnn`` through :class:`~repro.core.plan.KernelPlan`
+into both selector modes, where it changes the honest fused-vs-unfused
+comparison in two ways:
+
+  * ``free_transform`` (mlp): unfused candidates pay *no* share of the
+    shared ``H = X W`` transform — the epilogue's self term computes it
+    regardless — so fused candidates must win on bandwidth alone;
+  * ``epilogue_cost``: the dense terms every candidate pays alike (the
+    dual self matmul, the MLP's second layer) enter whole-layer totals
+    (``plan_layer_cost``, bucket autotuning) so layer structure is priced
+    end to end, not just the sparse part.
+
+Dispatch lives in ``core.adaptgear`` (``gcn_conv`` / ``gin_conv`` /
+``sage_conv`` + ``aggregate_transform(_dual)``); the kernel layer's
+contribution is the dual-weight Pallas variant (both stripes in VMEM,
+``kernels.block_diag_spmm_fused``) and the per-edge gathered-transform
+fused paths for CSR / sell-C-sigma.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class EpilogueSpec:
+    """Shape of the dense epilogue around one layer's aggregation.
+
+    ``kind``       -- "linear" | "dual" | "mlp"
+    ``bias``       -- epilogue adds a bias (rides the accumulator seed)
+    ``activation`` -- nonlinearity applied to the aggregated sum before the
+                      epilogue's second stage (mlp: "relu")
+    ``mean_norm``  -- aggregation is degree-normalized; baked into the
+                      decomposition's edge values at prepare time so the
+                      sparse kernels need no per-row rescale
+    ``out_dim``    -- mlp only: the second matmul's output width (the
+                      aggregated width itself is the MLP hidden width,
+                      carried separately as the layer's ``(in, agg)`` pair)
+    """
+    kind: str
+    bias: bool = True
+    activation: str | None = None
+    mean_norm: bool = False
+    out_dim: int = 0
+
+    @property
+    def free_transform(self) -> bool:
+        """True when the epilogue's self term already computes the shared
+        transform ``H = X W`` the unfused candidates aggregate — so the
+        selector must not surcharge them for it."""
+        return self.kind == "mlp"
+
+
+def layer_epilogues(model: str, dims: list, hidden: int) -> tuple:
+    """Per-layer epilogue specs for a model over its width chain ``dims``
+    (``[in_dim, hidden, ..., n_classes]``).  ``None`` entries mean the layer
+    aggregates raw features with no fusable epilogue (GAT)."""
+    n_layers = len(dims) - 1
+    if model == "gcn":
+        return tuple(EpilogueSpec(kind="linear") for _ in range(n_layers))
+    if model == "sage":
+        return tuple(EpilogueSpec(kind="dual", mean_norm=True)
+                     for _ in range(n_layers))
+    if model == "gin":
+        return tuple(EpilogueSpec(kind="mlp", activation="relu",
+                                  out_dim=dims[i + 1])
+                     for i in range(n_layers))
+    return tuple(None for _ in range(n_layers))
+
+
+def epilogue_cost(spec: EpilogueSpec | None, n: int, fin: int | None,
+                  agg_dim: int, dtype=np.float32, hw=None) -> float:
+    """Roofline seconds of the dense epilogue compute *every* candidate
+    pays alike (it cannot be avoided by kernel choice, so it never changes
+    the per-subgraph ranking — it enters whole-layer totals so structures
+    with different hidden widths compare honestly)."""
+    if spec is None or hw is None or fin is None or spec.kind == "linear":
+        return 0.0          # the bias seeds the accumulator: no extra pass
+    be = np.dtype(dtype).itemsize
+    if spec.kind == "dual":
+        # self matmul X W_self + the combine add into the aggregated sum
+        flops = 2.0 * n * fin * agg_dim
+        bytes_ = (n * fin + fin * agg_dim + 3.0 * n * agg_dim) * be
+    elif spec.kind == "mlp":
+        # S = X W1 (shared with unfused aggregation: free_transform) plus
+        # the activation pass and the second matmul at the hidden width
+        flops = 2.0 * n * fin * agg_dim + 2.0 * n * agg_dim * spec.out_dim
+        bytes_ = (n * fin + fin * agg_dim + 4.0 * n * agg_dim
+                  + agg_dim * spec.out_dim + n * spec.out_dim) * be
+    else:
+        raise ValueError(f"unknown epilogue kind {spec.kind!r}")
+    return (max(flops / hw.peak_flops, bytes_ / hw.hbm_bw)
+            + hw.launch_overhead_s)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import adaptgear, decompose as dec_mod, selector as sel_mod
+from repro.core import epilogue as ep_mod
 from repro.core.plan import KernelPlan
 from repro.graphs import graph as graph_mod
 
@@ -52,16 +53,38 @@ class GNNConfig:
     # probe-on-Nth-miss: every Nth PlanCache miss wall-clocks the top-2
     # cost-model candidates and pins the winner (0 = cost model only)
     probe_every: int = 0
+    # adaptive probe widening: when the cost model's margin between
+    # candidates is inside its observed error band, the probe widens from
+    # top-2 up to probe_k_max candidates; probe_budget_s caps one miss's
+    # probe wall time (compiles included)
+    probe_k_max: int = 4
+    probe_budget_s: float = 2.0
+    # budget-K autotuning: feed observed capped-bell spill back into the
+    # blocked-ELL budget cap's slack factor (padding waste vs spill volume
+    # per workload).  Off by default: a slack change alters payload shapes
+    # and costs one recompile of the affected step functions.
+    adapt_budget_k: bool = False
+    # skeleton cache: cluster-sampler batches revisit cluster tuples every
+    # epoch; a small LRU keyed by the drawn tuple skips even the single
+    # decompose_skeleton pass for repeated batches (0 disables)
+    skeleton_cache_entries: int = 64
 
 
 def prepare(graph: graph_mod.Graph, cfg: GNNConfig) -> dec_mod.Decomposed:
-    """Preprocessing stage (paper §3.3/§4.2): self-loops + GCN norm + reorder
-    + decomposition, one pass.  ``cfg.inter_buckets == 0`` autotunes the
-    bucket count: decompose at each k in {1, 2, 4}, total the cost-model
-    estimate over the model's layers, commit the cheapest."""
+    """Preprocessing stage (paper §3.3/§4.2): self-loops + per-model edge
+    normalization + reorder + decomposition, one pass.  GCN bakes the
+    symmetric norm into the edge values; SAGE bakes the mean-aggregator's
+    ``1/deg(dst)`` the same way, which is what lets its dual-weight
+    epilogue push W_neigh through the aggregation (core.epilogue).
+    ``cfg.inter_buckets == 0`` autotunes the bucket count: decompose at
+    each k in {1, 2, 4}, total the cost-model estimate over the model's
+    layers, commit the cheapest."""
     g = graph_mod.add_self_loops(graph) if cfg.model in ("gcn",) else graph
-    vals = (graph_mod.gcn_norm_values(g.n, g.senders, g.receivers)
-            if cfg.model == "gcn" else None)
+    vals = None
+    if cfg.model == "gcn":
+        vals = graph_mod.gcn_norm_values(g.n, g.senders, g.receivers)
+    elif cfg.model == "sage":
+        vals = graph_mod.mean_norm_values(g.n, g.senders, g.receivers)
     if cfg.inter_buckets == 0:
         return autotune_decomposition(
             g, cfg, vals, in_dim=graph.features.shape[-1],
@@ -78,14 +101,16 @@ def autotune_decomposition(g: graph_mod.Graph, cfg: GNNConfig,
     candidate inter-bucket counts and commit the cheapest decomposition.
     The per-k totals land in ``dec.stats['bucket_autotune']``."""
     pairs = agg_width_pairs(cfg, in_dim, n_classes)
+    eps = layer_epilogues(cfg, in_dim, n_classes)
     hw = sel_mod.default_hw()
     best, best_total, totals = None, None, {}
     for k in ks:
         dec = dec_mod.decompose(g, comm_size=cfg.comm_size,
                                 method=cfg.reorder, edge_vals=edge_vals,
                                 inter_buckets=k)
-        total = sum(sel_mod.plan_layer_cost(dec, fout, hw=hw, in_dim=fin)
-                    for fin, fout in pairs)
+        total = sum(sel_mod.plan_layer_cost(dec, fout, hw=hw, in_dim=fin,
+                                            epilogue=ep)
+                    for (fin, fout), ep in zip(pairs, eps))
         totals[k] = float(total)
         if best_total is None or total < best_total:
             best, best_total = dec, total
@@ -122,15 +147,26 @@ def agg_width_pairs(cfg: GNNConfig, in_dim: int,
                     n_classes: int) -> list[tuple]:
     """Per-layer ``(in_dim, agg_dim)`` width pairs.
 
-    ``in_dim`` is non-None only for transform-first layers (GCN): it is the
-    width the fused transform+aggregate kernels consume, and what the
-    selectors need to price fused candidates against unfused + shared
-    transform.  Models that aggregate raw inputs get ``(None, width)`` —
-    fused kernels never compete there."""
+    ``in_dim`` is non-None for transform-first layers: it is the width the
+    fused transform+aggregate kernels consume, and what the selectors need
+    to price fused candidates against unfused + shared transform.  GCN is
+    transform-first natively; GIN and SAGE become transform-first through
+    their epilogue rewrite (core.epilogue) — GIN aggregates at the MLP
+    hidden width (W1 pushed through), SAGE at the layer output width
+    (W_neigh pushed through).  Models that aggregate raw inputs (GAT) get
+    ``(None, width)`` — fused kernels never compete there."""
     dims = [in_dim] + [cfg.hidden] * (cfg.n_layers - 1) + [n_classes]
-    if cfg.model == "gcn":
+    if cfg.model in ("gcn", "sage"):
         return list(zip(dims[:-1], dims[1:]))   # transform-first
-    return [(None, w) for w in dims[:-1]]       # gin/sage/gat aggregate inputs
+    if cfg.model == "gin":
+        return [(d, cfg.hidden) for d in dims[:-1]]  # aggregate at MLP width
+    return [(None, w) for w in dims[:-1]]       # gat aggregates raw inputs
+
+
+def layer_epilogues(cfg: GNNConfig, in_dim: int, n_classes: int) -> tuple:
+    """Per-layer EpilogueSpecs aligned with :func:`agg_width_pairs`."""
+    dims = [in_dim] + [cfg.hidden] * (cfg.n_layers - 1) + [n_classes]
+    return ep_mod.layer_epilogues(cfg.model, dims, cfg.hidden)
 
 
 def _as_plan(dec: dec_mod.Decomposed, kernels, n_layers: int) -> KernelPlan:
@@ -145,6 +181,11 @@ def _as_plan(dec: dec_mod.Decomposed, kernels, n_layers: int) -> KernelPlan:
 def forward(params: Params, cfg: GNNConfig, dec: dec_mod.Decomposed,
             x: jax.Array, kernels,
             inv_deg: jax.Array | None = None) -> jax.Array:
+    """Model forward over a decomposition produced by :func:`prepare` (or
+    the mini-batch ``prepare_skeleton``) — both bake per-model edge
+    normalization, so SAGE dispatches the fused dual-weight epilogue and
+    never consumes ``inv_deg`` here (the argument stays for callers whose
+    own layers need it, e.g. ``aggregate_mean``)."""
     plan = _as_plan(dec, kernels, len(params))
     h = x
     for i, layer in enumerate(params):
@@ -156,7 +197,9 @@ def forward(params: Params, cfg: GNNConfig, dec: dec_mod.Decomposed,
         elif cfg.model == "gat":
             h = adaptgear.gat_conv(layer, dec, h)
         elif cfg.model == "sage":
-            h = adaptgear.sage_conv(layer, dec, h, names, inv_deg)
+            # mean norm is baked into dec's edge values (prepare): the
+            # dual-weight epilogue path, fused when the plan picked it
+            h = adaptgear.sage_conv(layer, dec, h, names)
         if i != len(params) - 1:
             h = jax.nn.relu(h)
     return h
@@ -213,7 +256,8 @@ class TrainResult:
 
 
 def select_plan(dec: dec_mod.Decomposed, cfg: GNNConfig,
-                widths: list, dtype=jnp.float32
+                widths: list, dtype=jnp.float32,
+                epilogues: tuple | None = None
                 ) -> tuple[KernelPlan, dict]:
     """Commit a KernelPlan with the configured selector mode.  ``dtype``
     is the aggregation dtype — feedback probes must time the kernels that
@@ -222,37 +266,45 @@ def select_plan(dec: dec_mod.Decomposed, cfg: GNNConfig,
     ``widths`` entries are either aggregated widths (ints) or
     ``(in_dim, agg_dim)`` pairs from :func:`agg_width_pairs`; a non-None
     in_dim lets fused transform+aggregate candidates compete in both
-    selector modes."""
+    selector modes.  ``epilogues`` (from :func:`layer_epilogues`, aligned
+    with ``widths``) adjusts the honest comparison per layer: an MLP
+    epilogue's shared transform is free to unfused candidates, a dual
+    epilogue's self matmul is flat across them."""
     pairs = [(None, w) if isinstance(w, int) else tuple(w) for w in widths]
+    eps = tuple(epilogues) if epilogues is not None else (None,) * len(pairs)
     probe_times: dict = {}
     if cfg.selector == "fixed":
         plan = KernelPlan.make(dec, tuple(cfg.fixed_kernels),
-                               n_layers=len(pairs))
+                               n_layers=len(pairs), epilogues=eps)
     elif cfg.selector == "cost_model":
         hw = sel_mod.default_hw()
         plan = KernelPlan.make(
             dec, [sel_mod.select_by_cost_model(dec, fout, dtype, hw=hw,
-                                               in_dim=fin)
-                  for fin, fout in pairs])
+                                               in_dim=fin, epilogue=ep)
+                  for (fin, fout), ep in zip(pairs, eps)],
+            epilogues=eps)
     elif cfg.selector == "feedback":
         # paper default: probe every registry candidate during warmup
         fused_ok = any(fin is not None for fin, _ in pairs)
         sel = sel_mod.AdaptiveSelector(dec, warmup_iters=cfg.warmup_iters,
                                        include_fused=fused_ok)
+        ep_of = {p: e for p, e in zip(pairs, eps)}
         for fin, fout in sorted(set(pairs), key=lambda p: (p[1], p[0] or 0)):
             probe_x = jnp.ones((dec.n_pad, fout), dtype)
             transform = (None if fin is None else
                          (jnp.ones((dec.n_pad, fin), dtype),
                           jnp.ones((fin, fout), dtype)))
+            ep = ep_of[(fin, fout)]
             res = sel.probe(probe_x, iters=cfg.warmup_iters,
-                            transform=transform)
+                            transform=transform,
+                            free_transform=bool(ep and ep.free_transform))
             probe_times.update({k + (fout,): v for k, v in res.times.items()})
         # choices are keyed by the full (in_dim, agg_dim) pair: layers that
         # share an output width but differ in input width sit on opposite
         # sides of the fused recompute crossover
         plan = KernelPlan.make(
             dec, [sel.choice(fout if fin is None else (fin, fout))
-                  for fin, fout in pairs])
+                  for fin, fout in pairs], epilogues=eps)
     else:
         raise ValueError(f"unknown selector {cfg.selector!r}")
     return plan, probe_times
@@ -294,9 +346,12 @@ def train(graph: graph_mod.Graph, cfg: GNNConfig, steps: int = 50,
     opt = _adam_init(params)
 
     # --- kernel selection (per layer: aggregation width differs by layer;
-    # GCN layers carry their input width so fused candidates compete)
+    # transform-first layers carry their input width so fused candidates
+    # compete — GCN natively, GIN/SAGE through the epilogue rewrite)
     pairs = agg_width_pairs(cfg, x.shape[-1], graph.n_classes)
-    plan, probe_times = select_plan(dec, cfg, pairs, dtype=x.dtype)
+    eps = layer_epilogues(cfg, x.shape[-1], graph.n_classes)
+    plan, probe_times = select_plan(dec, cfg, pairs, dtype=x.dtype,
+                                    epilogues=eps)
 
     step_fn = make_train_step(cfg, dec, plan, inv_deg)
 

@@ -53,12 +53,24 @@ def normalize_layer(dec: Decomposed, choice: Sequence[str]) -> tuple[str, ...]:
 
 @dataclass(frozen=True)
 class KernelPlan:
-    """Per-layer x per-subgraph kernel assignment."""
+    """Per-layer x per-subgraph kernel assignment.
+
+    ``epilogues`` optionally records the per-layer
+    :class:`~repro.core.epilogue.EpilogueSpec` the plan was selected under
+    (None per layer when the layer aggregates raw features).  It rides the
+    plan so the dense epilogue shape the selector priced is visible at
+    dispatch and in benchmarks — ``plan.layers`` alone stays the step-fn
+    cache key (the epilogue is a function of the model config, identical
+    for every plan a training run produces)."""
     subgraph_names: tuple      # aligned with Decomposed.subgraphs
     layers: tuple              # tuple[tuple[str, ...], ...]
+    epilogues: tuple | None = None   # tuple[EpilogueSpec | None, ...] | None
 
     def for_layer(self, i: int) -> tuple:
         return self.layers[i]
+
+    def epilogue_for_layer(self, i: int):
+        return self.epilogues[i] if self.epilogues is not None else None
 
     @property
     def n_layers(self) -> int:
@@ -68,8 +80,8 @@ class KernelPlan:
         return iter(self.layers)
 
     @classmethod
-    def make(cls, dec: Decomposed, choices, n_layers: int | None = None
-             ) -> "KernelPlan":
+    def make(cls, dec: Decomposed, choices, n_layers: int | None = None,
+             epilogues: tuple | None = None) -> "KernelPlan":
         """Build a validated plan.
 
         ``choices`` is a KernelPlan (re-validated), one layer choice
@@ -81,13 +93,18 @@ class KernelPlan:
                 raise ValueError(f"plan has {len(choices.layers)} layers, "
                                  f"model has {n_layers}")
             layers = tuple(normalize_layer(dec, c) for c in choices.layers)
-            return cls(sub_names, layers)
+            return cls(sub_names, layers, epilogues or choices.epilogues)
         if (isinstance(choices, (tuple, list)) and choices
                 and isinstance(choices[0], str)):
             layer = normalize_layer(dec, choices)
-            return cls(sub_names, (layer,) * (n_layers or 1))
-        layers = tuple(normalize_layer(dec, c) for c in choices)
-        if n_layers is not None and len(layers) != n_layers:
+            layers = (layer,) * (n_layers or 1)
+        else:
+            layers = tuple(normalize_layer(dec, c) for c in choices)
+            if n_layers is not None and len(layers) != n_layers:
+                raise ValueError(
+                    f"plan has {len(layers)} layers, model has {n_layers}")
+        if epilogues is not None and len(epilogues) != len(layers):
             raise ValueError(
-                f"plan has {len(layers)} layers, model has {n_layers}")
-        return cls(sub_names, layers)
+                f"plan has {len(layers)} layers but {len(epilogues)} "
+                f"epilogue specs")
+        return cls(sub_names, layers, epilogues)

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.decompose import Decomposed, Subgraph
+from repro.core.epilogue import EpilogueSpec, epilogue_cost
 from repro.kernels.registry import REGISTRY
 
 
@@ -105,15 +106,21 @@ def select_for_subgraph(sub: Subgraph, feat_dim: int, dtype=np.float32,
 
 
 def _transform_share(dec: Decomposed, feat_dim: int, dtype, hw,
-                     in_dim: int | None) -> float:
+                     in_dim: int | None,
+                     epilogue: EpilogueSpec | None = None) -> float:
     """Per-subgraph slice of the shared dense-transform cost.
 
     Approximation: if *some* subgraphs pick unfused kernels the transform is
     paid once in full regardless of how many picked it; dividing by the
     subgraph count under-charges mixed layers slightly, but leaves the
     unfused-vs-unfused ranking untouched and prices the all-fused-vs-
-    all-unfused crossover correctly."""
-    if in_dim is None:
+    all-unfused crossover correctly.
+
+    An epilogue with ``free_transform`` (GIN's MLP: the self term computes
+    S = X W1 regardless) zeroes the share — unfused candidates aggregate
+    the already-paid-for transform, so fused candidates must win on
+    bandwidth alone there."""
+    if in_dim is None or (epilogue is not None and epilogue.free_transform):
         return 0.0
     return (dense_transform_cost(dec.n_pad, in_dim, feat_dim, dtype, hw)
             / max(len(dec.subgraphs), 1))
@@ -121,24 +128,32 @@ def _transform_share(dec: Decomposed, feat_dim: int, dtype, hw,
 
 def select_by_cost_model(dec: Decomposed, feat_dim: int, dtype=np.float32,
                          hw: HwModel = HwModel(),
-                         in_dim: int | None = None) -> tuple[str, ...]:
+                         in_dim: int | None = None,
+                         epilogue: EpilogueSpec | None = None
+                         ) -> tuple[str, ...]:
     """One KernelPlan layer: the cost-argmin kernel per subgraph.
 
-    With ``in_dim`` set (GCN's transform-first layers) fused candidates
-    compete: each unfused candidate is surcharged its share of the shared
-    H = X @ W cost the fused kernels avoid."""
-    share = _transform_share(dec, feat_dim, dtype, hw, in_dim)
+    With ``in_dim`` set (transform-first layers: GCN, and GIN/SAGE through
+    their epilogue rewrite) fused candidates compete: each unfused
+    candidate is surcharged its share of the shared H = X @ W cost the
+    fused kernels avoid — unless the layer's ``epilogue`` marks that
+    transform as free (see :func:`_transform_share`)."""
+    share = _transform_share(dec, feat_dim, dtype, hw, in_dim, epilogue)
     return tuple(select_for_subgraph(s, feat_dim, dtype, hw, in_dim, share)
                  for s in dec.subgraphs)
 
 
 def plan_layer_cost(dec: Decomposed, feat_dim: int, dtype=np.float32,
                     hw: HwModel = HwModel(),
-                    in_dim: int | None = None) -> float:
+                    in_dim: int | None = None,
+                    epilogue: EpilogueSpec | None = None) -> float:
     """Total modeled seconds for one layer under the cost-argmin choice —
-    the objective the bucket-count autotuner minimizes across k."""
-    share = _transform_share(dec, feat_dim, dtype, hw, in_dim)
-    total = 0.0
+    the objective the bucket-count autotuner minimizes across k.  The
+    layer's dense epilogue terms (the dual self matmul, the MLP's second
+    layer) are flat across candidates but enter the total so whole-model
+    structures price honestly."""
+    share = _transform_share(dec, feat_dim, dtype, hw, in_dim, epilogue)
+    total = epilogue_cost(epilogue, dec.n_pad, in_dim, feat_dim, dtype, hw)
     for sub in dec.subgraphs:
         specs = REGISTRY.candidates_for(sub, include_fused=in_dim is not None)
         total += min(candidate_cost(sub, s.name, feat_dim, dtype, hw,
@@ -174,8 +189,11 @@ def _time_candidate(sub: Subgraph, spec, fin: int | None, fout: int,
 
 def probe_topk(dec: Decomposed, pairs, dtype=np.float32,
                hw: HwModel | None = None, k: int = 2,
-               iters: int = 2, time_dec: Decomposed | None = None
-               ) -> list[tuple[str, ...]]:
+               iters: int = 2, time_dec: Decomposed | None = None,
+               epilogues=None, k_max: int | None = None,
+               margin: float | None = None,
+               time_budget_s: float | None = None,
+               errs: list | None = None) -> list[tuple[str, ...]]:
     """Wall-clock probe restricted to the ``k`` cheapest cost-model
     candidates per (layer, subgraph).
 
@@ -186,8 +204,24 @@ def probe_topk(dec: Decomposed, pairs, dtype=np.float32,
     pinned.  Unfused candidates carry the *modeled* shared-transform share
     (measuring H = X W per probe would triple the compile bill for a term
     the model prices well); fused candidates are timed end-to-end.
-    ``pairs`` are ``(in_dim, agg_dim)`` per layer as in PlanCache.  Returns
-    one kernel-name tuple per pair.
+    ``pairs`` are ``(in_dim, agg_dim)`` per layer as in PlanCache;
+    ``epilogues`` the aligned per-layer EpilogueSpecs (share freeness).
+    Returns one kernel-name tuple per pair.
+
+    Adaptive widening (ROADMAP probe-budget shaping): with ``margin`` set
+    — the cost model's observed relative-error band, measured by past
+    probes and by ``calibrate_cost_model`` — the frontier widens past the
+    top-``k`` to every candidate whose modeled cost sits within
+    ``(1 + margin)`` of the modeled best, capped at ``k_max``: when the
+    model cannot distinguish candidates to within its own error, the
+    wall clock decides among all of them.  ``time_budget_s`` caps the
+    probe's total wall time (compiles included): once exhausted, untimed
+    candidates are skipped and the argmin runs over whatever was measured
+    (falling back to the modeled best when nothing was).
+
+    ``errs``, when given, accrues ``(modeled_seconds, measured_seconds)``
+    per timed candidate — the PlanCache folds these into its running
+    error band, closing the model-vs-measurement loop.
 
     ``time_dec`` optionally supplies the payloads to *time* (aligned with
     ``dec.subgraphs``) while ``dec`` still drives the cost-model ranking:
@@ -200,8 +234,16 @@ def probe_topk(dec: Decomposed, pairs, dtype=np.float32,
     timed: dict[tuple, float] = {}
     layers = []
     time_subs = (time_dec or dec).subgraphs
-    for fin, fout in pairs:
-        share = _transform_share(dec, fout, dtype, hw, fin)
+    pairs = list(pairs)
+    epilogues = epilogues or [None] * len(pairs)
+    t_start = time.perf_counter()
+
+    def budget_left() -> bool:
+        return (time_budget_s is None
+                or time.perf_counter() - t_start < time_budget_s)
+
+    for (fin, fout), ep in zip(pairs, epilogues):
+        share = _transform_share(dec, fout, dtype, hw, fin, ep)
         choice = []
         for sub, tsub in zip(dec.subgraphs, time_subs):
             specs = REGISTRY.candidates_for(sub,
@@ -209,21 +251,33 @@ def probe_topk(dec: Decomposed, pairs, dtype=np.float32,
             if not specs:
                 raise ValueError(
                     f"no kernel candidates for subgraph {sub.name!r}")
-            ranked = sorted(specs, key=lambda s: candidate_cost(
-                sub, s.name, fout, dtype, hw, fin, share))[:max(k, 1)]
-            if len(ranked) < 2:
-                choice.append(ranked[0].name)
+            modeled = {s.name: candidate_cost(sub, s.name, fout, dtype, hw,
+                                              fin, share) for s in specs}
+            ranked = sorted(specs, key=lambda s: modeled[s.name])
+            cands = ranked[:max(k, 1)]
+            if margin is not None and len(ranked) > len(cands):
+                lim = modeled[ranked[0].name] * (1.0 + max(margin, 0.0))
+                cands += [s for s in ranked[len(cands):max(k_max or k, k)]
+                          if modeled[s.name] <= lim]
+            if len(cands) < 2:
+                choice.append(cands[0].name)
                 continue
             best_name, best_t = None, None
-            for spec in ranked:
+            for spec in cands:
                 key = (sub.name, spec.name, fin or 0, fout)
                 if key not in timed:
+                    if not budget_left():
+                        continue        # budget spent: modeled ranking holds
                     timed[key] = _time_candidate(tsub, spec, fin, fout,
                                                  dtype, iters)
+                    if errs is not None:
+                        errs.append((modeled[spec.name] -
+                                     (0.0 if spec.fused else share),
+                                     timed[key]))
                 t = timed[key] + (0.0 if spec.fused else share)
                 if best_t is None or t < best_t:
                     best_name, best_t = spec.name, t
-            choice.append(best_name)
+            choice.append(best_name or cands[0].name)
         layers.append(tuple(choice))
     return layers
 
@@ -319,7 +373,8 @@ class AdaptiveSelector:
                                     in_dim=fin or None)
 
     def probe(self, x: jax.Array, iters: int = 3,
-              transform: tuple | None = None) -> ProbeResult:
+              transform: tuple | None = None,
+              free_transform: bool = False) -> ProbeResult:
         """Time every candidate on the real decomposed input.
 
         ``x`` is the aggregated-width operand the unfused kernels consume.
@@ -327,20 +382,23 @@ class AdaptiveSelector:
         layers: fused candidates are timed end-to-end on A @ (x_in W), and
         each unfused candidate is charged its per-subgraph share of the
         measured standalone H = X @ W it depends on — keeping the committed
-        argmin an honest whole-layer comparison."""
+        argmin an honest whole-layer comparison.  ``free_transform`` (GIN's
+        MLP epilogue: the self term computes H regardless) keeps the fused
+        probes but zeroes that surcharge."""
         from repro.core import adaptgear  # local import to avoid cycle
         share = 0.0
         if transform is not None:
             x_in, w_mat = transform
             width = (x_in.shape[-1], x.shape[-1])
-            mm = jax.jit(lambda a, b: a @ b)
-            mm(x_in, w_mat).block_until_ready()
-            ts = []
-            for _ in range(iters):
-                t0 = time.perf_counter()
+            if not free_transform:
+                mm = jax.jit(lambda a, b: a @ b)
                 mm(x_in, w_mat).block_until_ready()
-                ts.append(time.perf_counter() - t0)
-            share = float(np.median(ts)) / max(len(self.dec.subgraphs), 1)
+                ts = []
+                for _ in range(iters):
+                    t0 = time.perf_counter()
+                    mm(x_in, w_mat).block_until_ready()
+                    ts.append(time.perf_counter() - t0)
+                share = float(np.median(ts)) / max(len(self.dec.subgraphs), 1)
         else:
             width = x.shape[-1]
         wk = self._wkey(width)

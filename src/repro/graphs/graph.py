@@ -157,3 +157,16 @@ def gcn_norm_values(n: int, senders: np.ndarray, receivers: np.ndarray) -> np.nd
     d = np.maximum(deg, 1.0) ** -0.5
     ds = np.maximum(deg_in, 1.0) ** -0.5
     return (d[receivers] * ds[senders]).astype(np.float32)
+
+
+def mean_norm_values(n: int, senders: np.ndarray,
+                     receivers: np.ndarray) -> np.ndarray:
+    """Mean-aggregation normalization 1/deg(dst) per edge (SAGE).
+
+    Baked into the decomposition's edge values exactly like the GCN norm:
+    ``A @ x`` then *is* the in-neighbor mean, so the dual-weight epilogue's
+    neighbor transform pushes through the aggregation without a per-row
+    rescale separating the fused self term from the accumulation."""
+    deg = np.bincount(receivers, minlength=n).astype(np.float32)
+    inv = 1.0 / np.maximum(deg, 1.0)
+    return inv[receivers].astype(np.float32)

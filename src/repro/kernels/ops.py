@@ -12,6 +12,10 @@ Responsibilities:
     By associativity dX = A^T (dY W^T) is the *same* fused form over the
     transpose payload, and dW = X^T (A^T dY) is a single blocked reduction
     (bell_spmm_dw) — the backward never materializes an (n, F) intermediate.
+  * dual-weight epilogue (SAGE): Y = A @ (X W) + X W_self (+ Y_in), both
+    stripes in VMEM on the diagonal tier; dX gains the dense dY W_self^T
+    term and dW_self = X^T dY is one dense matmul — the shared blocked
+    reduction still produces dW.
   * accumulating (`*_acc`) variants that thread one output buffer through
     aggregate()'s subgraph loop (the kernels seed their VMEM scratch from
     y_in instead of zeros) so no per-bucket partial tensors are allocated.
@@ -25,7 +29,8 @@ from repro.core import formats
 from repro.kernels import ref
 from repro.kernels.block_diag_spmm import block_diag_spmm
 from repro.kernels.bell_spmm import bell_spmm
-from repro.kernels.block_diag_spmm_fused import block_diag_spmm_fused
+from repro.kernels.block_diag_spmm_fused import (block_diag_spmm_dual,
+                                                 block_diag_spmm_fused)
 from repro.kernels.bell_spmm_fused import bell_spmm_fused, bell_spmm_dw
 
 
@@ -66,16 +71,17 @@ def _pad_rows(x: jax.Array, n_rows: int) -> jax.Array:
     return x
 
 
-def _fused_f_cap(block_size: int, fin_padded: int) -> int:
+def _fused_f_cap(block_size: int, fin_padded: int, stripes: int = 1) -> int:
     """Output-tile cap for the fused kernels from the VMEM budget.
 
     Per grid step the fused working set is B*B (adjacency) + B*Fi (features)
-    + Fi*Ft (weight stripe) + 2*B*Ft (accumulator + output); solving for Ft
-    under a ~4 MB double-buffered budget lets narrow-input layers run much
-    fatter output tiles (= fewer grid steps) than the unfused default."""
+    + stripes*Fi*Ft (weight stripes; the dual-weight epilogue carries two)
+    + 2*B*Ft (accumulator + output); solving for Ft under a ~4 MB
+    double-buffered budget lets narrow-input layers run much fatter output
+    tiles (= fewer grid steps) than the unfused default."""
     budget_floats = (4 << 20) // 4 // 2
     cap = (budget_floats - block_size * block_size - block_size * fin_padded
-           ) // (fin_padded + 2 * block_size)
+           ) // (stripes * fin_padded + 2 * block_size)
     return int(max(LANE, min(1024, (cap // LANE) * LANE)))
 
 
@@ -247,6 +253,80 @@ def _bdf_acc_bwd(res, dy):
 
 
 block_diag_fused_matvec_acc.defvjp(_bdf_acc_fwd, _bdf_acc_bwd)
+
+
+# --- fused dual-weight epilogue: block-diagonal (SAGE) -----------------------
+
+def _bdd_impl(blocks, x, w, w_self, y_in=None):
+    xp, _ = _pad_feat(x, LANE)
+    Fo = w.shape[-1]
+    t = _f_tile(Fo, cap=_fused_f_cap(blocks.shape[-1], xp.shape[-1],
+                                     stripes=2))
+
+    def _stripe(m):
+        mp = _pad_feat(m, t)[0]
+        return jnp.pad(mp, ((0, xp.shape[-1] - mp.shape[0]), (0, 0)))
+
+    yp = _pad_feat(y_in, t)[0] if y_in is not None else None
+    y = block_diag_spmm_dual(blocks, xp, _stripe(w), _stripe(w_self), yp,
+                             f_tile=t, interpret=_interpret())
+    return y[:, :Fo]
+
+
+def _bdd_bwd_terms(blocks, x, w, w_self, dy):
+    """Shared dual-epilogue backward: dx = A^T (dY W^T) + dY W_self^T
+    (the first term is the fused pass over the transposed blocks, the
+    second a dense matmul), dW = X^T (A^T dY) via the blocked reduction,
+    dW_self = X^T dY (dense)."""
+    bt = jnp.swapaxes(blocks, -1, -2)
+    dx = (_bdf_impl(bt, dy, w.T)
+          + dy @ w_self.T.astype(dy.dtype)).astype(x.dtype)
+    dw = _bd_dw_impl(blocks, x, dy).astype(w.dtype)
+    dws = jax.lax.dot_general(
+        x.astype(jnp.float32), dy.astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(w_self.dtype)
+    return dx, dw, dws
+
+
+@jax.custom_vjp
+def block_diag_dual_matvec(blocks: jax.Array, x: jax.Array, w: jax.Array,
+                           w_self: jax.Array) -> jax.Array:
+    """Y = blockdiag(blocks) @ (x @ w) + x @ w_self, one fused Pallas pass
+    with both weight stripes in VMEM (the dual-weight SAGE epilogue)."""
+    return _bdd_impl(blocks, x, w, w_self)
+
+
+def _bdd_fwd(blocks, x, w, w_self):
+    return _bdd_impl(blocks, x, w, w_self), (blocks, x, w, w_self)
+
+
+def _bdd_bwd(res, dy):
+    dx, dw, dws = _bdd_bwd_terms(*res, dy)
+    return None, dx, dw, dws
+
+
+block_diag_dual_matvec.defvjp(_bdd_fwd, _bdd_bwd)
+
+
+@jax.custom_vjp
+def block_diag_dual_matvec_acc(blocks: jax.Array, x: jax.Array,
+                               w: jax.Array, w_self: jax.Array,
+                               y_in: jax.Array) -> jax.Array:
+    """Y = blockdiag(blocks) @ (x @ w) + x @ w_self + y_in."""
+    return _bdd_impl(blocks, x, w, w_self, y_in)
+
+
+def _bdd_acc_fwd(blocks, x, w, w_self, y_in):
+    return _bdd_impl(blocks, x, w, w_self, y_in), (blocks, x, w, w_self)
+
+
+def _bdd_acc_bwd(res, dy):
+    dx, dw, dws = _bdd_bwd_terms(*res, dy)
+    return None, dx, dw, dws, dy
+
+
+block_diag_dual_matvec_acc.defvjp(_bdd_acc_fwd, _bdd_acc_bwd)
 
 
 # --- fused transform+aggregate: blocked-ELL ----------------------------------

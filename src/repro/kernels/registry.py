@@ -80,6 +80,14 @@ class KernelSpec:
     matvec_acc: Callable[[Any, jax.Array, jax.Array], jax.Array] | None = None
     fused_matvec: Callable[..., jax.Array] | None = None
     fused_matvec_acc: Callable[..., jax.Array] | None = None
+    # dual-weight epilogue hooks (SAGE): ``(payload, x, w_neigh, w_self
+    # [, y_in]) -> x @ w_self + A @ (x @ w_neigh) [+ y_in]``.  Optional even
+    # for fused specs; aggregate_transform_dual uses them on the tier that
+    # owns the self term (the diagonal tier, whose row block is its own
+    # source block) and falls back to seeding the accumulator with the
+    # dense self term otherwise.
+    fused_dual_matvec: Callable[..., jax.Array] | None = None
+    fused_dual_matvec_acc: Callable[..., jax.Array] | None = None
     payload_of: str | None = None   # alias another kernel's format payload
     doc: str = ""
 
@@ -219,7 +227,8 @@ def _bell_build(coo, coo_t, block_size, stats):
     the data-dependent per-bucket block size and K."""
     budget = (stats or {}).get("edge_budget")
     if budget:
-        return _bell_build_capped(coo, block_size, int(budget))
+        return _bell_build_capped(coo, block_size, int(budget),
+                                  slack=(stats or {}).get("bell_slack"))
     Bb = _bell_pick_block(coo, block_size)
     cap = _bell_f_cap(Bb)
     return (formats.coo_to_bell(coo, Bb, f_tile_cap=cap),
@@ -231,12 +240,16 @@ def _np_edges(coo):
             formats._np(coo.vals))
 
 
-def _bell_build_capped(coo, block_size, edge_budget):
+def _bell_build_capped(coo, block_size, edge_budget, slack=None):
     """Budget-padded blocked-ELL payload ``(bell, bell_t, spill)``.
 
     The block size is pinned to the community size and K to
     :func:`formats.bell_budget_k` (a data-dependent block merge or K would
-    change the pytree shape per batch and retrace the jitted step).  The
+    change the pytree shape per batch and retrace the jitted step).
+    ``slack`` overrides the budget cap's slack factor: the PlanCache's
+    budget-K autotuner feeds observed spill rates back through the tier
+    stats (``stats['bell_slack']``) so hub-heavy samplers trade padding
+    waste against spill volume per workload.  The
     forward cap keeps each block-row's densest blocks; the transpose of the
     *stored* edges is capped again, and stored edges whose transposed block
     did not fit move to the spill alongside the forward overflow.  That
@@ -244,7 +257,8 @@ def _bell_build_capped(coo, block_size, edge_budget):
     blocked-ELL custom VJPs stay correct as-is, while every spilled edge
     flows through the natively-differentiable segment-sum path in both
     directions."""
-    K = formats.bell_budget_k(edge_budget, coo.n_rows, block_size)
+    K = formats.bell_budget_k(edge_budget, coo.n_rows, block_size,
+                              **({} if slack is None else dict(slack=slack)))
     cap = _bell_f_cap(block_size)
     _, spill_fwd, stored = formats.coo_to_bell_capped(
         coo, block_size, K, f_tile_cap=cap, build_blocks=False)
@@ -458,9 +472,14 @@ REGISTRY.register(KernelSpec(
     fused_matvec=lambda bd, x, w: ops.block_diag_fused_matvec(bd.blocks, x, w),
     fused_matvec_acc=lambda bd, x, w, y:
         ops.block_diag_fused_matvec_acc(bd.blocks, x, w, y),
+    fused_dual_matvec=lambda bd, x, w, ws:
+        ops.block_diag_dual_matvec(bd.blocks, x, w, ws),
+    fused_dual_matvec_acc=lambda bd, x, w, ws, y:
+        ops.block_diag_dual_matvec_acc(bd.blocks, x, w, ws, y),
     cost=_block_diag_fused_cost,
     doc="fused A @ (X W): weight stripe in VMEM, transform consumed by the "
-        "MXU block contraction without an HBM round-trip",
+        "MXU block contraction without an HBM round-trip; the dual-weight "
+        "hook adds a second (self) stripe for the SAGE epilogue",
 ))
 
 REGISTRY.register(KernelSpec(

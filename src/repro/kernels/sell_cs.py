@@ -131,3 +131,41 @@ REGISTRY.register(KernelSpec(
     doc="sell-C-sigma: degree-sorted chunk-padded slices (scale-free skew; "
         "pads to chunk-local max degree instead of ELL's global max)",
 ))
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogue path: Y = A_sell @ (x @ w) without materializing H = x @ w
+# ---------------------------------------------------------------------------
+
+def sell_transform_matvec(p: SellCS, x: jax.Array, w: jax.Array) -> jax.Array:
+    """Per-slot gathered transform over the chunk-padded slices (the same
+    trick as kernels/csr.py's fused path): each stored slot transforms its
+    gathered source row and the sorted reduce + un-sort gather run at the
+    *output* width — H never materializes.  Natively differentiable."""
+    h = (x[p.indices] @ w) * p.vals[:, None]
+    y_sorted = jax.ops.segment_sum(h, p.srow, num_segments=p.n_rows,
+                                   indices_are_sorted=True)
+    return y_sorted[p.rank].astype(x.dtype)
+
+
+def _sell_fused_cost(sub, feat_dims, dtype, hw) -> float:
+    fin, fout = feat_dims
+    be = np.dtype(dtype).itemsize
+    P = sub.formats["sell_cs"].n_slots
+    flops = 2.0 * P * (fin * fout + fout)
+    bytes_ = P * (fin * be + fout * be + 8) + 2.0 * sub.n_rows * fout * be
+    return max(flops / hw.peak_flops,
+               bytes_ / (hw.hbm_bw * hw.gather_eff)) + hw.launch_overhead_s
+
+
+REGISTRY.register(KernelSpec(
+    name="sell_fused",
+    kinds=frozenset({DIAG, OFFDIAG}),
+    build=None,
+    payload_of="sell_cs",
+    matvec=None,
+    fused_matvec=sell_transform_matvec,
+    cost=_sell_fused_cost,
+    doc="fused sell-C-sigma A @ (X W): per-slot gathered transform over "
+        "the degree-sorted chunks, no (n, F) intermediate",
+))

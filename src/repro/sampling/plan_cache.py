@@ -46,9 +46,11 @@ from repro.kernels.registry import REGISTRY
 # payloads to that cap with masked zero-blocks, and spills overflow edges
 # to an in-payload COO tier (padded to the budget like any other COO).
 # ELL stays out (max-degree width is data-dependent).  Fused kernels alias
-# their unfused payload, so GCN's transform-first layers keep them.
-MB_KERNELS = ("block_diag", "block_diag_fused", "coo", "csr", "bell",
-              "bell_fused")
+# their unfused payload, so transform-first layers keep them — GCN
+# natively, GIN/SAGE through the epilogue rewrite (core.epilogue); the
+# fused CSR path (per-edge gathered transform) rides the CSR payload.
+MB_KERNELS = ("block_diag", "block_diag_fused", "coo", "csr", "csr_fused",
+              "bell", "bell_fused")
 
 
 # ---------------------------------------------------------------------------
@@ -224,9 +226,20 @@ class PlanCache:
                  hw: sel_mod.HwModel | None = None,
                  nnz_log2_step: float = 2.0, occ_bins: int = 2,
                  max_entries: int = 128, probe_every: int = 0,
-                 probe_iters: int = 2, edge_budget: int | None = None):
+                 probe_iters: int = 2, edge_budget: int | None = None,
+                 epilogues=None, probe_k_max: int = 4,
+                 probe_budget_s: float | None = 2.0,
+                 adapt_budget_k: bool = False,
+                 bell_slack: float = 2.0, spill_target: float = 0.05,
+                 slack_ladder: tuple = (1.0, 1.5, 2.0, 3.0, 4.0),
+                 spill_min_obs: int = 8):
         self.pairs = [(None, w) if isinstance(w, int) else tuple(w)
                       for w in width_pairs]
+        # per-layer EpilogueSpecs aligned with the pairs: selection and
+        # probing price the dense epilogue honestly (free transform for
+        # GIN's MLP, flat self-matmul for SAGE's dual weights)
+        self.epilogues = (tuple(epilogues) if epilogues is not None
+                          else (None,) * len(self.pairs))
         self.dtype = dtype
         self.hw = hw or sel_mod.default_hw()
         self.nnz_log2_step = nnz_log2_step
@@ -239,9 +252,32 @@ class PlanCache:
         # cache's lifetime the way full-batch warmup amortizes over steps.
         self.probe_every = probe_every
         self.probe_iters = probe_iters
+        # adaptive probe widening: the probe widens past top-2 (up to
+        # probe_k_max) when the modeled margin between candidates sits
+        # inside the model's observed relative-error band, accumulated
+        # from this cache's own probe measurements; probe_budget_s caps
+        # one miss's probe wall time, compiles included
+        self.probe_k_max = probe_k_max
+        self.probe_budget_s = probe_budget_s
+        self._probe_errs: list[tuple] = []      # (modeled_s, measured_s)
         # the sampler's padded edge-slot count: probes time candidates on
         # payloads padded to it, because that is what the step executes
         self.edge_budget = edge_budget
+        # budget-K autotuning: committed capped-bell plans report their
+        # spill nnz + slot utilization per signature; once enough batches
+        # are observed the blocked-ELL budget slack steps along the ladder
+        # (more slack when spill exceeds ``spill_target`` of the tier's
+        # edges, less when nothing spills and most padded slots are waste).
+        # The current slack keys the signature, so plans selected under
+        # one K never serve another K's payload shapes.
+        self.adapt_budget_k = adapt_budget_k
+        self.spill_target = spill_target
+        self.spill_min_obs = spill_min_obs
+        self._slack_ladder = tuple(sorted(set(slack_ladder) | {bell_slack}))
+        self._bell_slack = bell_slack
+        self._spill_by_sig: dict[tuple, list] = {}   # sig -> [spill, stored]
+        self._spill_window: list[tuple] = []    # (spill_frac, slot_util)
+        self.slack_changes = 0
         # signature -> (plan, anchor); anchor = raw (kind, log2 nnz, occ)
         # per tier of the decomposition that minted (or aliased) the entry
         self._entries: OrderedDict[tuple, tuple] = OrderedDict()
@@ -252,30 +288,98 @@ class PlanCache:
         self.probes = 0
 
     def signature(self, dec) -> tuple:
-        return density_signature(dec, self.nnz_log2_step, self.occ_bins)
+        sig = density_signature(dec, self.nnz_log2_step, self.occ_bins)
+        if self.adapt_budget_k:
+            # the slack determines the capped-bell K and with it every bell
+            # candidate's cost and payload shape: fold it into the key so a
+            # slack step cleanly re-selects instead of serving stale plans
+            sig = sig + (("bell_slack", self._bell_slack),)
+        return sig
 
-    @staticmethod
-    def _anchor(dec) -> tuple:
-        return tuple((s.kind, math.log2(s.stats["nnz"] + 1),
-                      s.stats.get("brow_occupancy", 0.0))
-                     for s in dec.subgraphs)
+    # -- budget-K autotuning from observed spill (ROADMAP) ------------------
+
+    @property
+    def bell_slack(self) -> float:
+        """Slack factor for ``formats.bell_budget_k`` — callers thread it
+        into ``decompose_skeleton(bell_slack=...)`` so per-batch capped
+        builds use the adapted K."""
+        return self._bell_slack
+
+    def observe_bell(self, dec) -> None:
+        """Record spill/utilization of every committed budget-capped bell
+        payload in ``dec`` and step the slack when the evidence is in.
+
+        Called by the mini-batch loop after materializing a committed
+        plan's payloads, so only plans that actually dispatch bell feed
+        the autotuner (a tier the selector routed to COO says nothing
+        about the cap)."""
+        if not self.adapt_budget_k:
+            return
+        for sub in dec.subgraphs:
+            p = sub.formats.get("bell")
+            if not (isinstance(p, tuple) and len(p) == 3
+                    and getattr(p[0], "budgeted", False)):
+                continue
+            spill = int(p[2].nnz)
+            stored = int((sub.stats or {}).get("nnz", 0)) - spill
+            acc = self._spill_by_sig.setdefault(
+                (sub.name, p[0].max_blocks), [0, 0])
+            acc[0] += spill
+            acc[1] += max(stored, 0)
+            spill_frac = spill / max(spill + stored, 1)
+            # fraction of padded block slots holding a real block: low
+            # utilization with zero spill means the cap is pure waste
+            slot_util = (float(formats._np(p[0].n_valid).sum())
+                         / max(p[0].n_brow * p[0].max_blocks, 1))
+            self._spill_window.append((spill_frac, slot_util))
+        self._maybe_step_slack()
+
+    def _maybe_step_slack(self) -> None:
+        if len(self._spill_window) < self.spill_min_obs:
+            return
+        window = self._spill_window[-self.spill_min_obs:]
+        spill = float(np.mean([s for s, _ in window]))
+        util = float(np.mean([u for _, u in window]))
+        ladder = self._slack_ladder
+        i = ladder.index(self._bell_slack)
+        nxt = None
+        if spill > self.spill_target and i + 1 < len(ladder):
+            nxt = ladder[i + 1]         # hub-heavy: grow K, spill less
+        elif spill == 0.0 and util < 0.25 and i > 0:
+            nxt = ladder[i - 1]         # nothing spills, slots mostly pad
+        if nxt is not None:
+            self._bell_slack = nxt
+            self.slack_changes += 1
+            self._spill_window.clear()
+
+    def _anchor(self, dec) -> tuple:
+        """(minting slack, raw per-tier stats).  The slack rides along so
+        near-hit aliasing never bridges a budget-K slack step — a slack
+        change alters every bell candidate's K (cost and payload shape),
+        and the whole point of folding it into the signature is to force
+        re-selection rather than serve plans priced for the old cap."""
+        tiers = tuple((s.kind, math.log2(s.stats["nnz"] + 1),
+                       s.stats.get("brow_occupancy", 0.0))
+                      for s in dec.subgraphs)
+        return (self._bell_slack if self.adapt_budget_k else None, tiers)
 
     def _near(self, a: tuple, b: tuple) -> bool:
-        """Within half a quantization cell on every tier."""
-        if len(a) != len(b):
+        """Same minting slack, within half a quantization cell per tier."""
+        if a[0] != b[0] or len(a[1]) != len(b[1]):
             return False
         return all(ka == kb
                    and abs(la - lb) <= self.nnz_log2_step / 2
                    and abs(oa - ob) <= 0.5 / self.occ_bins
-                   for (ka, la, oa), (kb, lb, ob) in zip(a, b))
+                   for (ka, la, oa), (kb, lb, ob) in zip(a[1], b[1]))
 
     def select(self, dec: Decomposed) -> KernelPlan:
         """Uncached cost-model selection (what every step would pay
         without the cache — the benchmark's 'uncached' row)."""
         layers = [sel_mod.select_by_cost_model(dec, fout, self.dtype,
-                                               hw=self.hw, in_dim=fin)
-                  for fin, fout in self.pairs]
-        return KernelPlan.make(dec, layers)
+                                               hw=self.hw, in_dim=fin,
+                                               epilogue=ep)
+                  for (fin, fout), ep in zip(self.pairs, self.epilogues)]
+        return KernelPlan.make(dec, layers, epilogues=self.epilogues)
 
     def _store(self, sig: tuple, plan: KernelPlan, anchor: tuple) -> None:
         self._entries[sig] = (plan, anchor)
@@ -324,27 +428,58 @@ class PlanCache:
         self._store(self.signature(dec), plan, self._anchor(dec))
         return plan, False
 
+    def probe_margin(self) -> float | None:
+        """The cost model's observed relative-error band, from this cache's
+        own probe measurements: the median |measured - modeled| / modeled
+        over recent probes (None until enough evidence).  Two candidates
+        whose modeled costs differ by less than this are indistinguishable
+        to the model — the probe widens to let the wall clock decide."""
+        if len(self._probe_errs) < 4:
+            return None
+        rel = [abs(meas - mod) / max(mod, 1e-12)
+               for mod, meas in self._probe_errs[-64:]]
+        return float(np.clip(np.median(rel), 0.05, 1.0))
+
     def _probe_pin(self, dec: Decomposed) -> KernelPlan:
         """Feedback probing through the cache (ROADMAP probe-on-Nth-miss):
-        wall-clock-time the cost model's two cheapest candidates per
+        wall-clock-time the cost model's cheapest candidates per
         (layer, subgraph) and pin the measured winner — closing the loop
         the way full-batch warmup does, amortized over every future hit on
-        this signature.  With an ``edge_budget`` the timing runs on the
-        budget-padded payload twin (the shapes the jitted step executes —
-        a real-nnz COO would underprice its padded runtime cost); the
-        cost-model ranking still reads the real stats."""
+        this signature.  The frontier is top-2 until the cache has probe
+        evidence, then widens (up to ``probe_k_max``) to every candidate
+        inside the model's own error band (:meth:`probe_margin`), with
+        ``probe_budget_s`` capping one miss's probe wall time.  With an
+        ``edge_budget`` the timing runs on the budget-padded payload twin
+        (the shapes the jitted step executes — a real-nnz COO would
+        underprice its padded runtime cost); the cost-model ranking still
+        reads the real stats."""
         self.probes += 1
         time_dec = (fix_shapes(dec, self.edge_budget)
                     if self.edge_budget else None)
         layers = sel_mod.probe_topk(dec, self.pairs, self.dtype, hw=self.hw,
                                     iters=self.probe_iters,
-                                    time_dec=time_dec)
-        return KernelPlan.make(dec, layers)
+                                    time_dec=time_dec,
+                                    epilogues=self.epilogues,
+                                    k_max=self.probe_k_max,
+                                    margin=self.probe_margin(),
+                                    time_budget_s=self.probe_budget_s,
+                                    errs=self._probe_errs)
+        return KernelPlan.make(dec, layers, epilogues=self.epilogues)
 
     @property
     def stats(self) -> dict:
         total = self.hits + self.near_hits + self.misses
-        return dict(hits=self.hits, near_hits=self.near_hits,
-                    misses=self.misses, entries=len(self._entries),
-                    evictions=self.evictions, probes=self.probes,
-                    hit_rate=(self.hits + self.near_hits) / max(total, 1))
+        out = dict(hits=self.hits, near_hits=self.near_hits,
+                   misses=self.misses, entries=len(self._entries),
+                   evictions=self.evictions, probes=self.probes,
+                   hit_rate=(self.hits + self.near_hits) / max(total, 1))
+        if self.adapt_budget_k:
+            spill = sum(a[0] for a in self._spill_by_sig.values())
+            stored = sum(a[1] for a in self._spill_by_sig.values())
+            out.update(bell_slack=self._bell_slack,
+                       slack_changes=self.slack_changes,
+                       spill_nnz=spill,
+                       spill_frac=spill / max(spill + stored, 1))
+        if self._probe_errs:
+            out["probe_margin"] = self.probe_margin()
+        return out

@@ -16,6 +16,7 @@ masked cross-entropy — here masked to the batch's target nodes) but over
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any
 
@@ -57,13 +58,19 @@ def batch_edge_budget(batch: SampledBatch, cfg: gnn.GNNConfig) -> int:
     return len(batch.senders) + (batch.n if cfg.model == "gcn" else 0)
 
 
-def prepare_skeleton(batch: SampledBatch, cfg: gnn.GNNConfig
+def prepare_skeleton(batch: SampledBatch, cfg: gnn.GNNConfig,
+                     bell_slack: float | None = None
                      ) -> tuple[dec_mod.DecomposeSkeleton, np.ndarray]:
-    """Single-pass per-batch preprocessing: (GCN: self-loops + symmetric
-    norm over the *sampled* subgraph) then ONE partition+stats pass
-    producing a :class:`DecomposeSkeleton` with a pinned bucket count and
-    the edge budget threaded through (budget-paddable builders key off it).
-    Also returns the batch's inverse in-degree (SAGE's mean aggregator).
+    """Single-pass per-batch preprocessing: per-model edge normalization
+    over the *sampled* subgraph (GCN: self-loops + symmetric norm; SAGE:
+    the mean-aggregator's 1/deg baked into the edge values, which is what
+    lets the dual-weight epilogue fuse — core.epilogue) then ONE
+    partition+stats pass producing a :class:`DecomposeSkeleton` with a
+    pinned bucket count and the edge budget threaded through
+    (budget-paddable builders key off it).  ``bell_slack`` is the adapted
+    blocked-ELL budget slack from the PlanCache's budget-K autotuner.
+    Also returns the batch's inverse in-degree (kept for API stability;
+    the baked SAGE path no longer consumes it).
 
     The hot loop runs the PlanCache lookup against ``skel.stats_only()``
     and materializes payloads from the same skeleton — the edges are never
@@ -75,12 +82,15 @@ def prepare_skeleton(batch: SampledBatch, cfg: gnn.GNNConfig
         s = np.concatenate([s, loops])
         r = np.concatenate([r, loops])
         vals = graph_mod.gcn_norm_values(batch.n, s, r)
+    elif cfg.model == "sage":
+        vals = graph_mod.mean_norm_values(batch.n, s, r)
     g = graph_mod.Graph(batch.n, s, r, batch.features, batch.labels,
                         n_classes=1, name="batch")
     skel = dec_mod.decompose_skeleton(
         g, comm_size=cfg.comm_size, reorder=False,
         inter_buckets=max(cfg.inter_buckets, 1), edge_vals=vals,
-        keep_empty_buckets=True, edge_budget=batch_edge_budget(batch, cfg))
+        keep_empty_buckets=True, edge_budget=batch_edge_budget(batch, cfg),
+        bell_slack=bell_slack)
     deg = np.bincount(r, minlength=batch.n).astype(np.float32)
     inv_deg = np.where(batch.node_mask, 1.0 / np.maximum(deg, 1.0), 0.0)
     return skel, inv_deg.astype(np.float32)
@@ -133,10 +143,49 @@ class MinibatchResult:
     prepare_seconds: float       # median decompose+select+pad time per batch
     dropped_edges: int           # edges truncated by the budget, total
     plan_cache: Any = None
+    skeleton_hits: int = 0       # batches whose cluster tuple reused a
+    skeleton_misses: int = 0     # cached DecomposeSkeleton (ClusterSampler)
 
     def hit_rate(self, warmup: int = 0) -> float:
         h = self.hit_history[warmup:]
         return sum(h) / max(len(h), 1)
+
+
+class SkeletonCache:
+    """Cluster-tuple -> (skeleton, inv_deg) memo (ROADMAP skeleton reuse).
+
+    ClusterSampler draws cluster combinations without replacement per
+    epoch, so tuples recur across epochs; a batch drawn for a tuple is
+    fully determined by it (induced edges + features) *unless* the edge
+    budget truncated a random subset — such batches are never cached.
+    The adapted bell slack is part of the key: a slack step changes the
+    capped-bell K baked into the skeleton's tier stats."""
+
+    def __init__(self, max_entries: int = 64):
+        self.max_entries = max_entries
+        self._entries: OrderedDict[tuple, tuple] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def key(batch: SampledBatch, bell_slack) -> tuple | None:
+        clusters = batch.meta.get("clusters")
+        if clusters is None or batch.meta.get("dropped_edges", 0):
+            return None
+        return (tuple(clusters), bell_slack)
+
+    def get(self, key: tuple):
+        hit = self._entries.get(key)
+        if hit is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+        return hit
+
+    def put(self, key: tuple, value: tuple) -> None:
+        self.misses += 1
+        self._entries[key] = value
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
 
 
 def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
@@ -162,6 +211,7 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     sampler = make_sampler(graph, cfg)
     in_dim = graph.features.shape[-1]
     pairs = gnn.agg_width_pairs(cfg, in_dim, graph.n_classes)
+    epilogues = gnn.layer_epilogues(cfg, in_dim, graph.n_classes)
     # total budget the padded payloads see: sampled edges + GCN self-loops
     pad_budget = sampler.edge_budget + (sampler.node_budget
                                         if cfg.model == "gcn" else 0)
@@ -169,7 +219,13 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
                                     hw=sel_mod.default_hw(),
                                     max_entries=cfg.cache_entries,
                                     probe_every=cfg.probe_every,
-                                    edge_budget=pad_budget)
+                                    edge_budget=pad_budget,
+                                    epilogues=epilogues,
+                                    probe_k_max=cfg.probe_k_max,
+                                    probe_budget_s=cfg.probe_budget_s,
+                                    adapt_budget_k=cfg.adapt_budget_k)
+    skel_cache = (SkeletonCache(cfg.skeleton_cache_entries)
+                  if cfg.skeleton_cache_entries > 0 else None)
 
     key = jax.random.PRNGKey(cfg.seed)
     params = gnn.init_model(key, cfg, in_dim, graph.n_classes)
@@ -182,15 +238,26 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     sig_of_layers: dict[tuple, tuple] = {}
 
     def plan_and_fix(batch):
-        """Single-pass prepare: one partition into a skeleton, cache
+        """Single-pass prepare: one partition into a skeleton (skipped
+        entirely when the cluster tuple's skeleton is cached), cache
         lookup on its stats-only view, then payloads materialized from the
         *same* skeleton — only the committed plan's on a hit, the full
         candidate set only when selection (or a scheduled probe) actually
         runs.  A fixed selector skips the cache outright."""
-        skel, inv_deg = prepare_skeleton(batch, cfg)
+        slack = cache.bell_slack if cfg.adapt_budget_k else None
+        skey = (SkeletonCache.key(batch, slack) if skel_cache is not None
+                else None)
+        cached = skel_cache.get(skey) if skey is not None else None
+        if cached is not None:
+            skel, inv_deg = cached
+        else:
+            skel, inv_deg = prepare_skeleton(batch, cfg, bell_slack=slack)
+            if skey is not None:
+                skel_cache.put(skey, (skel, inv_deg))
         if fixed_names is not None:
             dec = skel.materialize(fixed_names)
-            plan = KernelPlan.make(dec, fixed_names, n_layers=cfg.n_layers)
+            plan = KernelPlan.make(dec, fixed_names, n_layers=cfg.n_layers,
+                                   epilogues=epilogues)
             hit = True
         else:
             # signature/anchor read tier stats only, so the skeleton is
@@ -204,6 +271,8 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
             else:
                 dec = skel.materialize(MB_KERNELS)
                 plan, _ = cache.plan_for(dec)
+        # committed capped-bell payloads feed the budget-K autotuner
+        cache.observe_bell(dec)
         sig = sig_of_layers.setdefault(plan.layers, cache.signature(skel))
         # only the payloads this plan dispatches cross the jit boundary;
         # the keep sets are a function of the plan, so batches sharing a
@@ -241,11 +310,17 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         losses.append(float(loss))
         if verbose and i % 10 == 0:
             cs = cache.stats
+            sk = (f" skel[h={skel_cache.hits} m={skel_cache.misses}]"
+                  if skel_cache is not None else "")
+            bk = (f" bellK[slack={cs['bell_slack']:.2f} "
+                  f"spill={cs['spill_frac']:.3f}]"
+                  if "bell_slack" in cs else "")
             print(f"batch {i:4d} loss {float(loss):.4f} "
                   f"cache_hit={hit} plan={plan.layers[0]} "
                   f"cache[h={cs['hits']} nh={cs['near_hits']} "
                   f"m={cs['misses']} ev={cs['evictions']} "
-                  f"pr={cs['probes']} rate={cs['hit_rate']:.2f}]")
+                  f"pr={cs['probes']} rate={cs['hit_rate']:.2f}]"
+                  f"{sk}{bk}")
 
     # snapshot before the eval loop below adds its own (mostly-hit)
     # lookups: the reported rate is the *training* steady state
@@ -273,4 +348,6 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         n_traces=counters["traces"],
         step_seconds=med(t_step, skip=min(len(t_step) - 1, 1)),
         sample_seconds=med(t_sample), prepare_seconds=med(t_prepare),
-        dropped_edges=dropped, plan_cache=cache)
+        dropped_edges=dropped, plan_cache=cache,
+        skeleton_hits=skel_cache.hits if skel_cache else 0,
+        skeleton_misses=skel_cache.misses if skel_cache else 0)

@@ -139,8 +139,11 @@ def test_masked_loss_matches_full_batch_when_sampling_whole_graph():
                         jnp.asarray(batch.labels),
                         jnp.asarray(batch.target_mask), plan_b,
                         jnp.asarray(inv_deg))
+    # full-batch and mini-batch may commit different kernels (the MB
+    # candidate set includes the fused CSR path), which sum edges in
+    # different orders — equality holds to fp-reassociation noise
     np.testing.assert_allclose(float(loss_mb), float(loss_full),
-                               atol=1e-5, rtol=1e-5)
+                               atol=1e-4, rtol=1e-4)
 
 
 def test_plan_cache_hit_miss_and_eviction():
