@@ -6,6 +6,12 @@ Compares every row of ``BENCH_*.json`` in a directory against the committed
 from the baseline (new benchmarks) pass; zero/NaN rows (derived-only
 benchmarks) and sub-50us rows (pure launch noise) are skipped.
 
+Most rows are timings where LOWER is better and the gate fires on a rise;
+rows named in ``HIGHER_IS_BETTER`` (pipeline overlap/efficiency) gate the
+other way — they fail when the value *drops* below 1/threshold of the
+baseline, and are exempt from the sub-50us skip (efficiency is a percent,
+not a latency).
+
   PYTHONPATH=src python -m benchmarks.run --quick --json bench-out
   PYTHONPATH=src python -m benchmarks.check_regression bench-out
   PYTHONPATH=src python -m benchmarks.check_regression bench-out --write
@@ -24,6 +30,10 @@ import sys
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
 MIN_US = 50.0
+# row names (the part after "<benchmark>/") whose value regresses DOWNWARD:
+# hidden overlap microseconds and device-busy percent shrink when the
+# pipeline stops overlapping prepare with compute
+HIGHER_IS_BETTER = ("pipeline_efficiency_pct", "step_overlap_us")
 
 
 def load_rows(bench_dir: str) -> dict:
@@ -45,6 +55,13 @@ def gate(current: dict, baseline: dict, threshold: float) -> list[str]:
         if us is None:
             continue                      # benchmark renamed/removed: no gate
         if not (math.isfinite(us) and math.isfinite(base_us)):
+            continue
+        if key.rsplit("/", 1)[-1] in HIGHER_IS_BETTER:
+            if us * threshold < base_us:
+                failures.append(
+                    f"{key}: {us:.1f} vs baseline {base_us:.1f} "
+                    f"({(us / base_us - 1) * 100:.0f}% < "
+                    f"-{(1 - 1 / threshold) * 100:.0f}%, higher is better)")
             continue
         if base_us < MIN_US or us < MIN_US:
             continue

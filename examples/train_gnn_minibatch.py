@@ -3,8 +3,15 @@ end-to-end (Graph -> Sampler -> SampledBatch -> per-batch decompose ->
 PlanCache -> jitted step), with the plan-cache and no-retrace accounting
 printed next to a full-batch reference run.
 
+By default the async sampler->trainer pipeline is on (--prefetch 4
+--workers 2): background threads sample, decompose, resolve the PlanCache,
+pad, and stage batches ahead of the jitted step, so one iteration pays
+~max(compute, prepare) instead of their sum; --prefetch 0 runs the
+synchronous loop.
+
   PYTHONPATH=src python examples/train_gnn_minibatch.py [--steps 100]
   PYTHONPATH=src python examples/train_gnn_minibatch.py --sampler neighbor
+  PYTHONPATH=src python examples/train_gnn_minibatch.py --prefetch 0
 """
 import argparse
 
@@ -27,6 +34,13 @@ def main():
                     help="wall-clock the top-2 cost-model candidates on "
                          "every Nth PlanCache miss and pin the winner "
                          "(0 = cost model only)")
+    ap.add_argument("--prefetch", type=int, default=4,
+                    help="async pipeline prefetch depth: background "
+                         "workers sample/decompose/stage this many batches "
+                         "ahead of the training step (0 = synchronous)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="background sampler/prepare threads for the "
+                         "async pipeline")
     ap.add_argument("--full-batch", action="store_true",
                     help="also train full-batch for a step-time reference")
     args = ap.parse_args()
@@ -39,12 +53,26 @@ def main():
         model=args.model, sampler=args.sampler, reorder="louvain",
         clusters_per_batch=args.clusters_per_batch,
         batch_nodes=args.batch_nodes, inter_buckets=args.inter_buckets,
-        probe_every=args.probe_every)
+        probe_every=args.probe_every, prefetch_depth=args.prefetch,
+        pipeline_workers=args.workers)
     res = gnn.train(graph, cfg, steps=args.steps)
     warm = min(args.steps // 4, 10)
     print(f"{args.model}/{args.sampler}: {res.step_seconds*1e3:.2f} ms/step "
           f"(+{res.sample_seconds*1e3:.2f} sample, "
           f"+{res.prepare_seconds*1e3:.2f} decompose+select+pad)")
+    if res.pipeline is not None:
+        p = res.pipeline
+        print(f"  pipeline: {res.iter_seconds*1e3:.2f} ms/iter, "
+              f"{p['efficiency_pct']:.0f}% device-busy "
+              f"(depth={p['depth']} workers={p['workers']} "
+              f"ready={p['ready_mean']:.1f} "
+              f"wait_full={p['wait_full_s']*1e3:.0f}ms "
+              f"wait_empty={p['wait_empty_s']*1e3:.0f}ms"
+              f"{' STARVED' if p['starved'] else ''})")
+    else:
+        print(f"  sync loop: {res.iter_seconds*1e3:.2f} ms/iter "
+              f"(sample + prepare + step, serial; --prefetch N enables "
+              f"the async pipeline)")
     print(f"  plan cache: {res.cache} "
           f"post-warmup hit rate {res.hit_rate(warm):.0%}")
     print(f"  jit traces: {res.n_traces} across {args.steps} batches "

@@ -102,6 +102,20 @@ a SINGLE-PASS skeleton prepare:
   value per step function) so the traced Decomposed never changes
   structure (no retrace) yet stays debuggable
 
+With cfg.prefetch_depth > 0 the whole host-side column above runs on
+background threads (train.pipeline.BatchPipeline): cfg.pipeline_workers
+producers draw deterministic per-index sampler tickets (sampler.draw /
+sampler.build — batch i is a pure function of (seed, i), so the async
+stream is bit-identical to the sync one), run the skeleton prepare +
+PlanCache resolve + fix_shapes, stage device transfers, and pre-compile
+novel payload shapes up to prefetch_depth batches ahead behind a bounded
+semaphore; the training loop is a pure consumer dequeuing ready batches
+in index order, so one iteration pays max(compute, prepare) instead of
+their sum.  PlanCache/SkeletonCache are lock-protected for this (atomic
+plan_for: racing workers on one fresh signature pay exactly one miss),
+and backpressure counters (queue-full / queue-empty waits, mean ready
+depth, starvation warn-once) surface through MinibatchResult.pipeline.
+
 MB_KERNELS membership rule: a kernel is admissible iff its payload has a
 fixed pytree shape *at the edge budget* — every array dim a function of
 (edge budget, node budget, block size), nothing data-dependent.  BlockDiag

@@ -68,6 +68,20 @@ class GNNConfig:
     # epoch; a small LRU keyed by the drawn tuple skips even the single
     # decompose_skeleton pass for repeated batches (0 disables)
     skeleton_cache_entries: int = 64
+    # async sampler->trainer pipeline (train/pipeline.py): prefetch_depth
+    # background-prepared batches staged ahead of the jitted step, so a
+    # steady-state iteration pays max(compute, prepare) instead of their
+    # sum.  0 = synchronous (prepare inline with the step, the pre-PR-6
+    # behavior); pipeline_workers threads share the prepare work.  The
+    # async batch stream is bit-identical to the sync one under the same
+    # seed (samplers draw from per-index deterministic seed streams).
+    prefetch_depth: int = 0
+    pipeline_workers: int = 2
+    # adaptive-K recompile budget: each bell-slack ladder step re-shapes
+    # the capped-bell payloads and costs one recompile per affected step
+    # function (pre-compiled in a pipeline worker when prefetching); the
+    # cap bounds total slack steps per run
+    max_ladder_recompiles: int = 4
 
 
 def prepare(graph: graph_mod.Graph, cfg: GNNConfig) -> dec_mod.Decomposed:

@@ -22,13 +22,21 @@ exactly the regime where the paper's §4 dynamic selection has to be
       |  committed payloads
       v
   train.gnn_steps.make_sampled_step -- jit step(params, opt, dec, batch)
+
+The whole host column runs either inline (cfg.prefetch_depth=0) or on
+train.pipeline.BatchPipeline worker threads (prefetch_depth>0): samplers
+split drawing into a cheap sequential draw() -> DrawTicket and a pure,
+thread-safe build(ticket) whose randomness is a function of (seed, ticket
+index), so the async batch stream is bit-identical to the sync one; the
+PlanCache serializes lookup/selection/probing/budget-K bookkeeping behind
+one lock so concurrent workers preserve its hit rate and counters.
 """
-from repro.sampling.sampler import (ClusterSampler, NeighborSampler,
-                                    SampledBatch)
+from repro.sampling.sampler import (ClusterSampler, DrawTicket,
+                                    NeighborSampler, SampledBatch)
 from repro.sampling.plan_cache import (MB_KERNELS, PlanCache,
                                        density_signature, fix_shapes,
                                        plan_payload_keys)
 
-__all__ = ["ClusterSampler", "NeighborSampler", "SampledBatch",
-           "PlanCache", "MB_KERNELS", "density_signature", "fix_shapes",
-           "plan_payload_keys"]
+__all__ = ["ClusterSampler", "DrawTicket", "NeighborSampler",
+           "SampledBatch", "PlanCache", "MB_KERNELS", "density_signature",
+           "fix_shapes", "plan_payload_keys"]

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 from collections import OrderedDict
 
 import numpy as np
@@ -220,6 +221,18 @@ class PlanCache:
     every flap.  A near-match reuses the anchor's plan and aliases the
     new signature to it, so either stage skips selection (both count
     toward ``hit_rate``); only a genuine miss selects.
+
+    Thread safety (the async pipeline's contract): every stateful entry
+    point — ``lookup`` / ``plan_for`` / ``observe_bell`` / ``stats`` —
+    holds one re-entrant lock, so pipeline workers can resolve plans
+    concurrently.  ``plan_for`` is atomic (lookup + select + store under
+    the lock): two workers racing the same fresh signature cost exactly
+    one miss — the loser blocks, then hits — so the steady-state hit rate
+    is identical to single-threaded training.  Probes serialize behind
+    the same lock, one wall-clock measurement at a time, so a probe's
+    timing is never polluted by another probe's device work (with the
+    pipeline the consumer's step can still overlap a probe; probing
+    defaults off in pipeline mode — ``cfg.probe_every = 0``).
     """
 
     def __init__(self, width_pairs, dtype=np.float32,
@@ -232,7 +245,8 @@ class PlanCache:
                  adapt_budget_k: bool = False,
                  bell_slack: float = 2.0, spill_target: float = 0.05,
                  slack_ladder: tuple = (1.0, 1.5, 2.0, 3.0, 4.0),
-                 spill_min_obs: int = 8):
+                 spill_min_obs: int = 8,
+                 max_slack_changes: int | None = None):
         self.pairs = [(None, w) if isinstance(w, int) else tuple(w)
                       for w in width_pairs]
         # per-layer EpilogueSpecs aligned with the pairs: selection and
@@ -278,6 +292,13 @@ class PlanCache:
         self._spill_by_sig: dict[tuple, list] = {}   # sig -> [spill, stored]
         self._spill_window: list[tuple] = []    # (spill_frac, slot_util)
         self.slack_changes = 0
+        # every slack step changes the capped-bell payload shapes, which
+        # costs one recompile of each affected step function; the cap
+        # bounds total adaptive-K recompiles per run (None = unbounded)
+        self.max_slack_changes = max_slack_changes
+        # one re-entrant lock over all mutable state: pipeline workers
+        # resolve plans concurrently, probes serialize behind it
+        self._lock = threading.RLock()
         # signature -> (plan, anchor); anchor = raw (kind, log2 nnz, occ)
         # per tier of the decomposition that minted (or aliased) the entry
         self._entries: OrderedDict[tuple, tuple] = OrderedDict()
@@ -287,13 +308,27 @@ class PlanCache:
         self.evictions = 0
         self.probes = 0
 
+    def _dec_slack(self, dec) -> float:
+        """The slack this decomposition was *built* with (baked into its
+        tier stats by ``decompose_skeleton(bell_slack=...)``), falling back
+        to the cache's current slack for decompositions that never threaded
+        one.  Reading the built value keeps signature/anchor a pure
+        function of the batch: a pipeline worker stepping the ladder
+        mid-flight can't shear another batch's cache key away from the
+        payload shapes it actually carries."""
+        for s in dec.subgraphs:
+            st = getattr(s, "stats", None)
+            if st and "bell_slack" in st:
+                return float(st["bell_slack"])
+        return self._bell_slack
+
     def signature(self, dec) -> tuple:
         sig = density_signature(dec, self.nnz_log2_step, self.occ_bins)
         if self.adapt_budget_k:
             # the slack determines the capped-bell K and with it every bell
             # candidate's cost and payload shape: fold it into the key so a
             # slack step cleanly re-selects instead of serving stale plans
-            sig = sig + (("bell_slack", self._bell_slack),)
+            sig = sig + (("bell_slack", self._dec_slack(dec)),)
         return sig
 
     # -- budget-K autotuning from observed spill (ROADMAP) ------------------
@@ -303,7 +338,8 @@ class PlanCache:
         """Slack factor for ``formats.bell_budget_k`` — callers thread it
         into ``decompose_skeleton(bell_slack=...)`` so per-batch capped
         builds use the adapted K."""
-        return self._bell_slack
+        with self._lock:
+            return self._bell_slack
 
     def observe_bell(self, dec) -> None:
         """Record spill/utilization of every committed budget-capped bell
@@ -315,6 +351,10 @@ class PlanCache:
         about the cap)."""
         if not self.adapt_budget_k:
             return
+        with self._lock:
+            self._observe_bell_locked(dec)
+
+    def _observe_bell_locked(self, dec) -> None:
         for sub in dec.subgraphs:
             p = sub.formats.get("bell")
             if not (isinstance(p, tuple) and len(p) == 3
@@ -336,6 +376,13 @@ class PlanCache:
 
     def _maybe_step_slack(self) -> None:
         if len(self._spill_window) < self.spill_min_obs:
+            return
+        if (self.max_slack_changes is not None
+                and self.slack_changes >= self.max_slack_changes):
+            # recompile budget exhausted: hold the ladder where it is (each
+            # step re-shapes the capped-bell payloads and costs one jit
+            # recompile per affected step function)
+            self._spill_window.clear()
             return
         window = self._spill_window[-self.spill_min_obs:]
         spill = float(np.mean([s for s, _ in window]))
@@ -361,7 +408,7 @@ class PlanCache:
         tiers = tuple((s.kind, math.log2(s.stats["nnz"] + 1),
                        s.stats.get("brow_occupancy", 0.0))
                       for s in dec.subgraphs)
-        return (self._bell_slack if self.adapt_budget_k else None, tiers)
+        return (self._dec_slack(dec) if self.adapt_budget_k else None, tiers)
 
     def _near(self, a: tuple, b: tuple) -> bool:
         """Same minting slack, within half a quantization cell per tier."""
@@ -398,35 +445,39 @@ class PlanCache:
         payloads.  Counts hits/near-hits; a failed lookup is not yet a
         miss (the caller decides whether to select).
         """
-        sig = self.signature(dec)
-        entry = self._entries.get(sig)
-        if entry is not None:
-            self.hits += 1
-            self._entries.move_to_end(sig)
-            return entry[0]
-        anchor = self._anchor(dec)
-        for plan, a in reversed(self._entries.values()):   # newest first
-            if self._near(anchor, a):
-                self.near_hits += 1
-                self._store(sig, plan, a)   # alias the boundary cell
-                return plan
-        return None
+        with self._lock:
+            sig = self.signature(dec)
+            entry = self._entries.get(sig)
+            if entry is not None:
+                self.hits += 1
+                self._entries.move_to_end(sig)
+                return entry[0]
+            anchor = self._anchor(dec)
+            for plan, a in reversed(self._entries.values()):  # newest first
+                if self._near(anchor, a):
+                    self.near_hits += 1
+                    self._store(sig, plan, a)   # alias the boundary cell
+                    return plan
+            return None
 
     def plan_for(self, dec: Decomposed) -> tuple[KernelPlan, bool]:
         """(plan, hit): memoized plan for the batch's density signature;
         ``hit`` is True whenever selection was skipped.  ``dec`` must
         carry candidate payloads (selection validates against them, and a
         scheduled probe times them) — the two-phase hot path uses
-        :meth:`lookup` first instead."""
-        plan = self.lookup(dec)
-        if plan is not None:
-            return plan, True
-        self.misses += 1
-        plan = self.select(dec)
-        if self.probe_every and self.misses % self.probe_every == 0:
-            plan = self._probe_pin(dec)
-        self._store(self.signature(dec), plan, self._anchor(dec))
-        return plan, False
+        :meth:`lookup` first instead.  Atomic under the cache lock: two
+        pipeline workers racing one fresh signature pay exactly one miss
+        (the second blocks, then hits the entry the first minted)."""
+        with self._lock:
+            plan = self.lookup(dec)
+            if plan is not None:
+                return plan, True
+            self.misses += 1
+            plan = self.select(dec)
+            if self.probe_every and self.misses % self.probe_every == 0:
+                plan = self._probe_pin(dec)
+            self._store(self.signature(dec), plan, self._anchor(dec))
+            return plan, False
 
     def probe_margin(self) -> float | None:
         """The cost model's observed relative-error band, from this cache's
@@ -434,10 +485,11 @@ class PlanCache:
         over recent probes (None until enough evidence).  Two candidates
         whose modeled costs differ by less than this are indistinguishable
         to the model — the probe widens to let the wall clock decide."""
-        if len(self._probe_errs) < 4:
-            return None
-        rel = [abs(meas - mod) / max(mod, 1e-12)
-               for mod, meas in self._probe_errs[-64:]]
+        with self._lock:
+            if len(self._probe_errs) < 4:
+                return None
+            rel = [abs(meas - mod) / max(mod, 1e-12)
+                   for mod, meas in self._probe_errs[-64:]]
         return float(np.clip(np.median(rel), 0.05, 1.0))
 
     def _probe_pin(self, dec: Decomposed) -> KernelPlan:
@@ -468,18 +520,19 @@ class PlanCache:
 
     @property
     def stats(self) -> dict:
-        total = self.hits + self.near_hits + self.misses
-        out = dict(hits=self.hits, near_hits=self.near_hits,
-                   misses=self.misses, entries=len(self._entries),
-                   evictions=self.evictions, probes=self.probes,
-                   hit_rate=(self.hits + self.near_hits) / max(total, 1))
-        if self.adapt_budget_k:
-            spill = sum(a[0] for a in self._spill_by_sig.values())
-            stored = sum(a[1] for a in self._spill_by_sig.values())
-            out.update(bell_slack=self._bell_slack,
-                       slack_changes=self.slack_changes,
-                       spill_nnz=spill,
-                       spill_frac=spill / max(spill + stored, 1))
-        if self._probe_errs:
-            out["probe_margin"] = self.probe_margin()
-        return out
+        with self._lock:
+            total = self.hits + self.near_hits + self.misses
+            out = dict(hits=self.hits, near_hits=self.near_hits,
+                       misses=self.misses, entries=len(self._entries),
+                       evictions=self.evictions, probes=self.probes,
+                       hit_rate=(self.hits + self.near_hits) / max(total, 1))
+            if self.adapt_budget_k:
+                spill = sum(a[0] for a in self._spill_by_sig.values())
+                stored = sum(a[1] for a in self._spill_by_sig.values())
+                out.update(bell_slack=self._bell_slack,
+                           slack_changes=self.slack_changes,
+                           spill_nnz=spill,
+                           spill_frac=spill / max(spill + stored, 1))
+            if self._probe_errs:
+                out["probe_margin"] = self.probe_margin()
+            return out

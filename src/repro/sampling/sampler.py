@@ -25,9 +25,20 @@ paper's §3.3 decomposition) and both deterministic under a fixed seed:
 Every batch is padded to a fixed ``node_budget`` x ``edge_budget`` (zero
 features / masked rows / dropped-edge accounting), so the downstream jitted
 train step never retraces: same ShapeDtypeStructs batch after batch.
+
+Async pipeline contract (train/pipeline.py): ``sample()`` is split into a
+cheap, lock-protected :meth:`draw` that consumes the *sequential* epoch
+state and pins batch ``index``'s cluster/seed set in a :class:`DrawTicket`,
+and a pure, thread-safe :meth:`build` that does the heavy work (induced
+edges, feature gather, padding).  All randomness inside ``build`` comes
+from a per-batch stream that is a pure function of (sampler seed, batch
+index) — epoch permutations likewise key off (seed, epoch number) — so
+pipeline workers can build batches out of order and the stream stays
+bit-identical to sequential ``sample()`` calls under the same seed.
 """
 from __future__ import annotations
 
+import threading
 import warnings
 from dataclasses import dataclass, field
 
@@ -35,6 +46,27 @@ import numpy as np
 
 from repro.core.decompose import REORDERERS, resolve_method
 from repro.graphs.graph import Graph
+
+# stream tags keep the per-epoch and per-batch child streams disjoint
+_EPOCH_TAG = 0x9E3779B9
+_BATCH_TAG = 0x85EBCA6B
+
+
+def _stream_rng(entropy: int, tag: int, index: int) -> np.random.Generator:
+    """Deterministic child stream: a pure function of (sampler seed, stream
+    tag, index).  Batch i's randomness no longer depends on how many draws
+    preceded it, which is what lets pipeline workers build batches on any
+    thread in any order yet bit-identical to the sequential path."""
+    return np.random.default_rng(
+        np.random.SeedSequence((entropy, tag, index)))
+
+
+@dataclass(frozen=True)
+class DrawTicket:
+    """Snapshot of one sequential draw: everything :meth:`build` needs to
+    construct batch ``index`` deterministically on any thread."""
+    index: int           # 0-based position in the sampler's batch stream
+    chosen: np.ndarray   # clusters (ClusterSampler) | seeds (NeighborSampler)
 
 
 @dataclass
@@ -140,20 +172,28 @@ class ClusterSampler:
         frac = self.node_budget / max(graph.n, 1)
         self.edge_budget = (int(edge_budget) if edge_budget else
                             max(1024, int(4 * graph.n_edges * frac)))
-        self._rng = np.random.default_rng(seed)
+        self.seed = int(seed)
+        self._entropy = self.seed & ((1 << 63) - 1)
+        self._lock = threading.Lock()
         self._epoch: list[int] = []
+        self._epoch_no = 0
+        self._n_drawn = 0
 
     def _draw_clusters(self) -> np.ndarray:
         # epoch-shuffled without replacement; when a batch straddles an
         # epoch boundary, an id already drawn for *this batch* is deferred
         # to later in the fresh epoch (not dropped — it must still get its
         # draw) so a batch never contains a duplicate cluster, which would
-        # duplicate its nodes and double-count them in the masked loss
+        # duplicate its nodes and double-count them in the masked loss.
+        # Epoch e's permutation keys off (seed, e), not a mutating rng, so
+        # the stream is reproducible from the draw count alone.
         out: list[int] = []
         while len(out) < self.q:
             if not self._epoch:
-                self._epoch = self._rng.permutation(
-                    self.n_clusters).tolist()[::-1]
+                self._epoch = _stream_rng(
+                    self._entropy, _EPOCH_TAG, self._epoch_no).permutation(
+                        self.n_clusters).tolist()[::-1]
+                self._epoch_no += 1
             c = self._epoch.pop()
             if c in out:
                 self._epoch.insert(0, c)
@@ -161,8 +201,22 @@ class ClusterSampler:
                 out.append(c)
         return np.asarray(sorted(out))
 
-    def sample(self) -> SampledBatch:
-        chosen = self._draw_clusters()
+    def draw(self) -> DrawTicket:
+        """Consume the sequential epoch stream (thread-safe, cheap — a few
+        list pops) and pin batch ``index``'s cluster set.  The pipeline
+        calls this under its dispatch lock in index order; the heavy
+        :meth:`build` then runs on any worker thread."""
+        with self._lock:
+            idx = self._n_drawn
+            self._n_drawn += 1
+            chosen = self._draw_clusters()
+        return DrawTicket(idx, chosen)
+
+    def build(self, ticket: DrawTicket) -> SampledBatch:
+        """Materialize the ticket's batch: pure given the ticket (per-batch
+        randomness streams off (seed, ticket.index)), so it is thread-safe
+        and order-independent."""
+        chosen = ticket.chosen
         B, nb = self.block, self.node_budget
         nodes = np.full(nb, -1, np.int64)
         node_mask = np.zeros(nb, bool)
@@ -179,7 +233,9 @@ class ClusterSampler:
         meta = dict(clusters=chosen.tolist())
         s, d, m = _pack_edges(ls[keep].astype(np.int32),
                               lr[keep].astype(np.int32),
-                              self.edge_budget, meta, rng=self._rng)
+                              self.edge_budget, meta,
+                              rng=_stream_rng(self._entropy, _BATCH_TAG,
+                                              ticket.index))
         feats, labels = _gather_node_arrays(self.graph,
                                             nodes.astype(np.int64),
                                             node_mask)
@@ -187,6 +243,9 @@ class ClusterSampler:
             n=nb, nodes=nodes.astype(np.int32), node_mask=node_mask,
             senders=s, receivers=d, edge_mask=m, features=feats,
             labels=labels, target_mask=node_mask.copy(), meta=meta)
+
+    def sample(self) -> SampledBatch:
+        return self.build(self.draw())
 
 
 class NeighborSampler:
@@ -221,8 +280,12 @@ class NeighborSampler:
         # community order used to lay sampled nodes out in blocks
         self.perm = REORDERERS[resolve_method(method)](
             graph.n, graph.senders, graph.receivers, block)
-        self._rng = np.random.default_rng(seed)
+        self.seed = int(seed)
+        self._entropy = self.seed & ((1 << 63) - 1)
+        self._lock = threading.Lock()
         self._epoch: list[int] = []
+        self._epoch_no = 0
+        self._n_drawn = 0
 
     def _draw_seeds(self) -> np.ndarray:
         # same epoch-boundary defer-dedup as ClusterSampler._draw_clusters:
@@ -231,8 +294,10 @@ class NeighborSampler:
         seen: set[int] = set()
         while len(out) < self.batch_nodes:
             if not self._epoch:
-                self._epoch = self._rng.permutation(
-                    self.graph.n).tolist()[::-1]
+                self._epoch = _stream_rng(
+                    self._entropy, _EPOCH_TAG, self._epoch_no).permutation(
+                        self.graph.n).tolist()[::-1]
+                self._epoch_no += 1
             v = self._epoch.pop()
             if v in seen:
                 self._epoch.insert(0, v)
@@ -241,16 +306,31 @@ class NeighborSampler:
                 out.append(v)
         return np.asarray(out, np.int64)
 
-    def _sample_neighbors(self, v: int, fanout: int) -> np.ndarray:
+    def _sample_neighbors(self, v: int, fanout: int,
+                          rng: np.random.Generator) -> np.ndarray:
         lo, hi = self._indptr[v], self._indptr[v + 1]
         deg = hi - lo
         if deg <= fanout:
             return self._srt_src[lo:hi]
-        pick = self._rng.choice(deg, size=fanout, replace=False)
+        pick = rng.choice(deg, size=fanout, replace=False)
         return self._srt_src[lo + np.sort(pick)]
 
-    def sample(self) -> SampledBatch:
-        seeds = self._draw_seeds()
+    def draw(self) -> DrawTicket:
+        """Consume the sequential seed-epoch stream (thread-safe, cheap);
+        the fanout expansion happens in :meth:`build` off the ticket's
+        per-batch rng stream."""
+        with self._lock:
+            idx = self._n_drawn
+            self._n_drawn += 1
+            seeds = self._draw_seeds()
+        return DrawTicket(idx, seeds)
+
+    def build(self, ticket: DrawTicket) -> SampledBatch:
+        """Fanout expansion + padding for one ticket: thread-safe (reads
+        only the immutable CSR/ordering arrays; randomness streams off
+        (seed, ticket.index))."""
+        rng = _stream_rng(self._entropy, _BATCH_TAG, ticket.index)
+        seeds = ticket.chosen
         in_batch = set(seeds.tolist())
         frontier = seeds
         edges_s: list[np.ndarray] = []
@@ -258,7 +338,7 @@ class NeighborSampler:
         for f in self.fanouts:
             nxt: list[int] = []
             for v in frontier:
-                nbr = self._sample_neighbors(int(v), f)
+                nbr = self._sample_neighbors(int(v), f, rng)
                 if len(nbr) == 0:
                     continue
                 edges_s.append(nbr)
@@ -286,7 +366,7 @@ class NeighborSampler:
                        else np.zeros(0, np.int64)]
         meta = dict(seeds=len(seeds), sampled_nodes=len(batch_nodes))
         s, d, m = _pack_edges(src.astype(np.int32), dst.astype(np.int32),
-                              self.edge_budget, meta, rng=self._rng)
+                              self.edge_budget, meta, rng=rng)
         feats, labels = _gather_node_arrays(self.graph, nodes, node_mask)
         target = np.zeros(nb, bool)
         target[local_of[seeds]] = True
@@ -294,3 +374,6 @@ class NeighborSampler:
             n=nb, nodes=nodes.astype(np.int32), node_mask=node_mask,
             senders=s, receivers=d, edge_mask=m, features=feats,
             labels=labels, target_mask=target, meta=meta)
+
+    def sample(self) -> SampledBatch:
+        return self.build(self.draw())

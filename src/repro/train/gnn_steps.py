@@ -15,6 +15,7 @@ masked cross-entropy — here masked to the batch's target nodes) but over
 """
 from __future__ import annotations
 
+import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -31,6 +32,7 @@ from repro.sampling.plan_cache import (MB_KERNELS, PlanCache, fix_shapes,
                                        plan_payload_keys)
 from repro.sampling.sampler import (ClusterSampler, NeighborSampler,
                                     SampledBatch)
+from repro.train.pipeline import BatchPipeline
 
 
 def make_sampler(graph: graph_mod.Graph, cfg: gnn.GNNConfig):
@@ -145,6 +147,12 @@ class MinibatchResult:
     plan_cache: Any = None
     skeleton_hits: int = 0       # batches whose cluster tuple reused a
     skeleton_misses: int = 0     # cached DecomposeSkeleton (ClusterSampler)
+    iter_seconds: float = 0.0    # median wall time of one full training
+    #                              iteration (dequeue/prepare + step); the
+    #                              overlap metric: async ~= max(compute,
+    #                              prepare), sync ~= their sum
+    pipeline: dict | None = None  # BatchPipeline.stats + efficiency_pct /
+    #                               loop_seconds (None on the sync path)
 
     def hit_rate(self, warmup: int = 0) -> float:
         h = self.hit_history[warmup:]
@@ -159,11 +167,17 @@ class SkeletonCache:
     fully determined by it (induced edges + features) *unless* the edge
     budget truncated a random subset — such batches are never cached.
     The adapted bell slack is part of the key: a slack step changes the
-    capped-bell K baked into the skeleton's tier stats."""
+    capped-bell K baked into the skeleton's tier stats.
+
+    Thread-safe: get/put hold a lock so pipeline workers share the memo
+    (two workers racing one tuple at worst both build — counted as two
+    misses — and the later put wins; entries are deterministic per key,
+    so which one lands is immaterial)."""
 
     def __init__(self, max_entries: int = 64):
         self.max_entries = max_entries
         self._entries: OrderedDict[tuple, tuple] = OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
@@ -175,17 +189,33 @@ class SkeletonCache:
         return (tuple(clusters), bell_slack)
 
     def get(self, key: tuple):
-        hit = self._entries.get(key)
-        if hit is not None:
-            self.hits += 1
-            self._entries.move_to_end(key)
-        return hit
+        with self._lock:
+            hit = self._entries.get(key)
+            if hit is not None:
+                self.hits += 1
+                self._entries.move_to_end(key)
+            return hit
 
     def put(self, key: tuple, value: tuple) -> None:
-        self.misses += 1
-        self._entries[key] = value
-        while len(self._entries) > self.max_entries:
-            self._entries.popitem(last=False)
+        with self._lock:
+            self.misses += 1
+            self._entries[key] = value
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+
+
+@dataclass
+class _Prepared:
+    """One fully host-prepared batch: what crosses the producer/consumer
+    boundary.  ``args`` is the jitted step's argument tail
+    ``(dec, x, labels, target_mask, inv_deg)`` — staged on device by the
+    pipeline workers, host numpy on the sync path (jit transfers it)."""
+    batch: SampledBatch
+    plan: KernelPlan
+    args: tuple
+    hit: bool
+    sample_s: float
+    prepare_s: float
 
 
 def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
@@ -202,7 +232,17 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     probing cannot amortize over a stream of fresh subgraphs, but
     ``cfg.probe_every`` re-adds feedback amortized over the cache's
     lifetime: every Nth miss times the top-2 cost-model candidates and
-    pins the winner in the cached entry."""
+    pins the winner in the cached entry.
+
+    ``cfg.prefetch_depth > 0`` switches the loop to the async pipeline
+    (train/pipeline.py): ``cfg.pipeline_workers`` background threads draw
+    batches, run the skeleton/plan/pad prepare, stage device transfers,
+    and pre-compile any novel payload shape up to ``prefetch_depth``
+    batches ahead; this loop becomes a pure consumer dequeuing ready
+    batches in order, so one iteration pays max(compute, prepare) instead
+    of their sum.  The batch stream, committed plans, and loss curve match
+    the sync path under the same seed (samplers draw from per-index
+    deterministic seed streams; PlanCache resolution is atomic)."""
     if cfg.model not in ("gcn", "gin", "sage"):
         raise ValueError(f"mini-batch training supports gcn/gin/sage, "
                          f"not {cfg.model!r}")
@@ -223,7 +263,9 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
                                     epilogues=epilogues,
                                     probe_k_max=cfg.probe_k_max,
                                     probe_budget_s=cfg.probe_budget_s,
-                                    adapt_budget_k=cfg.adapt_budget_k)
+                                    adapt_budget_k=cfg.adapt_budget_k,
+                                    max_slack_changes=(
+                                        cfg.max_ladder_recompiles))
     skel_cache = (SkeletonCache(cfg.skeleton_cache_entries)
                   if cfg.skeleton_cache_entries > 0 else None)
 
@@ -283,28 +325,71 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
 
     counters = dict(traces=0)
     step_fns: dict[tuple, Any] = {}
-    losses, hit_history = [], []
-    t_sample, t_prepare, t_step = [], [], []
-    dropped = 0
-    for i in range(steps):
-        t0 = time.perf_counter()
-        batch = sampler.sample()
-        t_sample.append(time.perf_counter() - t0)
-        dropped += batch.meta.get("dropped_edges", 0)
+    compile_lock = threading.Lock()
+    compiled_shapes: set = set()
+    # zero-valued (params, opt) twins: pipeline workers call the real step
+    # function on them to populate the jit cache for a novel payload shape
+    # (first batch of a new plan, or a bell-slack ladder step) so the
+    # consumer's dispatch is always a cache hit instead of a compile stall
+    warm_params = jax.tree.map(jnp.zeros_like, params)
+    warm_opt = jax.tree.map(jnp.zeros_like, opt)
 
+    def get_step_fn(plan):
+        fn = step_fns.get(plan.layers)        # lock-free steady state
+        if fn is None:
+            with compile_lock:
+                fn = step_fns.get(plan.layers)
+                if fn is None:
+                    fn = step_fns[plan.layers] = make_sampled_step(
+                        cfg, plan, counters)
+        return fn
+
+    def warm_compile(fn, plan, args):
+        """Compile (plan, payload shapes) off the consumer path.  Compiles
+        serialize behind the lock (they are rare: one per plan plus one
+        per adaptive-K ladder step, the latter capped by
+        cfg.max_ladder_recompiles through the PlanCache)."""
+        leaves, treedef = jax.tree_util.tree_flatten(args)
+        skey = (plan.layers, treedef,
+                tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+        with compile_lock:
+            if skey in compiled_shapes:
+                return
+            fn(warm_params, warm_opt, *args)     # result discarded
+            compiled_shapes.add(skey)
+
+    def produce(batch, sample_s, stage: bool) -> _Prepared:
         t0 = time.perf_counter()
         plan, fixed, inv_deg, hit = plan_and_fix(batch)
-        t_prepare.append(time.perf_counter() - t0)
-        hit_history.append(hit)
+        args = (fixed, batch.features, batch.labels, batch.target_mask,
+                inv_deg)
+        if stage:
+            # device staging + pre-compile happen in the worker: the
+            # consumer's dispatch never pays a host->device copy or a jit
+            # compile
+            args = jax.device_put(args)
+            warm_compile(get_step_fn(plan), plan, args)
+        return _Prepared(batch, plan, args, hit,
+                         sample_s, time.perf_counter() - t0)
 
-        pkey = plan.layers
-        if pkey not in step_fns:
-            step_fns[pkey] = make_sampled_step(cfg, plan, counters)
+    def build_and_produce(idx, ticket) -> _Prepared:
         t0 = time.perf_counter()
-        params, opt, loss = step_fns[pkey](
-            params, opt, fixed, jnp.asarray(batch.features),
-            jnp.asarray(batch.labels), jnp.asarray(batch.target_mask),
-            jnp.asarray(inv_deg))
+        batch = sampler.build(ticket)
+        return produce(batch, time.perf_counter() - t0, stage=True)
+
+    losses, hit_history = [], []
+    t_sample, t_prepare, t_step, t_iter = [], [], [], []
+    dropped = 0
+
+    def consume(i, item: _Prepared):
+        nonlocal params, opt, dropped
+        dropped += item.batch.meta.get("dropped_edges", 0)
+        hit_history.append(item.hit)
+        t_sample.append(item.sample_s)
+        t_prepare.append(item.prepare_s)
+        fn = get_step_fn(item.plan)
+        t0 = time.perf_counter()
+        params, opt, loss = fn(params, opt, *item.args)
         loss.block_until_ready()
         t_step.append(time.perf_counter() - t0)
         losses.append(float(loss))
@@ -316,11 +401,52 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
                   f"spill={cs['spill_frac']:.3f}]"
                   if "bell_slack" in cs else "")
             print(f"batch {i:4d} loss {float(loss):.4f} "
-                  f"cache_hit={hit} plan={plan.layers[0]} "
+                  f"cache_hit={item.hit} plan={item.plan.layers[0]} "
                   f"cache[h={cs['hits']} nh={cs['near_hits']} "
                   f"m={cs['misses']} ev={cs['evictions']} "
                   f"pr={cs['probes']} rate={cs['hit_rate']:.2f}]"
                   f"{sk}{bk}")
+
+    pipe_stats = None
+    t_loop0 = time.perf_counter()
+    if cfg.prefetch_depth > 0:
+        pipe = BatchPipeline(sampler.draw, build_and_produce, n_items=steps,
+                             prefetch_depth=cfg.prefetch_depth,
+                             workers=cfg.pipeline_workers,
+                             name=f"{cfg.sampler}-{cfg.model}")
+        try:
+            for i in range(steps):
+                it0 = time.perf_counter()
+                consume(i, pipe.get())
+                t_iter.append(time.perf_counter() - it0)
+        finally:
+            pipe_stats = pipe.stats
+            pipe.close()
+    else:
+        for i in range(steps):
+            it0 = time.perf_counter()
+            t0 = time.perf_counter()
+            batch = sampler.sample()
+            consume(i, produce(batch, time.perf_counter() - t0, stage=False))
+            t_iter.append(time.perf_counter() - it0)
+    loop_s = time.perf_counter() - t_loop0
+    if pipe_stats is not None:
+        # device-busy share of the steady-state consumer loop: 100% = the
+        # device never waited on the host (prepare fully hidden).  The
+        # first iteration is excluded — it pays the initial jit compile
+        # (in a worker, but the consumer has nothing to overlap it with)
+        busy = float(np.sum(t_step[1:]))
+        steady = float(np.sum(t_iter[1:]))
+        pipe_stats.update(
+            loop_seconds=loop_s,
+            efficiency_pct=100.0 * busy / max(steady, 1e-12))
+        if verbose:
+            print(f"pipeline: depth={pipe_stats['depth']} "
+                  f"workers={pipe_stats['workers']} "
+                  f"ready_mean={pipe_stats['ready_mean']:.1f} "
+                  f"wait_full={pipe_stats['wait_full_s']*1e3:.1f}ms "
+                  f"wait_empty={pipe_stats['wait_empty_s']*1e3:.1f}ms "
+                  f"efficiency={pipe_stats['efficiency_pct']:.0f}%")
 
     # snapshot before the eval loop below adds its own (mostly-hit)
     # lookups: the reported rate is the *training* steady state
@@ -348,6 +474,8 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         n_traces=counters["traces"],
         step_seconds=med(t_step, skip=min(len(t_step) - 1, 1)),
         sample_seconds=med(t_sample), prepare_seconds=med(t_prepare),
+        iter_seconds=med(t_iter, skip=min(len(t_iter) - 1, 1)),
+        pipeline=pipe_stats,
         dropped_edges=dropped, plan_cache=cache,
         skeleton_hits=skel_cache.hits if skel_cache else 0,
         skeleton_misses=skel_cache.misses if skel_cache else 0)

@@ -1,0 +1,217 @@
+"""Bounded-queue producer/consumer pipeline for the mini-batch hot path.
+
+The ROADMAP's async sampler/trainer item: per-batch host prepare (sample ->
+``decompose_skeleton`` -> PlanCache resolve -> ``fix_shapes`` -> device
+staging) is ~1 ms and used to run *serially* with the device step, so one
+training iteration paid ``compute + prepare``.  :class:`BatchPipeline` runs
+the prepare on N background threads up to ``prefetch_depth`` batches ahead
+of the consumer, so a steady-state iteration pays ``max(compute, prepare)``
+instead.  The fixed-budget padded shapes built in the sampling layer are
+what make this safe: a consumer thread never retraces, so the only shared
+state is the (now lock-protected) PlanCache/SkeletonCache bookkeeping.
+
+Determinism contract: item ``i``'s *draw* (``draw_fn``) runs under one lock
+in strictly increasing index order — workers race only on the heavy,
+order-independent ``work_fn`` — and items are delivered to :meth:`get` in
+index order.  With samplers whose per-batch randomness is a pure function
+of (seed, index) (see ``sampling.sampler.DrawTicket``), the async batch
+stream is bit-identical to the sequential one.
+
+Backpressure is a semaphore with ``prefetch_depth`` permits: a worker takes
+a permit before drawing (blocking when ``depth`` batches are staged or in
+flight — the queue-full wait) and the consumer returns it on :meth:`get`
+(blocking when batch ``i`` isn't ready — the queue-empty wait).  Both wait
+totals are exported through :attr:`stats`, and a warn-once fires when the
+ready queue averages below half of ``prefetch_depth`` (the producers can't
+keep up; raise ``workers`` or accept prepare-bound steps).
+
+Worker exceptions are captured per item and re-raised in the consumer at
+that item's :meth:`get` (the pipeline closes itself first).  :meth:`close`
+is idempotent, joins every worker, and is safe mid-stream — used directly
+or via the context manager.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import warnings
+from typing import Any, Callable
+
+__all__ = ["BatchPipeline", "PipelineError"]
+
+
+class PipelineError(RuntimeError):
+    """Pipeline used after close, or its workers died without output."""
+
+
+class BatchPipeline:
+    """Run ``work_fn(index, draw_fn())`` for ``n_items`` items on background
+    threads, delivering results to :meth:`get` in index order, at most
+    ``prefetch_depth`` items ahead of the consumer.
+
+    ``draw_fn`` consumes sequential sampler state and must be cheap: it runs
+    under the pipeline's dispatch lock so draws happen in index order no
+    matter which worker wins the race.  ``work_fn`` is the heavy stage
+    (build + decompose + select + pad + device transfer) and runs
+    concurrently on up to ``workers`` threads.
+    """
+
+    def __init__(self, draw_fn: Callable[[], Any],
+                 work_fn: Callable[[int, Any], Any], n_items: int,
+                 prefetch_depth: int = 4, workers: int = 2,
+                 name: str = "sampler", warn_after: int = 16):
+        self.n_items = int(n_items)
+        self.depth = max(int(prefetch_depth), 1)
+        # more workers than permits can never run concurrently
+        self.workers = max(1, min(int(workers), self.depth))
+        self.name = name
+        self.warn_after = int(warn_after)
+        self._draw_fn = draw_fn
+        self._work_fn = work_fn
+        self._slots = threading.Semaphore(self.depth)
+        self._draw_lock = threading.Lock()
+        self._stat_lock = threading.Lock()
+        self._cond = threading.Condition()
+        self._results: dict[int, tuple[bool, Any]] = {}   # idx -> (ok, item)
+        self._next_draw = 0
+        self._next_out = 0
+        self._stop = threading.Event()
+        self._closed = False
+        self.wait_full_s = 0.0     # producers blocked: every slot staged
+        self.wait_empty_s = 0.0    # consumer blocked: next item not ready
+        self._ready_hist: list[int] = []
+        self.starved = False       # warn-once latch (queue below half-full)
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"pipeline-{name}-{i}")
+            for i in range(self.workers)]
+        self._live = self.workers
+        for t in self._threads:
+            t.start()
+
+    # -- producer side ------------------------------------------------------
+
+    def _worker(self) -> None:
+        try:
+            while not self._stop.is_set():
+                t0 = time.perf_counter()
+                acquired = self._slots.acquire(timeout=0.05)
+                waited = time.perf_counter() - t0
+                if self._stop.is_set():
+                    if acquired:
+                        self._slots.release()
+                    return
+                if not acquired:
+                    if self._next_draw >= self.n_items:
+                        return             # drained: nothing left to draw
+                    with self._stat_lock:  # genuine full-queue backpressure
+                        self.wait_full_s += waited
+                    continue
+                with self._stat_lock:
+                    self.wait_full_s += waited
+                with self._draw_lock:
+                    if self._next_draw >= self.n_items:
+                        self._slots.release()
+                        return
+                    idx = self._next_draw
+                    self._next_draw += 1
+                    try:
+                        # in-order under the lock: batch idx's sequential
+                        # draw is identical to the single-threaded path
+                        ticket = self._draw_fn()
+                    except BaseException as e:   # noqa: BLE001 — propagated
+                        self._post(idx, False, e)
+                        continue
+                try:
+                    item = self._work_fn(idx, ticket)
+                except BaseException as e:       # noqa: BLE001 — propagated
+                    self._post(idx, False, e)
+                else:
+                    self._post(idx, True, item)
+        finally:
+            with self._cond:
+                self._live -= 1
+                self._cond.notify_all()
+
+    def _post(self, idx: int, ok: bool, payload: Any) -> None:
+        with self._cond:
+            self._results[idx] = (ok, payload)
+            self._cond.notify_all()
+
+    # -- consumer side ------------------------------------------------------
+
+    def get(self) -> Any:
+        """Next item, in index order; blocks until its worker finishes.
+        Re-raises the worker's exception (closing the pipeline) if that
+        item failed."""
+        if self._closed:
+            raise PipelineError(f"pipeline {self.name!r} is closed")
+        if self._next_out >= self.n_items:
+            raise PipelineError(
+                f"pipeline {self.name!r} already delivered all "
+                f"{self.n_items} items")
+        with self._cond:
+            self._ready_hist.append(len(self._results))
+            t0 = time.perf_counter()
+            while self._next_out not in self._results:
+                if self._live == 0:
+                    raise PipelineError(
+                        f"all pipeline {self.name!r} workers exited before "
+                        f"item {self._next_out} was produced")
+                self._cond.wait(0.1)
+            self.wait_empty_s += time.perf_counter() - t0
+            ok, payload = self._results.pop(self._next_out)
+            self._next_out += 1
+        self._slots.release()
+        self._maybe_warn()
+        if not ok:
+            self.close()
+            raise payload
+        return payload
+
+    def _maybe_warn(self) -> None:
+        if self.starved or len(self._ready_hist) < self.warn_after:
+            return
+        mean_ready = sum(self._ready_hist) / len(self._ready_hist)
+        if mean_ready < self.depth / 2:
+            self.starved = True
+            warnings.warn(
+                f"pipeline {self.name!r}: prefetch queue averaged "
+                f"{mean_ready:.1f}/{self.depth} ready batches — "
+                f"{self.workers} worker(s) can't keep it half-full; raise "
+                f"pipeline_workers (or prefetch_depth) or accept "
+                f"prepare-bound steps", RuntimeWarning, stacklevel=3)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        """Idempotent shutdown: stop workers, join them, drop staged items.
+        Safe mid-stream; after close, :meth:`get` raises."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        for _ in self._threads:     # unblock producers parked on the queue
+            self._slots.release()
+        for t in self._threads:
+            t.join(timeout=10.0)
+        with self._cond:
+            self._results.clear()
+            self._cond.notify_all()
+
+    def __enter__(self) -> "BatchPipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def stats(self) -> dict:
+        """Backpressure counters for MinibatchResult / benches / logs."""
+        ready = self._ready_hist
+        return dict(depth=self.depth, workers=self.workers,
+                    delivered=self._next_out,
+                    wait_full_s=self.wait_full_s,
+                    wait_empty_s=self.wait_empty_s,
+                    ready_mean=(sum(ready) / len(ready)) if ready else 0.0,
+                    starved=self.starved)

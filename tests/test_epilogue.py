@@ -402,8 +402,13 @@ def test_budget_k_adapts_from_observed_spill():
     assert cache.signature(dec2) != sig0
 
     # near-hit aliasing must not bridge a slack step: a statistically
-    # identical batch after the step misses (forcing re-selection under
-    # the new K) instead of reusing the plan priced for the old cap
+    # identical batch decomposed under the NEW slack misses (forcing
+    # re-selection under the new K) instead of reusing the plan priced
+    # for the old cap.  The signature reads the slack baked into the
+    # decomposition's own tier stats — not the cache's current slack —
+    # so a batch built BEFORE the step (old-slack payload shapes, e.g.
+    # one in flight on a pipeline worker) still hits the entry that
+    # matches its shapes rather than shearing to the new key
     cache2 = PlanCache([(4, 8)], adapt_budget_k=True, bell_slack=1.0,
                        spill_min_obs=2)
     dec_old = decompose.decompose(
@@ -414,7 +419,13 @@ def test_budget_k_adapts_from_observed_spill():
     assert not hit
     assert cache2.lookup(dec_old) is not None    # resident at old slack
     cache2._bell_slack = 2.0                     # a slack step
-    assert cache2.lookup(dec_old) is None        # no cross-slack aliasing
+    dec_new = decompose.decompose(
+        g, comm_size=B, reorder=False, inter_buckets=1,
+        keep_empty_buckets=True, edge_budget=budget,
+        bell_slack=cache2.bell_slack, kernels=MB_KERNELS)
+    assert cache2.lookup(dec_new) is None        # no cross-slack aliasing
+    # in-flight old-slack batch: keyed by its own baked slack, still hits
+    assert cache2.lookup(dec_old) is not None
 
 
 def test_adaptive_probe_topk_widens_within_margin():

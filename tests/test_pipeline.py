@@ -1,0 +1,349 @@
+"""Async sampler->trainer pipeline (train/pipeline.py): determinism of the
+async batch stream vs the sequential one, loss-curve/plan equivalence of
+async vs sync training under one seed, the no-retrace contract under
+concurrent prepare, worker-exception propagation, clean shutdown, the
+backpressure counters + starvation warn-once, thread-safe PlanCache
+resolution, and the adaptive-K recompile cap."""
+import dataclasses
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import gnn, selector as sel_mod
+from repro.graphs import graph as G
+from repro.sampling import ClusterSampler, NeighborSampler, PlanCache
+from repro.train import gnn_steps
+from repro.train.pipeline import BatchPipeline, PipelineError
+
+
+def small_graph(n=96, e=700, nf=5, nc=3, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    key = src.astype(np.int64) * n + dst
+    _, keep = np.unique(key, return_index=True)
+    src, dst = src[keep], dst[keep]
+    feats = rng.standard_normal((n, nf)).astype(np.float32)
+    labels = rng.integers(0, nc, n).astype(np.int32)
+    return G.Graph(n, src, dst, feats, labels, nc)
+
+
+def batch_equal(a, b):
+    return (np.array_equal(a.nodes, b.nodes)
+            and np.array_equal(a.node_mask, b.node_mask)
+            and np.array_equal(a.senders, b.senders)
+            and np.array_equal(a.receivers, b.receivers)
+            and np.array_equal(a.edge_mask, b.edge_mask)
+            and np.array_equal(a.target_mask, b.target_mask)
+            and np.allclose(a.features, b.features))
+
+
+def pipeline_threads():
+    return [t for t in threading.enumerate() if t.name.startswith("pipeline-")]
+
+
+# -- BatchPipeline unit behavior ---------------------------------------------
+
+def test_items_delivered_in_index_order_despite_racing_workers():
+    # workers finish out of order (even items sleep); get() must still
+    # yield 0..n-1 in order, each the work of its own draw
+    def work(idx, ticket):
+        if idx % 2 == 0:
+            time.sleep(0.01)
+        return (idx, ticket * 10)
+
+    counter = iter(range(100))
+    with BatchPipeline(lambda: next(counter), work, n_items=12,
+                       prefetch_depth=4, workers=4) as pipe:
+        out = [pipe.get() for _ in range(12)]
+    assert out == [(i, i * 10) for i in range(12)]
+    assert pipe.stats["delivered"] == 12
+
+
+def test_worker_exception_propagates_and_closes():
+    def work(idx, ticket):
+        if idx == 3:
+            raise ValueError("boom at 3")
+        return idx
+
+    counter = iter(range(100))
+    pipe = BatchPipeline(lambda: next(counter), work, n_items=10,
+                         prefetch_depth=2, workers=2)
+    got = [pipe.get() for _ in range(3)]
+    assert got == [0, 1, 2]
+    with pytest.raises(ValueError, match="boom at 3"):
+        pipe.get()
+    # the failed get closed the pipeline: workers joined, further gets raise
+    assert not pipeline_threads()
+    with pytest.raises(PipelineError):
+        pipe.get()
+
+
+def test_draw_exception_propagates_at_its_index():
+    calls = dict(n=0)
+
+    def draw():
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("bad draw")
+        return calls["n"]
+
+    pipe = BatchPipeline(draw, lambda i, t: t, n_items=6,
+                         prefetch_depth=2, workers=2)
+    assert pipe.get() == 1
+    with pytest.raises(RuntimeError, match="bad draw"):
+        pipe.get()
+    assert not pipeline_threads()
+
+
+def test_clean_shutdown_midstream_and_after_drain():
+    counter = iter(range(1000))
+    pipe = BatchPipeline(lambda: next(counter),
+                         lambda i, t: time.sleep(0.002) or t, n_items=500,
+                         prefetch_depth=4, workers=3)
+    assert pipe.get() == 0
+    pipe.close()                       # mid-stream, items still staged
+    pipe.close()                       # idempotent
+    assert not pipeline_threads()
+    with pytest.raises(PipelineError):
+        pipe.get()
+
+    # full drain also leaves no threads and refuses extra gets
+    counter = iter(range(100))
+    with BatchPipeline(lambda: next(counter), lambda i, t: t,
+                       n_items=5, prefetch_depth=2, workers=2) as pipe:
+        assert [pipe.get() for _ in range(5)] == [0, 1, 2, 3, 4]
+        with pytest.raises(PipelineError, match="already delivered"):
+            pipe.get()
+    assert not pipeline_threads()
+
+
+def test_backpressure_counters_and_depth_bound():
+    # slow consumer: producers fill every slot then block -> wait_full
+    # accrues, and no more than depth items are ever staged ahead
+    max_ahead = dict(v=0)
+    delivered = dict(v=0)
+
+    def work(idx, ticket):
+        max_ahead["v"] = max(max_ahead["v"], idx - delivered["v"])
+        return idx
+
+    counter = iter(range(100))
+    depth = 3
+    with BatchPipeline(lambda: next(counter), work, n_items=20,
+                       prefetch_depth=depth, workers=2) as pipe:
+        for _ in range(20):
+            time.sleep(0.005)
+            pipe.get()
+            delivered["v"] += 1
+    s = pipe.stats
+    assert s["wait_full_s"] > 0.0
+    # depth permits + the one the consumer is holding
+    assert max_ahead["v"] <= depth + 1
+    assert s["ready_mean"] > 0.0
+
+    # slow producer: consumer blocks -> wait_empty accrues
+    counter = iter(range(100))
+    with BatchPipeline(lambda: next(counter),
+                       lambda i, t: time.sleep(0.005) or t, n_items=8,
+                       prefetch_depth=4, workers=1) as pipe:
+        for _ in range(8):
+            pipe.get()
+    assert pipe.stats["wait_empty_s"] > 0.0
+
+
+def test_starvation_warns_once():
+    counter = iter(range(1000))
+    with BatchPipeline(lambda: next(counter),
+                       lambda i, t: time.sleep(0.003) or t, n_items=40,
+                       prefetch_depth=4, workers=1, warn_after=8) as pipe:
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            for _ in range(40):
+                pipe.get()
+    starve = [w for w in rec if "prefetch queue averaged" in str(w.message)]
+    assert len(starve) == 1            # warn-once latch
+    assert pipe.stats["starved"] is True
+
+
+# -- async batch stream == sequential batch stream ---------------------------
+
+@pytest.mark.parametrize("make", [
+    lambda g, s: ClusterSampler(g, block=8, clusters_per_batch=4,
+                                method="bfs", seed=s),
+    lambda g, s: NeighborSampler(g, batch_nodes=16, fanouts=(4, 2),
+                                 method="bfs", block=8, seed=s),
+])
+def test_async_batch_stream_matches_sequential(make):
+    g = small_graph()
+    seq = [make(g, 7).sample() for _ in range(1)]  # warm type caches
+    ref_sampler = make(g, 7)
+    n = 14                                         # crosses an epoch refill
+    ref = [ref_sampler.sample() for _ in range(n)]
+
+    pipe_sampler = make(g, 7)
+
+    def work(idx, ticket):
+        if idx % 3 == 0:               # force out-of-order builds
+            time.sleep(0.004)
+        return pipe_sampler.build(ticket)
+
+    with BatchPipeline(pipe_sampler.draw, work, n_items=n,
+                       prefetch_depth=4, workers=3) as pipe:
+        got = [pipe.get() for _ in range(n)]
+    for a, b in zip(ref, got):
+        assert batch_equal(a, b)
+    # the sampler continues identically after the pipeline closes (the
+    # eval loop depends on this)
+    assert batch_equal(ref_sampler.sample(), pipe_sampler.sample())
+
+
+def test_ticket_build_is_pure_and_order_independent():
+    g = small_graph()
+    s = ClusterSampler(g, block=8, clusters_per_batch=4, method="bfs", seed=3)
+    tickets = [s.draw() for _ in range(6)]
+    fwd = [s.build(t) for t in tickets]
+    rev = [s.build(t) for t in reversed(tickets)]
+    for a, b in zip(fwd, reversed(rev)):
+        assert batch_equal(a, b)
+
+
+# -- async training == sync training -----------------------------------------
+
+def test_async_training_matches_sync_and_never_retraces():
+    g = small_graph(n=160, e=1400)
+    cfg = gnn.GNNConfig(model="gcn", n_layers=2, hidden=8, comm_size=8,
+                        sampler="cluster", clusters_per_batch=4,
+                        inter_buckets=2, reorder="bfs",
+                        selector="cost_model", seed=11)
+    sync = gnn_steps.train_minibatch(g, cfg, steps=16, eval_batches=2)
+    acfg = dataclasses.replace(cfg, prefetch_depth=4, pipeline_workers=2)
+    asyn = gnn_steps.train_minibatch(g, acfg, steps=16, eval_batches=2)
+
+    # identical committed plans and cache decisions (tolerance-free)
+    assert asyn.plans == sync.plans
+    assert asyn.hit_history == sync.hit_history
+    assert asyn.cache["hit_rate"] == sync.cache["hit_rate"]
+    # identical loss curve (fp tolerance) and eval accuracy
+    np.testing.assert_allclose(asyn.losses, sync.losses, atol=1e-4)
+    assert asyn.accuracy == sync.accuracy
+    # one trace per step function, whether compiled by a worker (async
+    # warm-compile) or by the consumer (sync)
+    assert sync.n_traces == len(sync.plans)
+    assert asyn.n_traces == len(asyn.plans)
+    # stats surfaced only on the async path
+    assert sync.pipeline is None
+    assert asyn.pipeline["delivered"] == 16
+    assert asyn.pipeline["depth"] == 4
+    assert asyn.pipeline["efficiency_pct"] > 0.0
+    # clean shutdown: no pipeline worker threads outlive the call
+    assert not pipeline_threads()
+
+
+def test_async_training_worker_failure_shuts_down_cleanly(monkeypatch):
+    g = small_graph()
+    cfg = gnn.GNNConfig(model="gin", n_layers=2, hidden=8, comm_size=8,
+                        sampler="cluster", clusters_per_batch=4,
+                        inter_buckets=2, reorder="bfs", selector="fixed",
+                        fixed_kernels=("block_diag", "bell"),
+                        prefetch_depth=2, pipeline_workers=2, seed=5)
+    calls = dict(n=0)
+    real = gnn_steps.prepare_skeleton
+
+    def flaky(batch, cfg_, bell_slack=None):
+        calls["n"] += 1
+        if calls["n"] == 4:
+            raise RuntimeError("prepare blew up")
+        return real(batch, cfg_, bell_slack=bell_slack)
+
+    monkeypatch.setattr(gnn_steps, "prepare_skeleton", flaky)
+    with pytest.raises(RuntimeError, match="prepare blew up"):
+        gnn_steps.train_minibatch(g, cfg, steps=12, eval_batches=0)
+    assert not pipeline_threads()
+
+
+# -- PlanCache thread-safety + adaptive-K recompile cap -----------------------
+
+def test_plan_cache_concurrent_resolution_single_miss_per_signature():
+    g = small_graph(n=160, e=1400)
+    cfg = gnn.GNNConfig(model="gcn", n_layers=2, hidden=8, comm_size=8,
+                        sampler="cluster", clusters_per_batch=4,
+                        inter_buckets=2, reorder="bfs", seed=2)
+    sampler = gnn_steps.make_sampler(g, cfg)
+    pad = sampler.edge_budget + sampler.node_budget
+    pairs = gnn.agg_width_pairs(cfg, g.features.shape[-1], g.n_classes)
+    cache = PlanCache(pairs, hw=sel_mod.default_hw(), edge_budget=pad)
+    decs = []
+    for _ in range(6):
+        skel, _ = gnn_steps.prepare_skeleton(sampler.sample(), cfg)
+        decs.append(skel.materialize(("block_diag", "bell", "csr")))
+
+    n_threads, per_thread = 4, 12
+    errs = []
+
+    def hammer(t):
+        rng = np.random.default_rng(t)
+        try:
+            for _ in range(per_thread):
+                dec = decs[rng.integers(len(decs))]
+                plan = cache.lookup(dec)
+                if plan is None:
+                    plan, _ = cache.plan_for(dec)
+                assert plan is not None
+        except BaseException as e:      # noqa: BLE001 — surfaced below
+            errs.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    s = cache.stats
+    # every resolution is accounted for, and racing threads on one fresh
+    # signature paid exactly one miss: misses == distinct entries minted
+    assert s["hits"] + s["near_hits"] + s["misses"] >= n_threads * per_thread
+    assert s["misses"] == s["entries"] + s["evictions"]
+    unique_sigs = {cache.signature(d) for d in decs}
+    assert s["misses"] <= len(unique_sigs)
+
+
+def test_max_slack_changes_caps_ladder_steps():
+    pairs = [(None, 8)]
+
+    def spill_hard(cache, steps=5):
+        for _ in range(steps):
+            cache._spill_window.extend(
+                [(0.5, 0.9)] * cache.spill_min_obs)   # heavy spill: step up
+            cache._maybe_step_slack()
+
+    capped = PlanCache(pairs, adapt_budget_k=True, bell_slack=1.0,
+                       spill_min_obs=4, max_slack_changes=2)
+    spill_hard(capped)
+    assert capped.slack_changes == 2           # froze at the cap
+    held = capped.bell_slack
+    spill_hard(capped)
+    assert capped.slack_changes == 2 and capped.bell_slack == held
+    # and the window keeps draining so it cannot grow without bound
+    assert len(capped._spill_window) == 0
+
+    free = PlanCache(pairs, adapt_budget_k=True, bell_slack=1.0,
+                     spill_min_obs=4, max_slack_changes=None)
+    spill_hard(free)
+    assert free.slack_changes > 2              # unbounded default still walks
+    assert free.stats["slack_changes"] == free.slack_changes
+
+
+def test_config_threads_recompile_cap_into_cache():
+    g = small_graph()
+    cfg = gnn.GNNConfig(model="gcn", n_layers=1, hidden=8, comm_size=8,
+                        sampler="cluster", clusters_per_batch=4,
+                        inter_buckets=2, reorder="bfs",
+                        adapt_budget_k=True, max_ladder_recompiles=1, seed=4)
+    res = gnn_steps.train_minibatch(g, cfg, steps=4, eval_batches=0)
+    assert res.plan_cache.max_slack_changes == 1
+    assert res.cache["slack_changes"] <= 1
