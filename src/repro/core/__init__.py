@@ -103,18 +103,24 @@ a SINGLE-PASS skeleton prepare:
   structure (no retrace) yet stays debuggable
 
 With cfg.prefetch_depth > 0 the whole host-side column above runs on
-background threads (train.pipeline.BatchPipeline): cfg.pipeline_workers
-producers draw deterministic per-index sampler tickets (sampler.draw /
-sampler.build — batch i is a pure function of (seed, i), so the async
-stream is bit-identical to the sync one), run the skeleton prepare +
-PlanCache resolve + fix_shapes, stage device transfers, and pre-compile
-novel payload shapes up to prefetch_depth batches ahead behind a bounded
-semaphore; the training loop is a pure consumer dequeuing ready batches
-in index order, so one iteration pays max(compute, prepare) instead of
-their sum.  PlanCache/SkeletonCache are lock-protected for this (atomic
-plan_for: racing workers on one fresh signature pay exactly one miss),
-and backpressure counters (queue-full / queue-empty waits, mean ready
-depth, starvation warn-once) surface through MinibatchResult.pipeline.
+background threads (train.pipeline.BatchPipeline) in three stages:
+cfg.pipeline_workers producers draw deterministic per-index sampler
+tickets (sampler.draw / sampler.build — batch i is a pure function of
+(seed, i), so the async stream is bit-identical to the sync one) and
+race the heavy order-independent work (build + skeleton partition,
+then fix_shapes padding + device staging + AOT pre-compile of novel
+payload shapes), while every shared-cache decision in between —
+PlanCache lookup/selection, spill feedback, signature seeding — runs
+through an index-ordered resolve turnstile, up to prefetch_depth
+batches ahead behind a bounded semaphore; the training loop is a pure
+consumer dequeuing ready batches in index order, so one iteration pays
+max(compute, prepare) instead of their sum.  PlanCache/SkeletonCache
+are lock-protected (atomic plan_for: racing workers on one fresh
+signature pay exactly one miss), and the ordered resolve stage is what
+makes the cache counters, LRU/aliasing order, and hit history — not
+just the batch stream — bit-identical to sync; backpressure counters
+(queue-full / queue-empty waits, mean ready depth, starvation
+warn-once) surface through MinibatchResult.pipeline.
 
 MB_KERNELS membership rule: a kernel is admissible iff its payload has a
 fixed pytree shape *at the edge budget* — every array dim a function of

@@ -224,15 +224,21 @@ class PlanCache:
 
     Thread safety (the async pipeline's contract): every stateful entry
     point — ``lookup`` / ``plan_for`` / ``observe_bell`` / ``stats`` —
-    holds one re-entrant lock, so pipeline workers can resolve plans
-    concurrently.  ``plan_for`` is atomic (lookup + select + store under
-    the lock): two workers racing the same fresh signature cost exactly
-    one miss — the loser blocks, then hits — so the steady-state hit rate
-    is identical to single-threaded training.  Probes serialize behind
-    the same lock, one wall-clock measurement at a time, so a probe's
-    timing is never polluted by another probe's device work (with the
-    pipeline the consumer's step can still overlap a probe; probing
-    defaults off in pipeline mode — ``cfg.probe_every = 0``).
+    holds one re-entrant lock, so concurrent resolution is *safe*:
+    ``plan_for`` is atomic (lookup + select + store under the lock), and
+    two workers racing the same fresh signature cost exactly one miss —
+    the loser blocks, then hits.  Atomicity alone is not *deterministic*,
+    though: cross-signature ordering still matters, because a later batch
+    can hit (or near-hit) an entry an earlier batch minted, and the
+    near-hit anchor scan and LRU order are insertion-order dependent — so
+    the pipeline additionally serializes all lookup/plan_for/observe_bell
+    calls in batch-index order (``BatchPipeline``'s resolve turnstile),
+    which makes every counter, alias, and eviction bit-identical to
+    single-threaded training.  Probes serialize behind the same lock, one
+    wall-clock measurement at a time, so a probe's timing is never
+    polluted by another probe's device work (with the pipeline the
+    consumer's step can still overlap a probe; probing defaults off in
+    pipeline mode — ``cfg.probe_every = 0``).
     """
 
     def __init__(self, width_pairs, dtype=np.float32,

@@ -207,15 +207,38 @@ class SkeletonCache:
 @dataclass
 class _Prepared:
     """One fully host-prepared batch: what crosses the producer/consumer
-    boundary.  ``args`` is the jitted step's argument tail
+    boundary.  ``args`` is the step's argument tail
     ``(dec, x, labels, target_mask, inv_deg)`` — staged on device by the
-    pipeline workers, host numpy on the sync path (jit transfers it)."""
+    pipeline workers, host numpy on the sync path (jit transfers it).
+    ``step`` is the callable to dispatch: the shared jitted step on the
+    sync path, the AOT-compiled executable a worker prepared on the async
+    path (invoking the executable directly is what keeps the consumer from
+    ever tracing — the jit cache and the AOT cache are separate)."""
     batch: SampledBatch
     plan: KernelPlan
     args: tuple
     hit: bool
     sample_s: float
     prepare_s: float
+    step: Any
+
+
+@dataclass
+class _InFlight:
+    """Mutable carry between the pipeline's stages for one batch: built
+    racing (``skel``/speculative payloads), resolved in index order
+    (``plan``/``hit``/``sig`` — every shared-cache decision), finished
+    racing (payload padding + device staging -> :class:`_Prepared`)."""
+    batch: SampledBatch
+    skel: dec_mod.DecomposeSkeleton
+    inv_deg: np.ndarray
+    slack: float | None          # bell slack the skeleton was built with
+    sample_s: float
+    prepare_s: float
+    dec: dec_mod.Decomposed | None = None
+    plan: KernelPlan | None = None
+    sig: tuple | None = None
+    hit: bool = False
 
 
 def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
@@ -240,9 +263,16 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     and pre-compile any novel payload shape up to ``prefetch_depth``
     batches ahead; this loop becomes a pure consumer dequeuing ready
     batches in order, so one iteration pays max(compute, prepare) instead
-    of their sum.  The batch stream, committed plans, and loss curve match
-    the sync path under the same seed (samplers draw from per-index
-    deterministic seed streams; PlanCache resolution is atomic)."""
+    of their sum.  The batch stream, committed plans, cache counters, and
+    loss curve are bit-identical to the sync path under the same seed:
+    samplers draw from per-index deterministic seed streams, and every
+    shared-cache decision (PlanCache lookup/selection, spill feedback,
+    signature seeding) runs through the pipeline's index-ordered resolve
+    stage — only the sampler build, skeleton partition, payload padding,
+    device staging, and AOT pre-compiles race across workers.  With
+    ``cfg.adapt_budget_k`` the committed payloads also materialize in the
+    ordered stage (the spill feedback that steps the slack ladder must
+    observe batches in order), trading some overlap for determinism."""
     if cfg.model not in ("gcn", "gin", "sage"):
         raise ValueError(f"mini-batch training supports gcn/gin/sage, "
                          f"not {cfg.model!r}")
@@ -276,63 +306,29 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     # canonical preserved signature per step-fn key (= plan.layers): the
     # bins fix_shapes stamps on the traced Decomposed are static jit
     # metadata, so every batch sharing a step function must carry the SAME
-    # value — first signature seen for a layer tuple wins
+    # value — first signature seen (in batch-index order) for a layer
+    # tuple wins
     sig_of_layers: dict[tuple, tuple] = {}
 
-    def plan_and_fix(batch):
-        """Single-pass prepare: one partition into a skeleton (skipped
-        entirely when the cluster tuple's skeleton is cached), cache
-        lookup on its stats-only view, then payloads materialized from the
-        *same* skeleton — only the committed plan's on a hit, the full
-        candidate set only when selection (or a scheduled probe) actually
-        runs.  A fixed selector skips the cache outright."""
-        slack = cache.bell_slack if cfg.adapt_budget_k else None
-        skey = (SkeletonCache.key(batch, slack) if skel_cache is not None
-                else None)
-        cached = skel_cache.get(skey) if skey is not None else None
-        if cached is not None:
-            skel, inv_deg = cached
-        else:
-            skel, inv_deg = prepare_skeleton(batch, cfg, bell_slack=slack)
-            if skey is not None:
-                skel_cache.put(skey, (skel, inv_deg))
-        if fixed_names is not None:
-            dec = skel.materialize(fixed_names)
-            plan = KernelPlan.make(dec, fixed_names, n_layers=cfg.n_layers,
-                                   epilogues=epilogues)
-            hit = True
-        else:
-            # signature/anchor read tier stats only, so the skeleton is
-            # consumed directly — no payload-free Decomposed on the hot path
-            plan = cache.lookup(skel)
-            hit = plan is not None
-            if hit:
-                # tier i materializes only the payloads the plan
-                # dispatches on tier i (per-subgraph keep sets)
-                dec = skel.materialize(plan_payload_keys(plan))
-            else:
-                dec = skel.materialize(MB_KERNELS)
-                plan, _ = cache.plan_for(dec)
-        # committed capped-bell payloads feed the budget-K autotuner
-        cache.observe_bell(dec)
-        sig = sig_of_layers.setdefault(plan.layers, cache.signature(skel))
-        # only the payloads this plan dispatches cross the jit boundary;
-        # the keep sets are a function of the plan, so batches sharing a
-        # step function share one treedef
-        fixed = fix_shapes(dec, pad_budget, keep=plan_payload_keys(plan),
-                           stats=sig)
-        return plan, fixed, inv_deg, hit
-
     counters = dict(traces=0)
+    # plan.layers -> jitted step, in first-use batch order (sync dispatch
+    # and the reported plans list); seeded from the ordered resolve stage
+    # so async insertion order matches the sync loop's
     step_fns: dict[tuple, Any] = {}
+    # (plan.layers, treedef, leaf shapes) -> AOT executable: what the
+    # async consumer dispatches (the jit cache and the AOT cache are
+    # separate, so a worker-compiled shape is only a consumer cache hit
+    # if the consumer invokes the executable itself)
+    compiled_steps: dict[tuple, Any] = {}
     compile_lock = threading.Lock()
-    compiled_shapes: set = set()
-    # zero-valued (params, opt) twins: pipeline workers call the real step
-    # function on them to populate the jit cache for a novel payload shape
-    # (first batch of a new plan, or a bell-slack ladder step) so the
-    # consumer's dispatch is always a cache hit instead of a compile stall
-    warm_params = jax.tree.map(jnp.zeros_like, params)
-    warm_opt = jax.tree.map(jnp.zeros_like, opt)
+    # abstract (params, opt) twins: pipeline workers AOT-lower the step
+    # against these ShapeDtypeStructs for each novel payload shape, so
+    # the compile happens off the consumer path without *executing* a
+    # throwaway step — an executed warmup would contend with the
+    # consumer's real step on the device and skew t_step/efficiency
+    aval = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+    warm_params = jax.tree.map(aval, params)
+    warm_opt = jax.tree.map(aval, opt)
 
     def get_step_fn(plan):
         fn = step_fns.get(plan.layers)        # lock-free steady state
@@ -345,37 +341,132 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         return fn
 
     def warm_compile(fn, plan, args):
-        """Compile (plan, payload shapes) off the consumer path.  Compiles
-        serialize behind the lock (they are rare: one per plan plus one
-        per adaptive-K ladder step, the latter capped by
-        cfg.max_ladder_recompiles through the PlanCache)."""
+        """AOT-compile (plan, payload shapes) off the consumer path and
+        return the executable the consumer dispatches.  Compiles — and
+        the trace counter the lowering bumps — serialize behind the lock;
+        they are rare: one per plan plus one per adaptive-K ladder step,
+        the latter capped by cfg.max_ladder_recompiles through the
+        PlanCache."""
         leaves, treedef = jax.tree_util.tree_flatten(args)
         skey = (plan.layers, treedef,
                 tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
         with compile_lock:
-            if skey in compiled_shapes:
-                return
-            fn(warm_params, warm_opt, *args)     # result discarded
-            compiled_shapes.add(skey)
+            comp = compiled_steps.get(skey)
+            if comp is None:
+                comp = compiled_steps[skey] = fn.lower(
+                    warm_params, warm_opt, *args).compile()
+            return comp
 
-    def produce(batch, sample_s, stage: bool) -> _Prepared:
+    def skeleton_for(batch, slack):
+        """Skeleton + inverse in-degree, through the SkeletonCache (one
+        partition pass, skipped entirely on a cluster-tuple memo hit)."""
+        skey = (SkeletonCache.key(batch, slack) if skel_cache is not None
+                else None)
+        cached = skel_cache.get(skey) if skey is not None else None
+        if cached is not None:
+            return cached
+        skel, inv_deg = prepare_skeleton(batch, cfg, bell_slack=slack)
+        if skey is not None:
+            skel_cache.put(skey, (skel, inv_deg))
+        return skel, inv_deg
+
+    def build_batch(batch, sample_s) -> _InFlight:
+        """Racing stage: the partition pass into a skeleton — reading a
+        *speculative* bell slack when the budget-K autotuner is live (the
+        ordered resolve stage rebuilds on the rare mid-flight ladder
+        step) — plus the fixed selector's payloads, which involve no
+        shared-state decision."""
         t0 = time.perf_counter()
-        plan, fixed, inv_deg, hit = plan_and_fix(batch)
-        args = (fixed, batch.features, batch.labels, batch.target_mask,
-                inv_deg)
+        slack = cache.bell_slack if cfg.adapt_budget_k else None
+        skel, inv_deg = skeleton_for(batch, slack)
+        c = _InFlight(batch=batch, skel=skel, inv_deg=inv_deg, slack=slack,
+                      sample_s=sample_s, prepare_s=0.0)
+        if fixed_names is not None and not cfg.adapt_budget_k:
+            c.dec = skel.materialize(fixed_names)
+            c.plan = KernelPlan.make(c.dec, fixed_names,
+                                     n_layers=cfg.n_layers,
+                                     epilogues=epilogues)
+        c.prepare_s += time.perf_counter() - t0
+        return c
+
+    def resolve_batch(c: _InFlight) -> _InFlight:
+        """Ordered stage: every shared-cache decision, made in batch-index
+        order — the pipeline runs this through its turnstile; the sync
+        path is trivially in order.  plan_for's atomicity alone is not
+        enough for the determinism contract: a later-index batch racing
+        ahead could run its lookup before an earlier-index batch commits
+        the entry it would have hit, turning a hit (or near-hit) into a
+        genuine miss and diverging hit_history, the LRU order, and the
+        near-hit anchor scan from the sync loop.  Selection on a miss
+        runs here too — the sync loop pays it at the same point, and
+        steady-state misses are rare."""
+        t0 = time.perf_counter()
+        if cfg.adapt_budget_k:
+            slack = cache.bell_slack
+            if slack != c.slack:    # ladder stepped while c was in flight
+                c.slack = slack
+                c.skel, c.inv_deg = skeleton_for(c.batch, slack)
+                c.dec = c.plan = None
+        if fixed_names is not None:
+            if c.dec is None:       # adapt_budget_k defers the build here
+                c.dec = c.skel.materialize(fixed_names)
+                c.plan = KernelPlan.make(c.dec, fixed_names,
+                                         n_layers=cfg.n_layers,
+                                         epilogues=epilogues)
+            c.hit = True
+        else:
+            # signature/anchor read tier stats only, so the skeleton is
+            # consumed directly — no payload-free Decomposed on the hot path
+            c.plan = cache.lookup(c.skel)
+            c.hit = c.plan is not None
+            if not c.hit:
+                c.dec = c.skel.materialize(MB_KERNELS)
+                c.plan, _ = cache.plan_for(c.dec)
+            elif cfg.adapt_budget_k:
+                # the spill-feedback stream steps the slack ladder, so it
+                # must observe batches in order too: the committed
+                # payloads materialize here while the autotuner is live
+                # (with it off — the default — a hit's payloads race in
+                # the finish stage)
+                c.dec = c.skel.materialize(plan_payload_keys(c.plan))
+        if c.dec is not None:
+            # committed capped-bell payloads feed the budget-K autotuner
+            cache.observe_bell(c.dec)
+        c.sig = sig_of_layers.setdefault(c.plan.layers,
+                                         cache.signature(c.skel))
+        get_step_fn(c.plan)  # step-fn (and reported-plan) order pinned here
+        c.prepare_s += time.perf_counter() - t0
+        return c
+
+    def finish_batch(c: _InFlight, stage: bool) -> _Prepared:
+        """Racing stage: pad the committed plan's payloads to the budget
+        and (async) stage device transfers + AOT-compile, so the
+        consumer's dispatch never pays a host->device copy or a compile."""
+        t0 = time.perf_counter()
+        if c.dec is None:
+            # tier i materializes only the payloads the plan dispatches
+            # on tier i (per-subgraph keep sets)
+            c.dec = c.skel.materialize(plan_payload_keys(c.plan))
+        # only the payloads this plan dispatches cross the jit boundary;
+        # the keep sets are a function of the plan, so batches sharing a
+        # step function share one treedef
+        fixed = fix_shapes(c.dec, pad_budget, keep=plan_payload_keys(c.plan),
+                           stats=c.sig)
+        args = (fixed, c.batch.features, c.batch.labels,
+                c.batch.target_mask, c.inv_deg)
+        fn = get_step_fn(c.plan)
         if stage:
-            # device staging + pre-compile happen in the worker: the
-            # consumer's dispatch never pays a host->device copy or a jit
-            # compile
             args = jax.device_put(args)
-            warm_compile(get_step_fn(plan), plan, args)
-        return _Prepared(batch, plan, args, hit,
-                         sample_s, time.perf_counter() - t0)
+            fn = warm_compile(fn, c.plan, args)
+        c.prepare_s += time.perf_counter() - t0
+        return _Prepared(c.batch, c.plan, args, c.hit,
+                         c.sample_s, c.prepare_s, fn)
 
-    def build_and_produce(idx, ticket) -> _Prepared:
-        t0 = time.perf_counter()
-        batch = sampler.build(ticket)
-        return produce(batch, time.perf_counter() - t0, stage=True)
+    def prepare_sync(batch, sample_s=0.0) -> _Prepared:
+        """The three stages composed inline — the sync training path and
+        the eval loop (index order holds trivially)."""
+        return finish_batch(resolve_batch(build_batch(batch, sample_s)),
+                            stage=False)
 
     losses, hit_history = [], []
     t_sample, t_prepare, t_step, t_iter = [], [], [], []
@@ -387,9 +478,8 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         hit_history.append(item.hit)
         t_sample.append(item.sample_s)
         t_prepare.append(item.prepare_s)
-        fn = get_step_fn(item.plan)
         t0 = time.perf_counter()
-        params, opt, loss = fn(params, opt, *item.args)
+        params, opt, loss = item.step(params, opt, *item.args)
         loss.block_until_ready()
         t_step.append(time.perf_counter() - t0)
         losses.append(float(loss))
@@ -410,7 +500,15 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     pipe_stats = None
     t_loop0 = time.perf_counter()
     if cfg.prefetch_depth > 0:
-        pipe = BatchPipeline(sampler.draw, build_and_produce, n_items=steps,
+        def work_stage(idx, ticket):
+            t0 = time.perf_counter()
+            batch = sampler.build(ticket)
+            return build_batch(batch, time.perf_counter() - t0)
+
+        pipe = BatchPipeline(sampler.draw, work_stage, n_items=steps,
+                             resolve_fn=lambda idx, c: resolve_batch(c),
+                             finish_fn=lambda idx, c: finish_batch(
+                                 c, stage=True),
                              prefetch_depth=cfg.prefetch_depth,
                              workers=cfg.pipeline_workers,
                              name=f"{cfg.sampler}-{cfg.model}")
@@ -427,7 +525,7 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
             it0 = time.perf_counter()
             t0 = time.perf_counter()
             batch = sampler.sample()
-            consume(i, produce(batch, time.perf_counter() - t0, stage=False))
+            consume(i, prepare_sync(batch, time.perf_counter() - t0))
             t_iter.append(time.perf_counter() - it0)
     loop_s = time.perf_counter() - t_loop0
     if pipe_stats is not None:
@@ -449,18 +547,20 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
                   f"efficiency={pipe_stats['efficiency_pct']:.0f}%")
 
     # snapshot before the eval loop below adds its own (mostly-hit)
-    # lookups: the reported rate is the *training* steady state
+    # lookups and step-fn seeds: the reported rate and plans list are the
+    # *training* steady state
     cache_stats = dict(cache.stats)
+    plans_trained = list(step_fns)
 
     # masked accuracy over a few fresh batches (cluster sampling cycles
     # clusters, so enough eval batches approach full-graph accuracy)
     correct = total = 0
     for _ in range(eval_batches):
         batch = sampler.sample()
-        plan, fixed, inv_deg, _ = plan_and_fix(batch)
-        logits = gnn.forward(params, cfg, fixed,
-                             jnp.asarray(batch.features), plan,
-                             jnp.asarray(inv_deg))
+        p = prepare_sync(batch)
+        logits = gnn.forward(params, cfg, p.args[0],
+                             jnp.asarray(batch.features), p.plan,
+                             jnp.asarray(p.args[4]))
         pred = np.asarray(jnp.argmax(logits, -1))
         tm = batch.target_mask
         correct += int((pred[tm] == batch.labels[tm]).sum())
@@ -470,7 +570,7 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     return MinibatchResult(
         losses=losses, accuracy=correct / max(total, 1),
         cache=cache_stats, hit_history=hit_history,
-        plans=list(step_fns),
+        plans=plans_trained,
         n_traces=counters["traces"],
         step_seconds=med(t_step, skip=min(len(t_step) - 1, 1)),
         sample_seconds=med(t_sample), prepare_seconds=med(t_prepare),

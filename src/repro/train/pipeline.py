@@ -10,12 +10,23 @@ instead.  The fixed-budget padded shapes built in the sampling layer are
 what make this safe: a consumer thread never retraces, so the only shared
 state is the (now lock-protected) PlanCache/SkeletonCache bookkeeping.
 
-Determinism contract: item ``i``'s *draw* (``draw_fn``) runs under one lock
-in strictly increasing index order — workers race only on the heavy,
-order-independent ``work_fn`` — and items are delivered to :meth:`get` in
-index order.  With samplers whose per-batch randomness is a pure function
-of (seed, index) (see ``sampling.sampler.DrawTicket``), the async batch
-stream is bit-identical to the sequential one.
+Determinism contract: per-item work is split into up to three stages, and
+the two *stateful* ones run in strictly increasing index order.  Item
+``i``'s *draw* (``draw_fn``) runs under one lock in index order — it
+consumes sequential sampler state.  ``work_fn`` is the heavy,
+order-independent stage and races freely across workers.  The optional
+``resolve_fn`` then runs through an index-ordered turnstile: item ``i``'s
+resolve starts only after items ``0..i-1`` have finished theirs, so
+shared-cache decisions (lookup, selection, LRU order, near-hit aliasing,
+feedback counters) are made in exactly the order the sequential loop would
+make them — completion-order racing is NOT enough for that, because a
+later-index batch can otherwise run its lookup before an earlier-index
+batch commits the entry it would have hit.  The optional ``finish_fn``
+(payload padding, device staging, pre-compile) races again.  Items are
+delivered to :meth:`get` in index order.  With samplers whose per-batch
+randomness is a pure function of (seed, index) (see
+``sampling.sampler.DrawTicket``), the async batch stream *and* every
+cache decision are bit-identical to the sequential ones.
 
 Backpressure is a semaphore with ``prefetch_depth`` permits: a worker takes
 a permit before drawing (blocking when ``depth`` batches are staged or in
@@ -26,9 +37,10 @@ ready queue averages below half of ``prefetch_depth`` (the producers can't
 keep up; raise ``workers`` or accept prepare-bound steps).
 
 Worker exceptions are captured per item and re-raised in the consumer at
-that item's :meth:`get` (the pipeline closes itself first).  :meth:`close`
-is idempotent, joins every worker, and is safe mid-stream — used directly
-or via the context manager.
+that item's :meth:`get` (the pipeline closes itself first); a failed item
+vacates its turnstile slot so later items never deadlock behind it.
+:meth:`close` is idempotent, joins every worker, and is safe mid-stream —
+used directly or via the context manager.
 """
 from __future__ import annotations
 
@@ -44,6 +56,10 @@ class PipelineError(RuntimeError):
     """Pipeline used after close, or its workers died without output."""
 
 
+class _Cancelled(BaseException):
+    """Internal: unwinds a worker parked on the turnstile at close()."""
+
+
 class BatchPipeline:
     """Run ``work_fn(index, draw_fn())`` for ``n_items`` items on background
     threads, delivering results to :meth:`get` in index order, at most
@@ -51,15 +67,21 @@ class BatchPipeline:
 
     ``draw_fn`` consumes sequential sampler state and must be cheap: it runs
     under the pipeline's dispatch lock so draws happen in index order no
-    matter which worker wins the race.  ``work_fn`` is the heavy stage
-    (build + decompose + select + pad + device transfer) and runs
-    concurrently on up to ``workers`` threads.
+    matter which worker wins the race.  ``work_fn`` is the heavy
+    order-independent stage (sampler build + skeleton) and runs concurrently
+    on up to ``workers`` threads.  ``resolve_fn(index, item)``, if given,
+    runs through an index-ordered turnstile — put every shared-state
+    decision that must match the sequential loop bit-for-bit here, and keep
+    it cheap (it serializes).  ``finish_fn(index, item)``, if given, races
+    again after the resolve (padding, device staging, pre-compile).
     """
 
     def __init__(self, draw_fn: Callable[[], Any],
                  work_fn: Callable[[int, Any], Any], n_items: int,
                  prefetch_depth: int = 4, workers: int = 2,
-                 name: str = "sampler", warn_after: int = 16):
+                 name: str = "sampler", warn_after: int = 16,
+                 resolve_fn: Callable[[int, Any], Any] | None = None,
+                 finish_fn: Callable[[int, Any], Any] | None = None):
         self.n_items = int(n_items)
         self.depth = max(int(prefetch_depth), 1)
         # more workers than permits can never run concurrently
@@ -68,6 +90,8 @@ class BatchPipeline:
         self.warn_after = int(warn_after)
         self._draw_fn = draw_fn
         self._work_fn = work_fn
+        self._resolve_fn = resolve_fn
+        self._finish_fn = finish_fn
         self._slots = threading.Semaphore(self.depth)
         self._draw_lock = threading.Lock()
         self._stat_lock = threading.Lock()
@@ -75,6 +99,12 @@ class BatchPipeline:
         self._results: dict[int, tuple[bool, Any]] = {}   # idx -> (ok, item)
         self._next_draw = 0
         self._next_out = 0
+        # index-ordered turnstile for resolve_fn: _next_turn is the index
+        # whose resolve may run; finished (or failed/skipped) indices are
+        # parked in _turns_done until the sequence catches up to them
+        self._turn_cond = threading.Condition()
+        self._next_turn = 0
+        self._turns_done: set[int] = set()
         self._stop = threading.Event()
         self._closed = False
         self.wait_full_s = 0.0     # producers blocked: every slot staged
@@ -102,7 +132,9 @@ class BatchPipeline:
                         self._slots.release()
                     return
                 if not acquired:
-                    if self._next_draw >= self.n_items:
+                    with self._draw_lock:
+                        drained = self._next_draw >= self.n_items
+                    if drained:
                         return             # drained: nothing left to draw
                     with self._stat_lock:  # genuine full-queue backpressure
                         self.wait_full_s += waited
@@ -120,11 +152,25 @@ class BatchPipeline:
                         # draw is identical to the single-threaded path
                         ticket = self._draw_fn()
                     except BaseException as e:   # noqa: BLE001 — propagated
+                        self._finish_turn(idx)
                         self._post(idx, False, e)
                         continue
                 try:
                     item = self._work_fn(idx, ticket)
+                    if self._resolve_fn is not None:
+                        self._await_turn(idx)
+                        try:
+                            item = self._resolve_fn(idx, item)
+                        finally:
+                            self._finish_turn(idx)
+                    else:
+                        self._finish_turn(idx)
+                    if self._finish_fn is not None:
+                        item = self._finish_fn(idx, item)
+                except _Cancelled:
+                    return
                 except BaseException as e:       # noqa: BLE001 — propagated
+                    self._finish_turn(idx)
                     self._post(idx, False, e)
                 else:
                     self._post(idx, True, item)
@@ -132,6 +178,27 @@ class BatchPipeline:
             with self._cond:
                 self._live -= 1
                 self._cond.notify_all()
+
+    def _await_turn(self, idx: int) -> None:
+        """Block until every lower index has finished its resolve stage."""
+        with self._turn_cond:
+            while self._next_turn != idx:
+                if self._stop.is_set():
+                    raise _Cancelled()
+                self._turn_cond.wait(0.05)
+
+    def _finish_turn(self, idx: int) -> None:
+        """Mark ``idx``'s resolve slot done (idempotent, any order): failed
+        and skipped items vacate their slot so later turns never wait on a
+        resolve that will not happen."""
+        with self._turn_cond:
+            if idx < self._next_turn or idx in self._turns_done:
+                return
+            self._turns_done.add(idx)
+            while self._next_turn in self._turns_done:
+                self._turns_done.discard(self._next_turn)
+                self._next_turn += 1
+            self._turn_cond.notify_all()
 
     def _post(self, idx: int, ok: bool, payload: Any) -> None:
         with self._cond:
@@ -193,6 +260,8 @@ class BatchPipeline:
         self._stop.set()
         for _ in self._threads:     # unblock producers parked on the queue
             self._slots.release()
+        with self._turn_cond:       # and those parked on the turnstile
+            self._turn_cond.notify_all()
         for t in self._threads:
             t.join(timeout=10.0)
         with self._cond:

@@ -63,6 +63,57 @@ def test_items_delivered_in_index_order_despite_racing_workers():
     assert pipe.stats["delivered"] == 12
 
 
+def test_resolve_stage_runs_in_index_order_and_finish_races():
+    # the determinism linchpin: work_fn completes wildly out of order, but
+    # resolve_fn (where shared-cache decisions live) must still run 0..n-1
+    # strictly in index order; finish_fn races afterwards
+    resolved, finished = [], []
+
+    def work(idx, ticket):
+        if idx % 2 == 0:
+            time.sleep(0.008)
+        return ticket
+
+    def resolve(idx, item):
+        resolved.append(idx)
+        return item
+
+    def finish(idx, item):
+        finished.append(idx)
+        return item * 10
+
+    counter = iter(range(100))
+    n = 12
+    with BatchPipeline(lambda: next(counter), work, n_items=n,
+                       prefetch_depth=4, workers=4,
+                       resolve_fn=resolve, finish_fn=finish) as pipe:
+        out = [pipe.get() for _ in range(n)]
+    assert out == [i * 10 for i in range(n)]
+    assert resolved == list(range(n))      # strict index order
+    assert sorted(finished) == list(range(n))
+
+
+def test_failed_item_vacates_its_resolve_turn():
+    # an item that dies in work_fn must not deadlock later items behind
+    # its never-run resolve turn; its error still surfaces at its get()
+    resolved = []
+
+    def work(idx, ticket):
+        if idx == 1:
+            raise ValueError("boom at 1")
+        return ticket
+
+    counter = iter(range(100))
+    pipe = BatchPipeline(lambda: next(counter), work, n_items=6,
+                         prefetch_depth=3, workers=3,
+                         resolve_fn=lambda i, x: resolved.append(i) or x)
+    assert pipe.get() == 0
+    with pytest.raises(ValueError, match="boom at 1"):
+        pipe.get()
+    assert 1 not in resolved               # its turn was vacated, not run
+    assert not pipeline_threads()
+
+
 def test_worker_exception_propagates_and_closes():
     def work(idx, ticket):
         if idx == 3:
@@ -240,6 +291,27 @@ def test_async_training_matches_sync_and_never_retraces():
     assert asyn.pipeline["depth"] == 4
     assert asyn.pipeline["efficiency_pct"] > 0.0
     # clean shutdown: no pipeline worker threads outlive the call
+    assert not pipeline_threads()
+
+
+def test_async_adapt_budget_k_training_matches_sync():
+    # with the budget-K autotuner live, spill feedback and the slack
+    # ladder are also part of the ordered-resolve contract: committed
+    # payloads materialize in index order, so plans, hit history, and
+    # every cache counter stay bit-identical to the sync path
+    g = small_graph(n=160, e=1400)
+    cfg = gnn.GNNConfig(model="gcn", n_layers=2, hidden=8, comm_size=8,
+                        sampler="cluster", clusters_per_batch=4,
+                        inter_buckets=2, reorder="bfs",
+                        selector="cost_model", adapt_budget_k=True,
+                        max_ladder_recompiles=2, seed=11)
+    sync = gnn_steps.train_minibatch(g, cfg, steps=12, eval_batches=1)
+    acfg = dataclasses.replace(cfg, prefetch_depth=4, pipeline_workers=2)
+    asyn = gnn_steps.train_minibatch(g, acfg, steps=12, eval_batches=1)
+    assert asyn.plans == sync.plans
+    assert asyn.hit_history == sync.hit_history
+    assert asyn.cache == sync.cache        # incl. spill/slack counters
+    np.testing.assert_allclose(asyn.losses, sync.losses, atol=1e-4)
     assert not pipeline_threads()
 
 
