@@ -232,7 +232,8 @@ def run(dataset: str = "pubmed", scale: float = 0.05, steps: int = 25,
                pipeline_hit_rate=pipe_res.hit_rate(WARMUP),
                pipeline_traces=pipe_res.n_traces,
                bell_slack=ac.get("bell_slack"),
-               spill_frac=ac.get("spill_frac"))
+               spill_frac=ac.get("spill_frac"),
+               fault_counters=pipe_res.faults)
     if verbose:
         emit("selection_uncached_us", t_uncached * 1e6,
              f"per-batch cost-model selection x{len(decs)}")
@@ -280,6 +281,12 @@ def run(dataset: str = "pubmed", scale: float = 0.05, steps: int = 25,
         emit("pipeline_efficiency_pct", efficiency,
              f"device-busy share of steady-state async loop (higher "
              f"better); workers={ps['workers']} starved={ps['starved']}")
+        fc = pipe_res.faults
+        emit("pipeline_fault_counters",
+             float(fc["retries"] + fc["quarantined"]
+                   + fc["nonfinite_skips"]),
+             f"retries={fc['retries']} quarantined={fc['quarantined']} "
+             f"nonfinite={fc['nonfinite_skips']} (clean run: expect 0)")
     return out
 
 

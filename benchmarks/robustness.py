@@ -1,0 +1,183 @@
+"""Robustness benchmark: what the fault-tolerance layer costs when nothing
+fails, and what recovery costs when something does.
+
+Rows (none are gated by baseline.json yet — informational until a few
+commits of history exist):
+  * ``checkpoint_save_us``    — blocking CheckpointManager.save of a
+    params+opt-sized tree with the full aux payload (cursor, losses,
+    PlanCache state); the async writer hides this off the hot path, so the
+    row bounds the worst case, not the steady state
+  * ``checkpoint_restore_us`` — restore + load_aux round trip
+  * ``checkpoint_overhead_pct`` — wall-clock cost of training WITH periodic
+    async checkpoints vs without, same seed/steps (the real steady-state
+    price; expect single-digit percent on CPU)
+  * ``resume_replay_us``      — per-batch cost of the resume fast path:
+    fast_forward through the sampler draw stream + cache state_dict load
+    (what a restart pays before the first real step)
+  * ``retry_overhead_us``     — extra per-batch wall time of a run that
+    absorbed injected transient faults with zero-delay retries vs the
+    fault-free run (the retry machinery itself, not the backoff)
+  * ``quarantine_reselect_us`` — one-shot cost of the consumer's kernel
+    quarantine: re-skeleton + quarantine + re-select + re-pad + degraded
+    step dispatch, measured from the injected compile failure
+  * ``fault_counters``        — retries + quarantined + nonfinite_skips
+    seen by the *fault-free* pipeline run (value should be 0; nonzero
+    means the environment itself is flaky)
+"""
+from __future__ import annotations
+
+import dataclasses
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import gnn
+from repro.distributed import checkpoint as ckpt_mod
+from repro.distributed import fault_tolerance as ft
+from repro.graphs import graph as G
+from repro.train import gnn_steps
+
+
+def run(dataset: str = "pubmed", scale: float = 0.04, steps: int = 12,
+        verbose: bool = True) -> dict:
+    graph = G.synth_dataset(dataset, scale=scale, seed=0)
+    cfg = gnn.GNNConfig(model="gcn", sampler="cluster", reorder="louvain",
+                        clusters_per_batch=8, inter_buckets=2)
+
+    base = gnn_steps.train_minibatch(graph, cfg, steps=steps, eval_batches=0)
+    base_iter = base.iter_seconds
+
+    # checkpoint save/restore on a real params+opt tree with a real aux
+    tmp = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        key = __import__("jax").random.PRNGKey(0)
+        params = gnn.init_model(key, cfg, graph.features.shape[-1],
+                                graph.n_classes)
+        opt = gnn._adam_init(params)
+        tree = dict(params=params, opt=opt)
+        aux = dict(cursor=steps, losses=base.losses,
+                   hit_history=base.hit_history,
+                   cache=base.plan_cache.state_dict(), plans=[], sigs=[])
+        mgr = ckpt_mod.CheckpointManager(tmp, async_write=False)
+        ts = []
+        for i in range(5):
+            t0 = time.perf_counter()
+            mgr.save(i, tree, aux=aux, blocking=True)
+            ts.append(time.perf_counter() - t0)
+        save_us = float(np.median(ts)) * 1e6
+        ts = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            mgr.restore(tree)
+            mgr.load_aux()
+            ts.append(time.perf_counter() - t0)
+        restore_us = float(np.median(ts)) * 1e6
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # steady-state checkpoint overhead: periodic async saves riding a run
+    tmp = tempfile.mkdtemp(prefix="bench_ckpt_run_")
+    try:
+        ck_cfg = dataclasses.replace(cfg, checkpoint_dir=tmp,
+                                     checkpoint_every=3)
+        ck = gnn_steps.train_minibatch(graph, ck_cfg, steps=steps,
+                                       eval_batches=0)
+        ck_pct = 100.0 * (ck.iter_seconds - base_iter) / max(base_iter, 1e-12)
+
+        # resume fast path: sampler fast_forward + cache state reload
+        t0 = time.perf_counter()
+        res = gnn_steps.train_minibatch(
+            graph, dataclasses.replace(ck_cfg, resume_from=tmp),
+            steps=steps, eval_batches=0)
+        resume_batches = max(res.faults["resumed_at"], 1)
+        replay_us = (time.perf_counter() - t0
+                     - res.iter_seconds * len(res.losses)) / resume_batches
+        replay_us = max(replay_us, 0.0) * 1e6
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    # retry machinery overhead (zero-delay backoff, 1 injected fault/batch)
+    rcfg = dataclasses.replace(cfg, retry_max=2, retry_base_delay_s=0.0)
+    fp = ft.FaultPlan(worker_faults={i: 1 for i in range(steps)})
+    retried = gnn_steps.train_minibatch(graph, rcfg, steps=steps,
+                                        eval_batches=0, fault_plan=fp)
+    retry_us = max(retried.iter_seconds - base_iter, 0.0) * 1e6
+
+    # kernel quarantine: time the recovery batch itself.  A dense-community
+    # graph makes the cost model commit the Pallas bell/block_diag path;
+    # inject a compile failure and compare the run's iteration time to the
+    # fault-free one — both pay one trace, the delta is the recovery.
+    nb, B = 4, 64
+    n = nb * B
+    src, dst = G.community_graph(n, 40 * n, comm_size=B, intra_frac=0.9,
+                                 seed=0)
+    rng = np.random.default_rng(1)
+    dense = G.Graph(n, src, dst,
+                    rng.standard_normal((n, 16)).astype(np.float32),
+                    rng.integers(0, 4, n).astype(np.int32), 4)
+    qcfg = gnn.GNNConfig(model="gin", sampler="cluster", comm_size=B,
+                         clusters_per_batch=2, reorder="bfs",
+                         inter_buckets=2)
+    probe = gnn_steps.train_minibatch(dense, qcfg, steps=2, eval_batches=0)
+    from repro.kernels.registry import REGISTRY
+    pallas_used = sorted({k for plan in probe.plans for layer in plan
+                          for k in layer if REGISTRY.get(k).pallas})
+    quarantine_us = 0.0
+    quarantined = 0
+    if pallas_used:
+        fp = ft.FaultPlan(kernel_faults={pallas_used[0]: "compile"})
+        with fp.activate():
+            q = gnn_steps.train_minibatch(dense, qcfg, steps=2,
+                                          eval_batches=0, fault_plan=fp)
+        quarantined = q.faults["quarantined"]
+        quarantine_us = max(q.iter_seconds - probe.iter_seconds, 0.0) * 1e6
+
+    # fault counters of a clean async run (should be zero)
+    pcfg = dataclasses.replace(cfg, prefetch_depth=4, pipeline_workers=2,
+                               retry_max=2, retry_base_delay_s=0.0)
+    clean = gnn_steps.train_minibatch(graph, pcfg, steps=steps,
+                                      eval_batches=0)
+    counters = clean.faults
+    total_faults = (counters["retries"] + counters["quarantined"]
+                    + counters["nonfinite_skips"])
+
+    out = dict(checkpoint_save_us=save_us,
+               checkpoint_restore_us=restore_us,
+               checkpoint_overhead_pct=ck_pct,
+               resume_replay_us=replay_us,
+               retry_overhead_us=retry_us,
+               quarantine_reselect_us=quarantine_us,
+               fault_counters=counters,
+               resumed_losses_match=res.losses == base.losses)
+    if verbose:
+        emit("checkpoint_save_us", save_us,
+             "blocking params+opt+aux save (async writer hides this)")
+        emit("checkpoint_restore_us", restore_us,
+             "restore + load_aux round trip")
+        emit("checkpoint_overhead_pct", ck_pct,
+             f"iter with every-3-batch async checkpoints vs without "
+             f"(ckpts={ck.faults['checkpoints']})")
+        emit("resume_replay_us", replay_us,
+             f"per-batch draw fast-forward + cache reload at resume "
+             f"(cursor={res.faults['resumed_at']}, "
+             f"losses_match={res.losses == base.losses})")
+        emit("retry_overhead_us", retry_us,
+             f"per-iter cost of absorbing {retried.faults['retries']} "
+             f"zero-delay retries over {steps} batches")
+        emit("quarantine_reselect_us", quarantine_us,
+             f"re-skeleton+re-select+degraded dispatch after injected "
+             f"compile failure (quarantined={quarantined}, "
+             f"target={pallas_used[0] if pallas_used else 'n/a'})")
+        emit("fault_counters", float(total_faults),
+             f"clean-run retries={counters['retries']} "
+             f"quarantined={counters['quarantined']} "
+             f"nonfinite={counters['nonfinite_skips']} (expect 0)")
+    return out
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -25,7 +25,7 @@ def main() -> None:
     from benchmarks import (ablation_o123, common, density_analysis,
                             end_to_end, format_crossover, fused,
                             granularity_baselines, memory_overhead,
-                            minibatch, overhead)
+                            minibatch, overhead, robustness)
 
     scale = 0.04 if args.quick else 0.08
     jobs = {
@@ -49,6 +49,9 @@ def main() -> None:
         "minibatch_sampling": lambda: minibatch.run(
             scale=0.04 if args.quick else 0.05,
             steps=15 if args.quick else 25),
+        "robustness": lambda: robustness.run(
+            scale=0.03 if args.quick else 0.04,
+            steps=9 if args.quick else 12),
         "fig12_memory_overhead": lambda: memory_overhead.run(),
     }
     only = set(args.only.split(",")) if args.only else None

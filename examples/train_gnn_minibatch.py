@@ -9,9 +9,20 @@ pad, and stage batches ahead of the jitted step, so one iteration pays
 ~max(compute, prepare) instead of their sum; --prefetch 0 runs the
 synchronous loop.
 
+Fault tolerance: --checkpoint-dir + --checkpoint-every snapshot params,
+optimizer state, the batch cursor, and the PlanCache periodically (atomic
++ crc-verified, async writer); --resume restarts from the latest valid
+checkpoint bit-identically to the uninterrupted run; --retry-max absorbs
+transient sampler/stage failures with backoff.  Kill the process mid-run
+and rerun with --resume to see the recovery contract in action.
+
   PYTHONPATH=src python examples/train_gnn_minibatch.py [--steps 100]
   PYTHONPATH=src python examples/train_gnn_minibatch.py --sampler neighbor
   PYTHONPATH=src python examples/train_gnn_minibatch.py --prefetch 0
+  PYTHONPATH=src python examples/train_gnn_minibatch.py \\
+      --checkpoint-dir /tmp/gnn_ckpt --checkpoint-every 20   # then ^C ...
+  PYTHONPATH=src python examples/train_gnn_minibatch.py \\
+      --checkpoint-dir /tmp/gnn_ckpt --checkpoint-every 20 --resume
 """
 import argparse
 
@@ -43,7 +54,22 @@ def main():
                          "async pipeline")
     ap.add_argument("--full-batch", action="store_true",
                     help="also train full-batch for a step-time reference")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="directory for periodic crash-safe checkpoints "
+                         "(params + opt + cursor + PlanCache state)")
+    ap.add_argument("--checkpoint-every", type=int, default=25,
+                    help="checkpoint every N batches (with "
+                         "--checkpoint-dir)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest valid checkpoint in "
+                         "--checkpoint-dir (bit-identical to the "
+                         "uninterrupted run)")
+    ap.add_argument("--retry-max", type=int, default=0,
+                    help="retry transient batch-build/stage failures up "
+                         "to N times with exponential backoff")
     args = ap.parse_args()
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
 
     graph = G.synth_dataset(args.dataset, scale=args.scale, seed=0)
     print(f"{args.dataset}: {graph.n} vertices, {graph.n_edges} edges, "
@@ -54,7 +80,11 @@ def main():
         clusters_per_batch=args.clusters_per_batch,
         batch_nodes=args.batch_nodes, inter_buckets=args.inter_buckets,
         probe_every=args.probe_every, prefetch_depth=args.prefetch,
-        pipeline_workers=args.workers)
+        pipeline_workers=args.workers,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every if args.checkpoint_dir else 0,
+        resume_from=args.checkpoint_dir if args.resume else "",
+        retry_max=args.retry_max)
     res = gnn.train(graph, cfg, steps=args.steps)
     warm = min(args.steps // 4, 10)
     print(f"{args.model}/{args.sampler}: {res.step_seconds*1e3:.2f} ms/step "
@@ -79,6 +109,14 @@ def main():
           f"({len(res.plans)} distinct plan(s): {res.plans})")
     print(f"  loss {res.losses[0]:.4f} -> {res.losses[-1]:.4f}, "
           f"eval acc {res.accuracy:.3f}, dropped edges {res.dropped_edges}")
+    if res.faults is not None:
+        f = res.faults
+        resumed = (f"resumed at batch {f['resumed_at']}"
+                   if f["resumed_at"] >= 0 else "fresh run")
+        print(f"  fault tolerance: {resumed}, "
+              f"checkpoints={f['checkpoints']} retries={f['retries']} "
+              f"quarantined={f['quarantined']} "
+              f"nonfinite_skips={f['nonfinite_skips']}")
 
     if args.full_batch:
         full = gnn.train(graph, gnn.GNNConfig(

@@ -122,6 +122,45 @@ just the batch stream — bit-identical to sync; backpressure counters
 (queue-full / queue-empty waits, mean ready depth, starvation
 warn-once) surface through MinibatchResult.pipeline.
 
+Fault tolerance (repro.distributed.checkpoint + fault_tolerance, wired
+into train/gnn_steps.py) layers four mechanisms over that loop without
+touching the determinism contract:
+
+  * crash-safe checkpoint/resume -- with cfg.checkpoint_dir set,
+    CheckpointManager snapshots params + opt state (npz, crc32 manifest,
+    atomic tmp-dir+rename, async writer) every cfg.checkpoint_every
+    batches together with an aux payload: the batch cursor, loss/hit
+    history, the PlanCache state_dict, and the committed plans +
+    canonical signatures in step-fn order.  The cache/plan snapshot is
+    captured inside the index-ordered resolve turnstile (consume-time
+    cache state already holds future prefetched batches' decisions) and
+    committed when the cursor batch retires, so cfg.resume_from
+    fast-forwards the sampler draw stream and restarts mid-epoch
+    bit-identical to the uninterrupted run -- losses, hit history,
+    committed plans, cache counters.  (n_traces is the one field not
+    comparable across a resume: restored plans re-trace lazily.)
+  * transient-failure retry -- cfg.retry_max wraps batch build and the
+    racing pipeline stages in ft.RetryPolicy: bounded exponential
+    backoff, interruptible (close() cancels a sleeping retry), with
+    fatal-vs-transient classification (ft.default_transient) so real
+    bugs still fail fast.
+  * kernel quarantine -- a Pallas compile/execute failure quarantines
+    the (kernel, signature) pair in the PlanCache, purges the poisoned
+    entry, and re-selects the next-best plan from the surviving
+    candidate set; the XLA coo floor is never quarantined, so
+    degradation always terminates.  Failed lowerings and failed plans
+    are memoized, preserving traces == len(plans).
+  * non-finite guard -- cfg.nonfinite_guard checks loss and grads
+    inside the jitted step and no-ops the param/opt update on a
+    non-finite result (the loss is still recorded; the skip is counted).
+
+All four surface counters through MinibatchResult.faults (retries,
+quarantined, recoveries, nonfinite_skips, checkpoints, resumed_at), and
+ft.FaultPlan is a deterministic fault-injection harness (worker
+exceptions, compile/execute kernel faults, non-finite losses, simulated
+crashes at chosen batch indices) driving the fault-tolerance tests and
+benchmarks/robustness.py.
+
 MB_KERNELS membership rule: a kernel is admissible iff its payload has a
 fixed pytree shape *at the edge budget* — every array dim a function of
 (edge budget, node budget, block size), nothing data-dependent.  BlockDiag

@@ -82,6 +82,28 @@ class GNNConfig:
     # function (pre-compiled in a pipeline worker when prefetching); the
     # cap bounds total slack steps per run
     max_ladder_recompiles: int = 4
+    # --- fault tolerance (train/gnn_steps.py + distributed/) --------------
+    # crash-safe checkpointing: every checkpoint_every consumed batches the
+    # loop snapshots params, opt state, the batch cursor, the sampler draw
+    # count, and the full PlanCache state (entries, counters, slack-ladder
+    # position, quarantine) through distributed.checkpoint.CheckpointManager
+    # (atomic tmp+rename, crc manifest, async writer).  resume_from names a
+    # checkpoint directory to restore before training: the resumed run's
+    # loss curve, committed plans, and cache hit history are bit-identical
+    # to the uninterrupted run's.
+    checkpoint_dir: str = ""        # "" = checkpointing off
+    checkpoint_every: int = 0       # save every N consumed batches (0 = off)
+    checkpoint_keep: int = 3        # CheckpointManager GC horizon
+    resume_from: str = ""           # checkpoint dir to restore from ("" = no)
+    # transient-failure retry for the racing pipeline stages (batch build /
+    # device staging): bounded exponential backoff, interruptible by
+    # close(); fatal (non-transient) failures still fail fast
+    retry_max: int = 0              # 0 = no retries
+    retry_base_delay_s: float = 0.05
+    # non-finite guard: a NaN/Inf loss or gradient skips that batch's
+    # update inside the jitted step (params and Adam state carried
+    # unchanged, the skip counted) instead of silently corrupting params
+    nonfinite_guard: bool = True
 
 
 def prepare(graph: graph_mod.Graph, cfg: GNNConfig) -> dec_mod.Decomposed:

@@ -97,10 +97,19 @@ def candidate_cost(sub: Subgraph, kernel: str, feat_dim: int,
 def select_for_subgraph(sub: Subgraph, feat_dim: int, dtype=np.float32,
                         hw: HwModel = HwModel(),
                         in_dim: int | None = None,
-                        transform_share: float = 0.0) -> str:
-    specs = REGISTRY.candidates_for(sub, include_fused=in_dim is not None)
+                        transform_share: float = 0.0,
+                        exclude: frozenset = frozenset()) -> str:
+    """Cost-argmin kernel name for one subgraph.  ``exclude`` removes
+    candidates by name — the PlanCache's kernel quarantine: a kernel whose
+    compile/execute failed for this signature is struck from the frontier
+    and the next-best takes over (the XLA reference path always stays)."""
+    specs = [s for s in REGISTRY.candidates_for(
+                 sub, include_fused=in_dim is not None)
+             if s.name not in exclude]
     if not specs:
-        raise ValueError(f"no kernel candidates for subgraph {sub.name!r}")
+        raise ValueError(f"no kernel candidates for subgraph {sub.name!r}"
+                         + (f" outside exclusion set {sorted(exclude)}"
+                            if exclude else ""))
     return min(specs, key=lambda s: candidate_cost(
         sub, s.name, feat_dim, dtype, hw, in_dim, transform_share)).name
 
@@ -129,7 +138,8 @@ def _transform_share(dec: Decomposed, feat_dim: int, dtype, hw,
 def select_by_cost_model(dec: Decomposed, feat_dim: int, dtype=np.float32,
                          hw: HwModel = HwModel(),
                          in_dim: int | None = None,
-                         epilogue: EpilogueSpec | None = None
+                         epilogue: EpilogueSpec | None = None,
+                         exclude: frozenset = frozenset()
                          ) -> tuple[str, ...]:
     """One KernelPlan layer: the cost-argmin kernel per subgraph.
 
@@ -137,9 +147,11 @@ def select_by_cost_model(dec: Decomposed, feat_dim: int, dtype=np.float32,
     their epilogue rewrite) fused candidates compete: each unfused
     candidate is surcharged its share of the shared H = X @ W cost the
     fused kernels avoid — unless the layer's ``epilogue`` marks that
-    transform as free (see :func:`_transform_share`)."""
+    transform as free (see :func:`_transform_share`).  ``exclude`` strikes
+    quarantined kernel names from every subgraph's candidate set."""
     share = _transform_share(dec, feat_dim, dtype, hw, in_dim, epilogue)
-    return tuple(select_for_subgraph(s, feat_dim, dtype, hw, in_dim, share)
+    return tuple(select_for_subgraph(s, feat_dim, dtype, hw, in_dim, share,
+                                     exclude=exclude)
                  for s in dec.subgraphs)
 
 

@@ -11,11 +11,17 @@ Design (multi-host ready, exercised single-host in tests):
     ``restore`` accepts a target sharding tree and uses
     jax.device_put(..., sharding) so the same checkpoint restores onto any
     mesh (elastic scaling path)
+  * aux payload: ``save(..., aux=...)`` pickles an arbitrary host-side
+    object (training cursor, sampler draw count, PlanCache state) next to
+    the array tree with its own crc — the recovery contract for the
+    mini-batch loop (train/gnn_steps.py) is that params + aux together
+    reproduce the uninterrupted run bit-identically from the cursor
 """
 from __future__ import annotations
 
 import json
 import os
+import pickle
 import re
 import shutil
 import threading
@@ -43,25 +49,33 @@ class CheckpointManager:
         self.async_write = async_write
         self._thread: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
+        # a crash mid-write leaves a step_<N>.tmp/ behind; it was never
+        # renamed, so it is not a restore candidate — GC it up front (no
+        # writer can be live in __init__, so this never races a save)
+        for name in os.listdir(directory):
+            if re.fullmatch(r"step_\d+\.tmp", name):
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
 
     # -- save -----------------------------------------------------------------
 
-    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+    def save(self, step: int, tree: Any, aux: Any = None,
+             blocking: bool = False) -> None:
         host_tree = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
         self.wait()   # never two writers
         if self.async_write and not blocking:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_tree), daemon=True)
+                target=self._write, args=(step, host_tree, aux), daemon=True)
             self._thread.start()
         else:
-            self._write(step, host_tree)
+            self._write(step, host_tree, aux)
 
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host_tree) -> None:
+    def _write(self, step: int, host_tree, aux: Any = None) -> None:
         tmp = os.path.join(self.dir, f"step_{step:012d}.tmp")
         final = os.path.join(self.dir, f"step_{step:012d}")
         if os.path.exists(tmp):
@@ -75,6 +89,11 @@ class CheckpointManager:
             crc = zlib.crc32(f.read())
         manifest["npz_crc32"] = crc
         manifest["keys"] = [k for k, _ in flat]
+        if aux is not None:
+            blob = pickle.dumps(aux, protocol=pickle.HIGHEST_PROTOCOL)
+            with open(os.path.join(tmp, "aux.pkl"), "wb") as f:
+                f.write(blob)
+            manifest["aux_crc32"] = zlib.crc32(blob)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
             f.flush()
@@ -105,7 +124,13 @@ class CheckpointManager:
                 manifest = json.load(f)
             with open(os.path.join(d, "arrays.npz"), "rb") as f:
                 crc = zlib.crc32(f.read())
-            return crc == manifest["npz_crc32"]
+            if crc != manifest["npz_crc32"]:
+                return False
+            if "aux_crc32" in manifest:
+                with open(os.path.join(d, "aux.pkl"), "rb") as f:
+                    if zlib.crc32(f.read()) != manifest["aux_crc32"]:
+                        return False
+            return True
         except (OSError, KeyError, json.JSONDecodeError):
             return False
 
@@ -114,6 +139,19 @@ class CheckpointManager:
             if self._valid(s):
                 return s
         return None
+
+    def load_aux(self, step: int | None = None) -> Any:
+        """Unpickle the aux payload saved with ``step`` (latest valid step
+        when None); None when the checkpoint carries no aux."""
+        if step is None:
+            step = self.latest_valid_step()
+            if step is None:
+                raise FileNotFoundError(f"no valid checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:012d}", "aux.pkl")
+        if not os.path.exists(path):
+            return None
+        with open(path, "rb") as f:
+            return pickle.load(f)
 
     def restore(self, tree_like: Any, step: int | None = None,
                 shardings: Any = None) -> tuple[Any, int]:

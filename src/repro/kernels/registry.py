@@ -89,6 +89,12 @@ class KernelSpec:
     fused_dual_matvec: Callable[..., jax.Array] | None = None
     fused_dual_matvec_acc: Callable[..., jax.Array] | None = None
     payload_of: str | None = None   # alias another kernel's format payload
+    # Pallas-compiled device code (vs. XLA-native gather/segment ops).  The
+    # quarantine path (sampling.plan_cache / train.gnn_steps) uses this to
+    # attribute a compile/execute failure it cannot pin to one kernel: the
+    # XLA reference kernels (coo/csr) always succeed, so only pallas specs
+    # are quarantine candidates by default.
+    pallas: bool = False
     doc: str = ""
 
     def applies_to(self, kind: str) -> bool:
@@ -428,6 +434,7 @@ REGISTRY.register(KernelSpec(
     matvec=lambda bd, x: ops.block_diag_matvec(bd.blocks, x),
     matvec_acc=lambda bd, x, y: ops.block_diag_matvec_acc(bd.blocks, x, y),
     cost=_block_diag_cost,
+    pallas=True,
     doc="dense (B,B) diagonal blocks on the MXU (paper's dense kernel)",
 ))
 
@@ -441,6 +448,7 @@ REGISTRY.register(KernelSpec(
     # full-batch builds consume coo_t; the budget-capped build re-derives
     # its transpose from the stored-edge subset, so no coo_t is needed
     needs_transpose=lambda stats: not stats.get("edge_budget"),
+    pallas=True,
     doc="blocked-ELL over per-bucket (B,B) tiles; transpose materialized "
         "for the VJP; budget-capped K + COO spill under an edge budget",
 ))
@@ -477,6 +485,7 @@ REGISTRY.register(KernelSpec(
     fused_dual_matvec_acc=lambda bd, x, w, ws, y:
         ops.block_diag_dual_matvec_acc(bd.blocks, x, w, ws, y),
     cost=_block_diag_fused_cost,
+    pallas=True,
     doc="fused A @ (X W): weight stripe in VMEM, transform consumed by the "
         "MXU block contraction without an HBM round-trip; the dual-weight "
         "hook adds a second (self) stripe for the SAGE epilogue",
@@ -491,6 +500,7 @@ REGISTRY.register(KernelSpec(
     fused_matvec=_bell_fmv,
     fused_matvec_acc=_bell_fmv_acc,
     cost=_bell_fused_cost,
+    pallas=True,
     doc="fused blocked-ELL A @ (X W); trades per-stored-block transform "
         "recompute for the H round-trip",
 ))

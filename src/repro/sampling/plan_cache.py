@@ -308,11 +308,20 @@ class PlanCache:
         # signature -> (plan, anchor); anchor = raw (kind, log2 nnz, occ)
         # per tier of the decomposition that minted (or aliased) the entry
         self._entries: OrderedDict[tuple, tuple] = OrderedDict()
+        # kernel quarantine: signature -> set of kernel names whose compile
+        # or execution failed under that signature's payload shapes.  A
+        # quarantined (kernel, signature) pair is struck from selection and
+        # from near-hit aliasing, so a bad Pallas kernel degrades the plan
+        # to the next-best candidate instead of killing the run (the XLA
+        # reference path, coo, is never quarantined — the floor always
+        # selects).
+        self._quarantine: dict[tuple, set] = {}
         self.hits = 0
         self.near_hits = 0
         self.misses = 0
         self.evictions = 0
         self.probes = 0
+        self.quarantined = 0    # (kernel, signature) pairs quarantined
 
     def _dec_slack(self, dec) -> float:
         """The slack this decomposition was *built* with (baked into its
@@ -425,14 +434,94 @@ class PlanCache:
                    and abs(oa - ob) <= 0.5 / self.occ_bins
                    for (ka, la, oa), (kb, lb, ob) in zip(a[1], b[1]))
 
-    def select(self, dec: Decomposed) -> KernelPlan:
+    def select(self, dec: Decomposed,
+               exclude: frozenset | None = None) -> KernelPlan:
         """Uncached cost-model selection (what every step would pay
-        without the cache — the benchmark's 'uncached' row)."""
+        without the cache — the benchmark's 'uncached' row).  ``exclude``
+        defaults to the quarantine set for the batch's signature."""
+        if exclude is None:
+            with self._lock:
+                exclude = frozenset(
+                    self._quarantine.get(self.signature(dec), ()))
         layers = [sel_mod.select_by_cost_model(dec, fout, self.dtype,
                                                hw=self.hw, in_dim=fin,
-                                               epilogue=ep)
+                                               epilogue=ep, exclude=exclude)
                   for (fin, fout), ep in zip(self.pairs, self.epilogues)]
         return KernelPlan.make(dec, layers, epilogues=self.epilogues)
+
+    # -- kernel quarantine (fault tolerance; train/gnn_steps.py) ------------
+
+    @staticmethod
+    def _plan_kernels(plan: KernelPlan) -> set:
+        return {k for layer in plan.layers for k in layer}
+
+    def quarantine(self, sig: tuple, kernels) -> set:
+        """Strike ``kernels`` from signature ``sig``'s candidate set and
+        purge any cached entry dispatching them, so the next lookup
+        re-selects around the failure.  ``coo`` (the XLA segment-sum floor
+        that every subgraph kind admits) is never quarantined — graceful
+        degradation must terminate at a plan that always runs.  Returns
+        the names newly quarantined."""
+        with self._lock:
+            q = self._quarantine.setdefault(sig, set())
+            fresh = {str(k) for k in kernels} - {"coo"} - q
+            q.update(fresh)
+            self.quarantined += len(fresh)
+            if fresh and sig in self._entries:
+                plan, _ = self._entries[sig]
+                if self._plan_kernels(plan) & q:
+                    del self._entries[sig]
+            return fresh
+
+    def quarantined_for(self, sig: tuple) -> frozenset:
+        with self._lock:
+            return frozenset(self._quarantine.get(sig, ()))
+
+    # -- checkpoint state (distributed.checkpoint aux payload) --------------
+
+    def state_dict(self) -> dict:
+        """Picklable snapshot of every piece of mutable state the resume
+        contract covers: entries (plans + anchors, in LRU order), all
+        counters, the probe error band, the budget-K ladder position and
+        its evidence windows, and the quarantine map.  Restoring this via
+        :meth:`load_state_dict` and replaying the remaining batches is
+        bit-identical to never having stopped (signatures, plans, and
+        anchors are plain tuples/dataclasses of primitives)."""
+        with self._lock:
+            return dict(
+                entries=[(sig, plan, anchor)
+                         for sig, (plan, anchor) in self._entries.items()],
+                hits=self.hits, near_hits=self.near_hits,
+                misses=self.misses, evictions=self.evictions,
+                probes=self.probes, quarantined=self.quarantined,
+                quarantine={sig: sorted(ks)
+                            for sig, ks in self._quarantine.items()},
+                probe_errs=list(self._probe_errs),
+                bell_slack=self._bell_slack,
+                slack_changes=self.slack_changes,
+                spill_by_sig=[(k, list(v))
+                              for k, v in self._spill_by_sig.items()],
+                spill_window=list(self._spill_window))
+
+    def load_state_dict(self, state: dict) -> None:
+        with self._lock:
+            self._entries = OrderedDict(
+                (sig, (plan, anchor))
+                for sig, plan, anchor in state["entries"])
+            self.hits = state["hits"]
+            self.near_hits = state["near_hits"]
+            self.misses = state["misses"]
+            self.evictions = state["evictions"]
+            self.probes = state["probes"]
+            self.quarantined = state["quarantined"]
+            self._quarantine = {sig: set(ks)
+                                for sig, ks in state["quarantine"].items()}
+            self._probe_errs = [tuple(e) for e in state["probe_errs"]]
+            self._bell_slack = state["bell_slack"]
+            self.slack_changes = state["slack_changes"]
+            self._spill_by_sig = {k: list(v)
+                                  for k, v in state["spill_by_sig"]}
+            self._spill_window = [tuple(w) for w in state["spill_window"]]
 
     def _store(self, sig: tuple, plan: KernelPlan, anchor: tuple) -> None:
         self._entries[sig] = (plan, anchor)
@@ -453,13 +542,21 @@ class PlanCache:
         """
         with self._lock:
             sig = self.signature(dec)
+            q = self._quarantine.get(sig)
             entry = self._entries.get(sig)
             if entry is not None:
-                self.hits += 1
-                self._entries.move_to_end(sig)
-                return entry[0]
+                # a quarantine after the entry was minted purges it in
+                # quarantine(); this guards aliased entries stored since
+                if q and self._plan_kernels(entry[0]) & q:
+                    del self._entries[sig]
+                else:
+                    self.hits += 1
+                    self._entries.move_to_end(sig)
+                    return entry[0]
             anchor = self._anchor(dec)
             for plan, a in reversed(self._entries.values()):  # newest first
+                if q and self._plan_kernels(plan) & q:
+                    continue    # never alias onto a quarantined kernel
                 if self._near(anchor, a):
                     self.near_hits += 1
                     self._store(sig, plan, a)   # alias the boundary cell
@@ -479,10 +576,16 @@ class PlanCache:
             if plan is not None:
                 return plan, True
             self.misses += 1
-            plan = self.select(dec)
+            sig = self.signature(dec)
+            exclude = frozenset(self._quarantine.get(sig, ()))
+            plan = self.select(dec, exclude=exclude)
             if self.probe_every and self.misses % self.probe_every == 0:
-                plan = self._probe_pin(dec)
-            self._store(self.signature(dec), plan, self._anchor(dec))
+                probed = self._probe_pin(dec)
+                # the probe frontier doesn't know the quarantine; keep the
+                # cost-model fallback if it re-pinned a struck kernel
+                if not (self._plan_kernels(probed) & exclude):
+                    plan = probed
+            self._store(sig, plan, self._anchor(dec))
             return plan, False
 
     def probe_margin(self) -> float | None:
@@ -531,6 +634,7 @@ class PlanCache:
             out = dict(hits=self.hits, near_hits=self.near_hits,
                        misses=self.misses, entries=len(self._entries),
                        evictions=self.evictions, probes=self.probes,
+                       quarantined=self.quarantined,
                        hit_rate=(self.hits + self.near_hits) / max(total, 1))
             if self.adapt_budget_k:
                 spill = sum(a[0] for a in self._spill_by_sig.values())

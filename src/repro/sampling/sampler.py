@@ -212,6 +212,18 @@ class ClusterSampler:
             chosen = self._draw_clusters()
         return DrawTicket(idx, chosen)
 
+    def fast_forward(self, n: int) -> None:
+        """Advance the sequential draw state to draw number ``n`` (resume
+        path: the next :meth:`draw` returns the ticket batch ``n`` of the
+        uninterrupted stream would have).  The epoch state is a pure
+        function of the draw count, so replaying the draws — a few list
+        pops each, no batch builds — reproduces it exactly."""
+        if n < self._n_drawn:
+            raise ValueError(f"cannot rewind sampler: {n} < {self._n_drawn} "
+                             "draws already consumed")
+        while self._n_drawn < n:
+            self.draw()
+
     def build(self, ticket: DrawTicket) -> SampledBatch:
         """Materialize the ticket's batch: pure given the ticket (per-batch
         randomness streams off (seed, ticket.index)), so it is thread-safe
@@ -324,6 +336,15 @@ class NeighborSampler:
             self._n_drawn += 1
             seeds = self._draw_seeds()
         return DrawTicket(idx, seeds)
+
+    def fast_forward(self, n: int) -> None:
+        """Advance the sequential draw state to draw number ``n`` by
+        replaying draws (see :meth:`ClusterSampler.fast_forward`)."""
+        if n < self._n_drawn:
+            raise ValueError(f"cannot rewind sampler: {n} < {self._n_drawn} "
+                             "draws already consumed")
+        while self._n_drawn < n:
+            self.draw()
 
     def build(self, ticket: DrawTicket) -> SampledBatch:
         """Fanout expansion + padding for one ticket: thread-safe (reads

@@ -12,11 +12,43 @@ after its first compile.
 The loop mirrors :func:`repro.core.gnn.train` (same models, same Adam, same
 masked cross-entropy — here masked to the batch's target nodes) but over
 ``steps`` sampled batches instead of one full graph.
+
+Fault tolerance (distributed/checkpoint.py + distributed/fault_tolerance.py
+revived for the GNN path) — four mechanisms, all driven by GNNConfig knobs
+and testable through the deterministic :class:`~repro.distributed.
+fault_tolerance.FaultPlan` harness:
+
+* **crash-safe checkpoint/resume**: every ``cfg.checkpoint_every`` consumed
+  batches the loop snapshots params + opt state (npz, crc-manifested,
+  atomic tmp+rename, async writer) plus an aux payload — the batch cursor,
+  the sampler draw count, the full PlanCache state (entries, counters,
+  slack-ladder position, quarantine), the per-plan canonical signatures in
+  step-function order, and the loss/hit history so far.  Because batch i
+  is a pure function of (seed, i) and every shared-cache decision is made
+  in batch-index order (the PR-6 determinism contract), restoring that
+  snapshot and replaying from the cursor is *bit-identical* to never
+  having crashed: same loss curve, same committed plans, same hit history.
+  The cache/plan snapshot is captured inside the index-ordered resolve
+  stage (not at consume time): with prefetching, the PlanCache at
+  consume-time of batch i already holds decisions for batches i+1..i+depth,
+  which must not leak into batch i's checkpoint.
+* **transient-failure retry**: the pipeline's racing stages retry with
+  bounded exponential backoff (``cfg.retry_max``), interruptible on
+  close(); non-transient failures fail fast.
+* **kernel quarantine**: a Pallas compile or execution failure quarantines
+  the implicated (kernel, signature) pairs in the PlanCache, re-selects
+  next-best, rebuilds the batch's payloads, and keeps training — a broken
+  kernel costs performance, never the run (the XLA coo floor always runs).
+* **non-finite guard**: the jitted step carries params/opt through
+  unchanged when the loss or any gradient is non-finite
+  (``cfg.nonfinite_guard``), and the skip is counted instead of silently
+  corrupting the model.
 """
 from __future__ import annotations
 
 import threading
 import time
+import warnings
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any
@@ -27,7 +59,10 @@ import numpy as np
 
 from repro.core import decompose as dec_mod, gnn, selector as sel_mod
 from repro.core.plan import KernelPlan
+from repro.distributed import checkpoint as ckpt_mod
+from repro.distributed import fault_tolerance as ft
 from repro.graphs import graph as graph_mod
+from repro.kernels.registry import REGISTRY
 from repro.sampling.plan_cache import (MB_KERNELS, PlanCache, fix_shapes,
                                        plan_payload_keys)
 from repro.sampling.sampler import (ClusterSampler, NeighborSampler,
@@ -114,20 +149,38 @@ def prepare_batch(batch: SampledBatch, cfg: gnn.GNNConfig,
 
 
 def make_sampled_step(cfg: gnn.GNNConfig, plan, counters: dict):
-    """jit step(params, opt, dec, x, labels, target_mask, inv_deg).
+    """jit step(params, opt, dec, x, labels, target_mask, inv_deg)
+    -> (params, opt, loss, finite).
 
     ``dec`` is a *traced argument* (unlike the full-batch step, which
     closes over its static decomposition): its payload arrays change every
     batch while its structure — after :func:`fix_shapes` — does not.
     ``counters['traces']`` increments once per retrace, making the
-    no-retrace contract observable by tests and benchmarks."""
+    no-retrace contract observable by tests and benchmarks.
+
+    With ``cfg.nonfinite_guard`` the update is gated on the loss and every
+    gradient being finite: a NaN/Inf batch carries params and the full
+    Adam state (including the step count ``t``) through unchanged, and the
+    returned ``finite`` flag lets the loop count the skip.  The guard is a
+    few elementwise reductions over arrays the step already touched —
+    noise next to the aggregation matmuls — so it defaults on."""
+    guard = cfg.nonfinite_guard
 
     def step(params, opt, dec, x, labels, target_mask, inv_deg):
         counters["traces"] += 1
         loss, grads = jax.value_and_grad(gnn._loss)(
             params, cfg, dec, x, labels, target_mask, plan, inv_deg)
         new_params, new_opt = gnn._adam_update(params, grads, opt, cfg.lr)
-        return new_params, new_opt, loss
+        if not guard:
+            return new_params, new_opt, loss, jnp.bool_(True)
+        finite = jnp.isfinite(loss)
+        for g in jax.tree.leaves(grads):
+            finite = finite & jnp.all(jnp.isfinite(g))
+        new_params = jax.tree.map(
+            lambda n, o: jnp.where(finite, n, o), new_params, params)
+        new_opt = jax.tree.map(
+            lambda n, o: jnp.where(finite, n, o), new_opt, opt)
+        return new_params, new_opt, loss, finite
 
     return jax.jit(step)
 
@@ -153,6 +206,11 @@ class MinibatchResult:
     #                              prepare), sync ~= their sum
     pipeline: dict | None = None  # BatchPipeline.stats + efficiency_pct /
     #                               loop_seconds (None on the sync path)
+    faults: dict | None = None   # fault-tolerance counters: retries,
+    #                              quarantined, recoveries, nonfinite_skips,
+    #                              checkpoints, resumed_at (-1 = fresh run);
+    #                              on a resumed run losses/hit_history hold
+    #                              the full curve (restored prefix + new)
 
     def hit_rate(self, warmup: int = 0) -> float:
         h = self.hit_history[warmup:]
@@ -204,6 +262,18 @@ class SkeletonCache:
                 self._entries.popitem(last=False)
 
 
+class _CompileFailed:
+    """Sentinel the finish stage hands the consumer when AOT lowering of a
+    (plan, shapes) key raised: the consumer routes it into the kernel
+    quarantine instead of dispatching.  The failure is memoized per shape
+    key so in-flight batches sharing the broken plan reuse the verdict
+    rather than re-tracing — the one failed trace already counted, and
+    ``traces == len(plans)`` must survive a quarantine."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
 @dataclass
 class _Prepared:
     """One fully host-prepared batch: what crosses the producer/consumer
@@ -244,7 +314,9 @@ class _InFlight:
 def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
                     steps: int = 50, verbose: bool = False,
                     eval_batches: int = 4,
-                    plan_cache: PlanCache | None = None) -> MinibatchResult:
+                    plan_cache: PlanCache | None = None,
+                    fault_plan: "ft.FaultPlan | None" = None
+                    ) -> MinibatchResult:
     """Mini-batch driver: Graph -> Sampler -> SampledBatch -> decompose ->
     PlanCache -> jitted step, with per-phase timing and cache accounting.
 
@@ -272,7 +344,18 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     device staging, and AOT pre-compiles race across workers.  With
     ``cfg.adapt_budget_k`` the committed payloads also materialize in the
     ordered stage (the spill feedback that steps the slack ladder must
-    observe batches in order), trading some overlap for determinism."""
+    observe batches in order), trading some overlap for determinism.
+
+    Fault tolerance (see the module docstring for the contract):
+    ``cfg.checkpoint_dir`` + ``cfg.checkpoint_every`` enable periodic
+    crash-safe snapshots, ``cfg.resume_from`` restarts mid-epoch
+    bit-identically to the uninterrupted run, ``cfg.retry_max`` retries
+    transient build/stage failures with backoff, a Pallas compile/execute
+    failure quarantines the (kernel, signature) in the PlanCache and
+    degrades to the next-best plan, and ``cfg.nonfinite_guard`` skips (and
+    counts) NaN/Inf updates.  ``fault_plan`` injects deterministic faults
+    for tests/benchmarks; kernel faults additionally need the registry
+    patched via ``with fault_plan.activate(): ...`` around this call."""
     if cfg.model not in ("gcn", "gin", "sage"):
         raise ValueError(f"mini-batch training supports gcn/gin/sage, "
                          f"not {cfg.model!r}")
@@ -303,6 +386,15 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     params = gnn.init_model(key, cfg, in_dim, graph.n_classes)
     opt = gnn._adam_init(params)
 
+    ckpt = (ckpt_mod.CheckpointManager(cfg.checkpoint_dir,
+                                       keep=cfg.checkpoint_keep)
+            if cfg.checkpoint_dir and cfg.checkpoint_every > 0 else None)
+    retry_policy = (ft.RetryPolicy(max_retries=cfg.retry_max,
+                                   base_delay_s=cfg.retry_base_delay_s)
+                    if cfg.retry_max > 0 else None)
+    fault = dict(retries=0, quarantined=0, recoveries=0,
+                 nonfinite_skips=0, checkpoints=0, resumed_at=-1)
+
     # canonical preserved signature per step-fn key (= plan.layers): the
     # bins fix_shapes stamps on the traced Decomposed are static jit
     # metadata, so every batch sharing a step function must carry the SAME
@@ -321,6 +413,14 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     # if the consumer invokes the executable itself)
     compiled_steps: dict[tuple, Any] = {}
     compile_lock = threading.Lock()
+    # plan.layers -> full KernelPlan at first use: checkpoints persist the
+    # plans in step-fn order so a resumed run can reseed step_fns (and the
+    # reported plans list) in the identical order
+    first_plan: dict[tuple, KernelPlan] = {}
+    # quarantine memos — a plan that failed once is never re-dispatched or
+    # re-traced (consume short-circuits straight into recovery)
+    failed_steps: dict[tuple, BaseException] = {}
+    failed_compiles: dict[tuple, _CompileFailed] = {}
     # abstract (params, opt) twins: pipeline workers AOT-lower the step
     # against these ShapeDtypeStructs for each novel payload shape, so
     # the compile happens off the consumer path without *executing* a
@@ -336,6 +436,7 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
             with compile_lock:
                 fn = step_fns.get(plan.layers)
                 if fn is None:
+                    first_plan[plan.layers] = plan
                     fn = step_fns[plan.layers] = make_sampled_step(
                         cfg, plan, counters)
         return fn
@@ -351,10 +452,20 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         skey = (plan.layers, treedef,
                 tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
         with compile_lock:
+            failed = failed_compiles.get(skey)
+            if failed is not None:
+                return failed
             comp = compiled_steps.get(skey)
             if comp is None:
-                comp = compiled_steps[skey] = fn.lower(
-                    warm_params, warm_opt, *args).compile()
+                try:
+                    comp = compiled_steps[skey] = fn.lower(
+                        warm_params, warm_opt, *args).compile()
+                except Exception as exc:
+                    # broken-kernel lowering: memoize so same-plan batches
+                    # already in flight don't re-trace, and let the
+                    # consumer quarantine + degrade in index order
+                    failed = failed_compiles[skey] = _CompileFailed(exc)
+                    return failed
             return comp
 
     def skeleton_for(batch, slack):
@@ -389,7 +500,7 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         c.prepare_s += time.perf_counter() - t0
         return c
 
-    def resolve_batch(c: _InFlight) -> _InFlight:
+    def resolve_batch(c: _InFlight, gi: int | None = None) -> _InFlight:
         """Ordered stage: every shared-cache decision, made in batch-index
         order — the pipeline runs this through its turnstile; the sync
         path is trivially in order.  plan_for's atomicity alone is not
@@ -435,6 +546,20 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         c.sig = sig_of_layers.setdefault(c.plan.layers,
                                          cache.signature(c.skel))
         get_step_fn(c.plan)  # step-fn (and reported-plan) order pinned here
+        if (ckpt is not None and gi is not None
+                and (gi + 1) % cfg.checkpoint_every == 0):
+            # capture the cache/plan snapshot HERE, inside the index-ordered
+            # stage: at consume-time of batch gi the prefetching pipeline
+            # has already resolved batches gi+1..gi+depth, whose cache
+            # decisions must not leak into batch gi's checkpoint.  The
+            # consumer pairs this snapshot with its own params/opt/losses
+            # when it commits batch gi.
+            with compile_lock:
+                plans = [first_plan[k] for k in step_fns]
+                sigs = [sig_of_layers[k] for k in step_fns]
+            with snap_lock:
+                pending_snaps[gi] = dict(cache=cache.state_dict(),
+                                         plans=plans, sigs=sigs)
         c.prepare_s += time.perf_counter() - t0
         return c
 
@@ -462,27 +587,155 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         return _Prepared(c.batch, c.plan, args, c.hit,
                          c.sample_s, c.prepare_s, fn)
 
-    def prepare_sync(batch, sample_s=0.0) -> _Prepared:
+    def prepare_sync(batch, sample_s=0.0, gi=None) -> _Prepared:
         """The three stages composed inline — the sync training path and
-        the eval loop (index order holds trivially)."""
-        return finish_batch(resolve_batch(build_batch(batch, sample_s)),
+        the eval loop (index order holds trivially; ``gi=None`` — the eval
+        loop — never snapshots)."""
+        return finish_batch(resolve_batch(build_batch(batch, sample_s), gi),
                             stage=False)
 
+    # resolve-time checkpoint snapshots keyed by global batch index,
+    # awaiting their consume-time params/opt
+    pending_snaps: dict[int, dict] = {}
+    snap_lock = threading.Lock()
+
     losses, hit_history = [], []
+    start_i = 0
+    if cfg.resume_from:
+        mgr = (ckpt if ckpt is not None
+               and cfg.resume_from == cfg.checkpoint_dir
+               else ckpt_mod.CheckpointManager(cfg.resume_from,
+                                               keep=cfg.checkpoint_keep))
+        step_no = mgr.latest_valid_step()
+        if step_no is None:
+            # crashed before the first checkpoint landed: a fresh run IS
+            # the correct resume
+            warnings.warn(f"resume_from={cfg.resume_from!r} has no valid "
+                          f"checkpoint; starting fresh", stacklevel=2)
+        else:
+            state, _ = mgr.restore(dict(params=params, opt=opt),
+                                   step=step_no)
+            params, opt = state["params"], state["opt"]
+            aux = mgr.load_aux(step_no)
+            start_i = aux["cursor"]
+            # batch i is a pure function of (seed, i): replaying the draw
+            # count re-aligns the sampler streams exactly
+            sampler.fast_forward(start_i)
+            cache.load_state_dict(aux["cache"])
+            losses = list(aux["losses"])
+            hit_history = list(aux["hit_history"])
+            # reseed step fns in the checkpointed first-use order so the
+            # reported plans list matches the uninterrupted run (restored
+            # plans re-trace lazily on first post-resume dispatch, so
+            # n_traces is NOT comparable across a resume)
+            for plan, sig in zip(aux["plans"], aux["sigs"]):
+                sig_of_layers[plan.layers] = sig
+                get_step_fn(plan)
+            fault["resumed_at"] = start_i
+            if verbose:
+                print(f"resumed from {cfg.resume_from} at batch {start_i}")
+    n_new = max(steps - start_i, 0)
     t_sample, t_prepare, t_step, t_iter = [], [], [], []
     dropped = 0
 
+    def recover_step(item: _Prepared, exc: BaseException):
+        """Kernel quarantine with graceful degradation, on the consumer
+        thread.  Attribute the failure to kernels (the harness's marker if
+        present, else every Pallas-backed kernel the plan dispatches),
+        quarantine them for this batch's signature in the PlanCache,
+        re-select among the survivors, rebuild the batch's payloads, and
+        run the degraded step — escalating if that fails too.  The all-XLA
+        ``coo`` floor is never quarantined, so escalation terminates on a
+        plan that runs; failures that implicate no kernel (or a fixed
+        selector, which has no re-selection freedom) re-raise unchanged —
+        real bugs must fail fast, not degrade."""
+        nonlocal params, opt
+        if fixed_names is not None:
+            raise exc
+        plan, batch = item.plan, item.batch
+        for _ in range(len(MB_KERNELS)):
+            ft.drain_effect_tokens()  # the aborted dispatch's poisoned
+            failed_steps.setdefault(plan.layers, exc)  # token re-raises
+            # at interpreter exit otherwise
+            used = {k for layer in plan.layers for k in layer}
+            named = ft.fault_kernel_from(exc)
+            bad = ({named} if named is not None and named in used
+                   else {k for k in used if REGISTRY.get(k).pallas})
+            bad.discard("coo")
+            if not bad:
+                raise exc
+            slack = cache.bell_slack if cfg.adapt_budget_k else None
+            skel, inv_deg = skeleton_for(batch, slack)
+            sig = cache.signature(skel)
+            fault["quarantined"] += len(cache.quarantine(sig, bad))
+            dec = skel.materialize(MB_KERNELS)
+            new_plan, _ = cache.plan_for(dec)
+            if new_plan.layers == plan.layers:
+                raise exc       # quarantine changed nothing: not a kernel
+            csig = sig_of_layers.setdefault(new_plan.layers, sig)
+            fixed = fix_shapes(dec, pad_budget,
+                               keep=plan_payload_keys(new_plan), stats=csig)
+            args = (fixed, batch.features, batch.labels,
+                    batch.target_mask, inv_deg)
+            fn = get_step_fn(new_plan)
+            if cfg.prefetch_depth > 0:
+                # dispatch the fallback the same way the consumer normally
+                # would (AOT executable): later batches re-selected onto
+                # this plan warm-compile in the workers, and the jit cache
+                # and AOT cache are separate — mixing them here would
+                # double-trace the fallback plan
+                args = jax.device_put(args)
+                fn = warm_compile(fn, new_plan, args)
+                if isinstance(fn, _CompileFailed):
+                    plan, exc = new_plan, fn.exc
+                    continue
+            try:
+                out = fn(params, opt, *args)
+                out[2].block_until_ready()
+                fault["recoveries"] += 1
+                return new_plan, out
+            except Exception as deeper:     # another broken kernel in the
+                plan, exc = new_plan, deeper  # fallback plan: escalate
+        raise exc
+
     def consume(i, item: _Prepared):
         nonlocal params, opt, dropped
+        gi = start_i + i
         dropped += item.batch.meta.get("dropped_edges", 0)
         hit_history.append(item.hit)
         t_sample.append(item.sample_s)
         t_prepare.append(item.prepare_s)
         t0 = time.perf_counter()
-        params, opt, loss = item.step(params, opt, *item.args)
+        plan = item.plan
+        if isinstance(item.step, _CompileFailed):
+            plan, out = recover_step(item, item.step.exc)
+        elif plan.layers in failed_steps:
+            plan, out = recover_step(item, failed_steps[plan.layers])
+        else:
+            try:
+                out = item.step(params, opt, *item.args)
+                out[2].block_until_ready()
+            except Exception as exc:
+                plan, out = recover_step(item, exc)
+        params, opt, loss, finite = out
         loss.block_until_ready()
         t_step.append(time.perf_counter() - t0)
+        if not bool(finite):
+            fault["nonfinite_skips"] += 1
         losses.append(float(loss))
+        if ckpt is not None:
+            with snap_lock:
+                snap = pending_snaps.pop(gi, None)
+            if snap is not None:
+                # consumer-time params/opt + the resolve-time cache/plan
+                # snapshot = exactly the state a fresh run would hold after
+                # batch gi with nothing in flight
+                aux = dict(cursor=gi + 1, losses=list(losses),
+                           hit_history=list(hit_history), **snap)
+                ckpt.save(gi + 1, dict(params=params, opt=opt), aux=aux)
+                fault["checkpoints"] += 1
+        if fault_plan is not None:
+            fault_plan.on_committed(gi)
         if verbose and i % 10 == 0:
             cs = cache.stats
             sk = (f" skel[h={skel_cache.hits} m={skel_cache.misses}]"
@@ -491,42 +744,64 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
                   f"spill={cs['spill_frac']:.3f}]"
                   if "bell_slack" in cs else "")
             print(f"batch {i:4d} loss {float(loss):.4f} "
-                  f"cache_hit={item.hit} plan={item.plan.layers[0]} "
+                  f"cache_hit={item.hit} plan={plan.layers[0]} "
                   f"cache[h={cs['hits']} nh={cs['near_hits']} "
                   f"m={cs['misses']} ev={cs['evictions']} "
                   f"pr={cs['probes']} rate={cs['hit_rate']:.2f}]"
                   f"{sk}{bk}")
 
+    def build_with_faults(ticket):
+        """Sampler build + the harness's per-batch hooks — the unit the
+        retry policy re-runs on a transient failure (injection precedes
+        the skeleton build, so a retried item never double-counts the
+        skeleton/plan caches)."""
+        t0 = time.perf_counter()
+        batch = sampler.build(ticket)
+        if fault_plan is not None:
+            batch = fault_plan.on_built(ticket.index, batch)
+        return build_batch(batch, time.perf_counter() - t0)
+
     pipe_stats = None
     t_loop0 = time.perf_counter()
-    if cfg.prefetch_depth > 0:
-        def work_stage(idx, ticket):
-            t0 = time.perf_counter()
-            batch = sampler.build(ticket)
-            return build_batch(batch, time.perf_counter() - t0)
+    try:
+        if cfg.prefetch_depth > 0:
+            pipe = BatchPipeline(
+                sampler.draw, lambda idx, ticket: build_with_faults(ticket),
+                n_items=n_new,
+                resolve_fn=lambda idx, c: resolve_batch(c, start_i + idx),
+                finish_fn=lambda idx, c: finish_batch(c, stage=True),
+                prefetch_depth=cfg.prefetch_depth,
+                workers=cfg.pipeline_workers,
+                name=f"{cfg.sampler}-{cfg.model}",
+                retry=retry_policy, retryable=ft.default_transient)
+            try:
+                for i in range(n_new):
+                    it0 = time.perf_counter()
+                    consume(i, pipe.get())
+                    t_iter.append(time.perf_counter() - it0)
+            finally:
+                pipe_stats = pipe.stats
+                pipe.close()
+            fault["retries"] += pipe_stats["retries"]
+        else:
+            def on_retry(attempt):
+                fault["retries"] += 1
 
-        pipe = BatchPipeline(sampler.draw, work_stage, n_items=steps,
-                             resolve_fn=lambda idx, c: resolve_batch(c),
-                             finish_fn=lambda idx, c: finish_batch(
-                                 c, stage=True),
-                             prefetch_depth=cfg.prefetch_depth,
-                             workers=cfg.pipeline_workers,
-                             name=f"{cfg.sampler}-{cfg.model}")
-        try:
-            for i in range(steps):
+            for i in range(n_new):
                 it0 = time.perf_counter()
-                consume(i, pipe.get())
+                ticket = sampler.draw()
+                if retry_policy is None:
+                    c = build_with_faults(ticket)
+                else:
+                    c = retry_policy.run(build_with_faults, ticket,
+                                         on_retry=on_retry,
+                                         retryable=ft.default_transient)
+                consume(i, finish_batch(resolve_batch(c, start_i + i),
+                                        stage=False))
                 t_iter.append(time.perf_counter() - it0)
-        finally:
-            pipe_stats = pipe.stats
-            pipe.close()
-    else:
-        for i in range(steps):
-            it0 = time.perf_counter()
-            t0 = time.perf_counter()
-            batch = sampler.sample()
-            consume(i, prepare_sync(batch, time.perf_counter() - t0))
-            t_iter.append(time.perf_counter() - it0)
+    finally:
+        if ckpt is not None:
+            ckpt.wait()     # a crash-in-flight still lands the last save
     loop_s = time.perf_counter() - t_loop0
     if pipe_stats is not None:
         # device-busy share of the steady-state consumer loop: 100% = the
@@ -537,7 +812,10 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         steady = float(np.sum(t_iter[1:]))
         pipe_stats.update(
             loop_seconds=loop_s,
-            efficiency_pct=100.0 * busy / max(steady, 1e-12))
+            efficiency_pct=100.0 * busy / max(steady, 1e-12),
+            # robustness counters ride the pipeline stats into bench JSON
+            retries=fault["retries"], quarantined=fault["quarantined"],
+            nonfinite_skips=fault["nonfinite_skips"])
         if verbose:
             print(f"pipeline: depth={pipe_stats['depth']} "
                   f"workers={pipe_stats['workers']} "
@@ -578,4 +856,5 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         pipeline=pipe_stats,
         dropped_edges=dropped, plan_cache=cache,
         skeleton_hits=skel_cache.hits if skel_cache else 0,
-        skeleton_misses=skel_cache.misses if skel_cache else 0)
+        skeleton_misses=skel_cache.misses if skel_cache else 0,
+        faults=dict(fault))

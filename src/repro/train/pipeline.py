@@ -41,6 +41,16 @@ that item's :meth:`get` (the pipeline closes itself first); a failed item
 vacates its turnstile slot so later items never deadlock behind it.
 :meth:`close` is idempotent, joins every worker, and is safe mid-stream —
 used directly or via the context manager.
+
+With a ``retry`` policy (``distributed.fault_tolerance.RetryPolicy``) the
+two *racing* stages — ``work_fn`` and ``finish_fn``, which are pure per
+item — are retried with exponential backoff on transient failures before
+the item is failed; ``retryable`` classifies (default: everything), so
+deterministic bugs still fail fast on the first attempt.  The stateful
+stages (draw, resolve) are never retried: re-running them would replay
+shared-state mutations.  Backoff waits on the pipeline's stop event, so
+:meth:`close` during a mid-backoff retry joins promptly instead of
+sleeping out the delay ladder; per-item retry counts ride :attr:`stats`.
 """
 from __future__ import annotations
 
@@ -81,7 +91,9 @@ class BatchPipeline:
                  prefetch_depth: int = 4, workers: int = 2,
                  name: str = "sampler", warn_after: int = 16,
                  resolve_fn: Callable[[int, Any], Any] | None = None,
-                 finish_fn: Callable[[int, Any], Any] | None = None):
+                 finish_fn: Callable[[int, Any], Any] | None = None,
+                 retry: Any = None,
+                 retryable: Callable[[BaseException], bool] | None = None):
         self.n_items = int(n_items)
         self.depth = max(int(prefetch_depth), 1)
         # more workers than permits can never run concurrently
@@ -92,6 +104,9 @@ class BatchPipeline:
         self._work_fn = work_fn
         self._resolve_fn = resolve_fn
         self._finish_fn = finish_fn
+        self._retry = retry
+        self._retryable = retryable
+        self.retries = 0           # transient-failure retries absorbed
         self._slots = threading.Semaphore(self.depth)
         self._draw_lock = threading.Lock()
         self._stat_lock = threading.Lock()
@@ -156,7 +171,7 @@ class BatchPipeline:
                         self._post(idx, False, e)
                         continue
                 try:
-                    item = self._work_fn(idx, ticket)
+                    item = self._run_racing(self._work_fn, idx, ticket)
                     if self._resolve_fn is not None:
                         self._await_turn(idx)
                         try:
@@ -166,7 +181,7 @@ class BatchPipeline:
                     else:
                         self._finish_turn(idx)
                     if self._finish_fn is not None:
-                        item = self._finish_fn(idx, item)
+                        item = self._run_racing(self._finish_fn, idx, item)
                 except _Cancelled:
                     return
                 except BaseException as e:       # noqa: BLE001 — propagated
@@ -178,6 +193,23 @@ class BatchPipeline:
             with self._cond:
                 self._live -= 1
                 self._cond.notify_all()
+
+    def _run_racing(self, fn, idx: int, item):
+        """Run a racing (pure, per-item) stage, absorbing transient
+        failures through the retry policy.  The backoff waits on the stop
+        event (close() interrupts it); retries of an item re-run the stage
+        from the same input, which is safe because the racing stages make
+        no shared-state decisions."""
+        if self._retry is None:
+            return fn(idx, item)
+
+        def on_retry(attempt):
+            with self._stat_lock:
+                self.retries += 1
+
+        return self._retry.run(fn, idx, item, on_retry=on_retry,
+                               cancel=self._stop,
+                               retryable=self._retryable)
 
     def _await_turn(self, idx: int) -> None:
         """Block until every lower index has finished its resolve stage."""
@@ -283,4 +315,4 @@ class BatchPipeline:
                     wait_full_s=self.wait_full_s,
                     wait_empty_s=self.wait_empty_s,
                     ready_mean=(sum(ready) / len(ready)) if ready else 0.0,
-                    starved=self.starved)
+                    starved=self.starved, retries=self.retries)

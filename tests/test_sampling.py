@@ -160,7 +160,8 @@ def test_plan_cache_hit_miss_and_eviction():
     plan2, hit2 = cache.plan_for(dec)
     assert not hit1 and hit2 and plan2 is plan1
     assert cache.stats == dict(hits=1, near_hits=0, misses=1, entries=1,
-                               evictions=0, probes=0, hit_rate=0.5)
+                               evictions=0, probes=0, hit_rate=0.5,
+                               quarantined=0)
     # the memoized plan equals fresh selection (cache changes cost, not
     # outcome)
     assert cache.select(dec).layers == plan1.layers
