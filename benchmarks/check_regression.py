@@ -12,6 +12,12 @@ other way — they fail when the value *drops* below 1/threshold of the
 baseline, and are exempt from the sub-50us skip (efficiency is a percent,
 not a latency).
 
+Rows named in ``ABS_MAX`` carry an absolute ceiling checked against the
+*current* run regardless of the baseline (they are percents small enough
+that the sub-50us skip would otherwise exempt them): today that is
+``telemetry_overhead_pct``, the repro.obs contract that disabled
+telemetry hooks cost < 2% of the per-batch host prepare.
+
   PYTHONPATH=src python -m benchmarks.run --quick --json bench-out
   PYTHONPATH=src python -m benchmarks.check_regression bench-out
   PYTHONPATH=src python -m benchmarks.check_regression bench-out --write
@@ -34,6 +40,9 @@ MIN_US = 50.0
 # hidden overlap microseconds and device-busy percent shrink when the
 # pipeline stops overlapping prepare with compute
 HIGHER_IS_BETTER = ("pipeline_efficiency_pct", "step_overlap_us")
+# absolute ceilings on CURRENT rows (no baseline needed): contract gates
+# rather than drift gates
+ABS_MAX = {"telemetry_overhead_pct": 2.0}
 
 
 def load_rows(bench_dir: str) -> dict:
@@ -50,6 +59,12 @@ def load_rows(bench_dir: str) -> dict:
 
 def gate(current: dict, baseline: dict, threshold: float) -> list[str]:
     failures = []
+    for key, us in sorted(current.items()):
+        cap = ABS_MAX.get(key.rsplit("/", 1)[-1])
+        if cap is not None and math.isfinite(us) and us > cap:
+            failures.append(
+                f"{key}: {us:.2f} exceeds absolute cap {cap:.2f} "
+                f"(contract gate, independent of baseline)")
     for key, base_us in sorted(baseline.get("rows", {}).items()):
         us = current.get(key)
         if us is None:

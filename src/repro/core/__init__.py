@@ -161,6 +161,35 @@ exceptions, compile/execute kernel faults, non-finite losses, simulated
 crashes at chosen batch indices) driving the fault-tolerance tests and
 benchmarks/robustness.py.
 
+Observability (repro.obs, wired through the whole column above) is one
+Telemetry facade with three instruments and a hard contract:
+
+  * span tracer -- every pipeline stage (draw -> build -> resolve ->
+    finish -> device step), checkpoint write, probe, and retry backoff
+    opens a thread-attributed span; export is Chrome trace-event JSON
+    (cfg.trace_out), one swim lane per worker thread, so the overlap the
+    pipeline claims is inspectable per run.
+  * metrics registry -- thread-safe counters/gauges/bounded histograms
+    (p50/p99) that PlanCache, BatchPipeline, CheckpointManager, and the
+    fault-tolerance loop publish into; the legacy dict views
+    (PlanCache.stats, BatchPipeline.stats, MinibatchResult.cache /
+    pipeline / faults) are assembled FROM the registry with unchanged
+    keys, and the registry is always live (counters are the system of
+    record even with telemetry off).
+  * selector audit -- every minted plan recorded with its per-(layer,
+    tier) kernel choice and modeled seconds, every probe as a
+    (kernel, modeled, measured) pair, quarantine/degrade events, and
+    observed per-plan step times; SelectorAudit.calibration() derives
+    the per-kernel predicted-vs-measured error report surfaced through
+    MinibatchResult.telemetry and exported as JSONL (cfg.telemetry_out).
+
+Contract: telemetry is append-only and never read by selection, the
+cache, or the pipeline -- enabling it leaves losses, committed plans,
+hit history, and trace counts bit-identical (tests/test_obs.py); with
+telemetry off (the default) call sites pay only null-object hooks,
+measured by benchmarks/minibatch.py (telemetry_overhead_pct) and gated
+below 2% of the per-batch prepare cost in CI.
+
 MB_KERNELS membership rule: a kernel is admissible iff its payload has a
 fixed pytree shape *at the edge budget* — every array dim a function of
 (edge budget, node budget, block size), nothing data-dependent.  BlockDiag

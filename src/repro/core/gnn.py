@@ -104,6 +104,16 @@ class GNNConfig:
     # update inside the jitted step (params and Adam state carried
     # unchanged, the skip counted) instead of silently corrupting params
     nonfinite_guard: bool = True
+    # --- observability (repro.obs; train/gnn_steps.py) --------------------
+    # telemetry=True enables the span tracer + selector audit for the run
+    # (the metrics registry is always live); trace_out / telemetry_out
+    # write the Chrome trace-event JSON and the JSONL audit export when
+    # training finishes, and either being set implies telemetry on.
+    # Telemetry is append-only: losses, plans, hit history, and n_traces
+    # are bit-identical with it on or off.
+    telemetry: bool = False
+    trace_out: str = ""             # Chrome trace path ("" = no export)
+    telemetry_out: str = ""         # audit JSONL path ("" = no export)
 
 
 def prepare(graph: graph_mod.Graph, cfg: GNNConfig) -> dec_mod.Decomposed:

@@ -173,6 +173,27 @@ def plan_layer_cost(dec: Decomposed, feat_dim: int, dtype=np.float32,
     return total
 
 
+def plan_modeled_costs(dec: Decomposed, layers, pairs, dtype=np.float32,
+                       hw: HwModel | None = None,
+                       epilogues=None) -> list[list[float]]:
+    """Modeled seconds for each *chosen* kernel of a committed plan:
+    ``layers`` is the plan's per-layer kernel-name tuples (aligned with
+    ``dec.subgraphs``), ``pairs`` the ``(in_dim, agg_dim)`` per layer as
+    in PlanCache.  Returns one cost row per layer — the selector audit's
+    "modeled" side of the calibration report.  Unfused kernels carry
+    their shared-transform share exactly as in selection, so the numbers
+    match what ``select_by_cost_model`` compared."""
+    hw = hw or default_hw()
+    pairs = list(pairs)
+    epilogues = epilogues or [None] * len(pairs)
+    out = []
+    for names, (fin, fout), ep in zip(layers, pairs, epilogues):
+        share = _transform_share(dec, fout, dtype, hw, fin, ep)
+        out.append([candidate_cost(sub, name, fout, dtype, hw, fin, share)
+                    for sub, name in zip(dec.subgraphs, names)])
+    return out
+
+
 def _time_candidate(sub: Subgraph, spec, fin: int | None, fout: int,
                     dtype, iters: int) -> float:
     """Median wall seconds for one candidate on synthetic full-width
@@ -205,7 +226,8 @@ def probe_topk(dec: Decomposed, pairs, dtype=np.float32,
                epilogues=None, k_max: int | None = None,
                margin: float | None = None,
                time_budget_s: float | None = None,
-               errs: list | None = None) -> list[tuple[str, ...]]:
+               errs: list | None = None,
+               timings: dict | None = None) -> list[tuple[str, ...]]:
     """Wall-clock probe restricted to the ``k`` cheapest cost-model
     candidates per (layer, subgraph).
 
@@ -233,7 +255,10 @@ def probe_topk(dec: Decomposed, pairs, dtype=np.float32,
 
     ``errs``, when given, accrues ``(modeled_seconds, measured_seconds)``
     per timed candidate — the PlanCache folds these into its running
-    error band, closing the model-vs-measurement loop.
+    error band, closing the model-vs-measurement loop.  ``timings``, when
+    given, is filled with ``(sub_name, kernel, in_dim, agg_dim) ->
+    (modeled_seconds, measured_seconds)`` per timed candidate — the
+    attributed form the selector audit records.
 
     ``time_dec`` optionally supplies the payloads to *time* (aligned with
     ``dec.subgraphs``) while ``dec`` still drives the cost-model ranking:
@@ -286,6 +311,11 @@ def probe_topk(dec: Decomposed, pairs, dtype=np.float32,
                         errs.append((modeled[spec.name] -
                                      (0.0 if spec.fused else share),
                                      timed[key]))
+                    if timings is not None:
+                        timings[(sub.name, spec.name, fin or 0, fout)] = (
+                            modeled[spec.name] -
+                            (0.0 if spec.fused else share),
+                            timed[key])
                 t = timed[key] + (0.0 if spec.fused else share)
                 if best_t is None or t < best_t:
                     best_name, best_t = spec.name, t

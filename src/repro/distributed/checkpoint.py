@@ -25,11 +25,14 @@ import pickle
 import re
 import shutil
 import threading
+import time
 import zlib
 from typing import Any
 
 import jax
 import numpy as np
+
+from repro.obs import Telemetry
 
 
 def _flatten_with_paths(tree):
@@ -43,10 +46,14 @@ def _flatten_with_paths(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True,
+                 telemetry: Telemetry | None = None):
         self.dir = directory
         self.keep = keep
         self.async_write = async_write
+        self.tele = telemetry if telemetry is not None else Telemetry()
+        self._saves = self.tele.metrics.counter("checkpoint.saves")
+        self._write_s = self.tele.metrics.histogram("checkpoint.write_s")
         self._thread: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
         # a crash mid-write leaves a step_<N>.tmp/ behind; it was never
@@ -65,7 +72,8 @@ class CheckpointManager:
         self.wait()   # never two writers
         if self.async_write and not blocking:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_tree, aux), daemon=True)
+                target=self._write, args=(step, host_tree, aux), daemon=True,
+                name="ckpt-writer")
             self._thread.start()
         else:
             self._write(step, host_tree, aux)
@@ -76,6 +84,13 @@ class CheckpointManager:
             self._thread = None
 
     def _write(self, step: int, host_tree, aux: Any = None) -> None:
+        t0 = time.perf_counter()
+        with self.tele.tracer.span("checkpoint.write", cat="io", step=step):
+            self._write_inner(step, host_tree, aux)
+        self._saves.inc()
+        self._write_s.observe(time.perf_counter() - t0)
+
+    def _write_inner(self, step: int, host_tree, aux: Any = None) -> None:
         tmp = os.path.join(self.dir, f"step_{step:012d}.tmp")
         final = os.path.join(self.dir, f"step_{step:012d}")
         if os.path.exists(tmp):

@@ -133,6 +133,18 @@ class RetryPolicy:
     max_retries: int = 3
     base_delay_s: float = 1.0
     backoff: float = 2.0
+    # optional obs.Tracer: each backoff wait records a "retry.backoff" span
+    # on the waiting thread (attempt + delay visible in the trace)
+    tracer: object = None
+
+    def _wait(self, delay, attempt, _sleep, cancel):
+        if _sleep is not None:
+            _sleep(delay)
+        elif cancel is not None:
+            if cancel.wait(delay):   # interruptible backoff
+                raise                # noqa: PLE0704 — re-raise active exc
+        else:
+            time.sleep(delay)
 
     def run(self, fn, *args, on_retry=None, _sleep=None, cancel=None,
             retryable=None, **kwargs):
@@ -157,13 +169,12 @@ class RetryPolicy:
                     raise
                 if on_retry is not None:
                     on_retry(attempt)
-                if _sleep is not None:
-                    _sleep(delay)
-                elif cancel is not None:
-                    if cancel.wait(delay):   # interruptible backoff
-                        raise
+                if self.tracer is not None:
+                    with self.tracer.span("retry.backoff", cat="fault",
+                                          attempt=attempt, delay_s=delay):
+                        self._wait(delay, attempt, _sleep, cancel)
                 else:
-                    time.sleep(delay)
+                    self._wait(delay, attempt, _sleep, cancel)
                 delay *= self.backoff
 
 

@@ -36,6 +36,27 @@ from repro.core import formats, selector as sel_mod
 from repro.core.decompose import Decomposed
 from repro.core.plan import KernelPlan
 from repro.kernels.registry import REGISTRY
+from repro.obs import Telemetry
+
+# the cache's published counters; each is a registry Counter surfaced as a
+# same-named attribute (plan_cache.<name>) so `self.hits += 1` style code
+# and the stats view read/write one system of record
+_COUNTERS = ("hits", "near_hits", "misses", "evictions", "probes",
+             "quarantined", "slack_changes")
+
+
+def _counter_attr(key: str):
+    """Attribute <-> registry-counter bridge: reads return the counter's
+    value, writes (including ``+=``) land in the counter.  Lost-update
+    safety comes from the cache's own RLock, which every mutating path
+    already holds."""
+    def fget(self):
+        return self._counters[key].value
+
+    def fset(self, v):
+        self._counters[key].set(v)
+
+    return property(fget, fset)
 
 # Kernels admitted to the mini-batch path.  Membership rule: a kernel is
 # admissible iff its payload has a *fixed pytree shape at the edge budget* —
@@ -252,7 +273,14 @@ class PlanCache:
                  bell_slack: float = 2.0, spill_target: float = 0.05,
                  slack_ladder: tuple = (1.0, 1.5, 2.0, 3.0, 4.0),
                  spill_min_obs: int = 8,
-                 max_slack_changes: int | None = None):
+                 max_slack_changes: int | None = None,
+                 telemetry: Telemetry | None = None):
+        # telemetry first: the counter attributes below are properties
+        # over registry counters, so the registry must exist before any
+        # `self.hits = 0` style assignment runs
+        self.tele = telemetry if telemetry is not None else Telemetry()
+        self._counters = {k: self.tele.metrics.counter(f"plan_cache.{k}")
+                          for k in _COUNTERS}
         self.pairs = [(None, w) if isinstance(w, int) else tuple(w)
                       for w in width_pairs]
         # per-layer EpilogueSpecs aligned with the pairs: selection and
@@ -322,6 +350,32 @@ class PlanCache:
         self.evictions = 0
         self.probes = 0
         self.quarantined = 0    # (kernel, signature) pairs quarantined
+
+    # registry-backed counters (see _counter_attr): the same numbers the
+    # stats view reports are what the run's metrics snapshot exports
+    hits = _counter_attr("hits")
+    near_hits = _counter_attr("near_hits")
+    misses = _counter_attr("misses")
+    evictions = _counter_attr("evictions")
+    probes = _counter_attr("probes")
+    quarantined = _counter_attr("quarantined")
+    slack_changes = _counter_attr("slack_changes")
+
+    def attach_telemetry(self, telemetry: Telemetry) -> None:
+        """Re-home this cache's instruments into a run's shared Telemetry
+        (the driver calls this when handed a pre-built cache): audit and
+        tracer swap to the run's, and the counters migrate into the run's
+        registry carrying their current values, so the metrics snapshot
+        and the legacy stats view stay one system of record."""
+        with self._lock:
+            self.tele = telemetry
+            moved = {}
+            for key, c in self._counters.items():
+                nc = telemetry.metrics.counter(c.name)
+                if nc is not c:
+                    nc.set(c.value)
+                moved[key] = nc
+            self._counters = moved
 
     def _dec_slack(self, dec) -> float:
         """The slack this decomposition was *built* with (baked into its
@@ -467,6 +521,10 @@ class PlanCache:
             fresh = {str(k) for k in kernels} - {"coo"} - q
             q.update(fresh)
             self.quarantined += len(fresh)
+            if fresh:
+                self.tele.audit.quarantine(sig=sig, kernels=fresh)
+                self.tele.tracer.instant("quarantine", cat="cache",
+                                         kernels=sorted(fresh))
             if fresh and sig in self._entries:
                 plan, _ = self._entries[sig]
                 if self._plan_kernels(plan) & q:
@@ -579,12 +637,26 @@ class PlanCache:
             sig = self.signature(dec)
             exclude = frozenset(self._quarantine.get(sig, ()))
             plan = self.select(dec, exclude=exclude)
+            source = "cost_model"
             if self.probe_every and self.misses % self.probe_every == 0:
                 probed = self._probe_pin(dec)
                 # the probe frontier doesn't know the quarantine; keep the
                 # cost-model fallback if it re-pinned a struck kernel
                 if not (self._plan_kernels(probed) & exclude):
                     plan = probed
+                    source = "probe"
+            if self.tele.audit.enabled:
+                # every committed plan leaves a receipt: per-(layer, tier)
+                # kernel choices with the modeled seconds selection compared
+                modeled = sel_mod.plan_modeled_costs(
+                    dec, plan.layers, self.pairs, self.dtype, hw=self.hw,
+                    epilogues=self.epilogues)
+                self.tele.audit.plan(
+                    sig=sig, layers=plan.layers,
+                    tiers=[s.name for s in dec.subgraphs],
+                    modeled_s=modeled, source=source,
+                    bell_slack=(self._bell_slack if self.adapt_budget_k
+                                else None))
             self._store(sig, plan, self._anchor(dec))
             return plan, False
 
@@ -617,14 +689,23 @@ class PlanCache:
         self.probes += 1
         time_dec = (fix_shapes(dec, self.edge_budget)
                     if self.edge_budget else None)
-        layers = sel_mod.probe_topk(dec, self.pairs, self.dtype, hw=self.hw,
-                                    iters=self.probe_iters,
-                                    time_dec=time_dec,
-                                    epilogues=self.epilogues,
-                                    k_max=self.probe_k_max,
-                                    margin=self.probe_margin(),
-                                    time_budget_s=self.probe_budget_s,
-                                    errs=self._probe_errs)
+        timings = {} if self.tele.audit.enabled else None
+        with self.tele.tracer.span("probe", cat="cache"):
+            layers = sel_mod.probe_topk(dec, self.pairs, self.dtype,
+                                        hw=self.hw,
+                                        iters=self.probe_iters,
+                                        time_dec=time_dec,
+                                        epilogues=self.epilogues,
+                                        k_max=self.probe_k_max,
+                                        margin=self.probe_margin(),
+                                        time_budget_s=self.probe_budget_s,
+                                        errs=self._probe_errs,
+                                        timings=timings)
+        for (tier, kernel, fin, fout), (mod, meas) in sorted(
+                (timings or {}).items()):
+            self.tele.audit.probe(tier=tier, kernel=kernel, modeled_s=mod,
+                                  measured_s=meas, in_dim=fin or None,
+                                  agg_dim=fout)
         return KernelPlan.make(dec, layers, epilogues=self.epilogues)
 
     @property

@@ -46,6 +46,7 @@ fault_tolerance.FaultPlan` harness:
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 import warnings
@@ -63,11 +64,14 @@ from repro.distributed import checkpoint as ckpt_mod
 from repro.distributed import fault_tolerance as ft
 from repro.graphs import graph as graph_mod
 from repro.kernels.registry import REGISTRY
+from repro.obs import Telemetry, enable_verbose, get_logger
 from repro.sampling.plan_cache import (MB_KERNELS, PlanCache, fix_shapes,
                                        plan_payload_keys)
 from repro.sampling.sampler import (ClusterSampler, NeighborSampler,
                                     SampledBatch)
 from repro.train.pipeline import BatchPipeline
+
+_log = get_logger("repro.train")
 
 
 def make_sampler(graph: graph_mod.Graph, cfg: gnn.GNNConfig):
@@ -211,6 +215,11 @@ class MinibatchResult:
     #                              checkpoints, resumed_at (-1 = fresh run);
     #                              on a resumed run losses/hit_history hold
     #                              the full curve (restored prefix + new)
+    telemetry: dict | None = None  # Telemetry.summary(): span/audit volume,
+    #                                the selector calibration report, and
+    #                                the full metrics snapshot (the cache/
+    #                                pipeline/faults views above are
+    #                                assembled from the same registry)
 
     def hit_rate(self, warmup: int = 0) -> float:
         h = self.hit_history[warmup:]
@@ -315,7 +324,8 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
                     steps: int = 50, verbose: bool = False,
                     eval_batches: int = 4,
                     plan_cache: PlanCache | None = None,
-                    fault_plan: "ft.FaultPlan | None" = None
+                    fault_plan: "ft.FaultPlan | None" = None,
+                    telemetry: Telemetry | None = None
                     ) -> MinibatchResult:
     """Mini-batch driver: Graph -> Sampler -> SampledBatch -> decompose ->
     PlanCache -> jitted step, with per-phase timing and cache accounting.
@@ -355,10 +365,28 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     degrades to the next-best plan, and ``cfg.nonfinite_guard`` skips (and
     counts) NaN/Inf updates.  ``fault_plan`` injects deterministic faults
     for tests/benchmarks; kernel faults additionally need the registry
-    patched via ``with fault_plan.activate(): ...`` around this call."""
+    patched via ``with fault_plan.activate(): ...`` around this call.
+
+    Observability (repro.obs): ``telemetry`` (or ``cfg.telemetry`` /
+    ``cfg.trace_out`` / ``cfg.telemetry_out``) turns on the span tracer
+    and the selector audit for the run; the metrics registry is always
+    live (the ``cache``/``pipeline``/``faults`` result views are
+    assembled from it).  ``MinibatchResult.telemetry`` carries the
+    summary — including the cost-model calibration report — and
+    ``cfg.trace_out`` / ``cfg.telemetry_out`` write the Chrome trace and
+    the JSONL audit export when the run finishes.  Telemetry is
+    append-only: it never feeds back into cache decisions or batch
+    order, so enabling it leaves losses, plans, hit history, and
+    n_traces bit-identical."""
     if cfg.model not in ("gcn", "gin", "sage"):
         raise ValueError(f"mini-batch training supports gcn/gin/sage, "
                          f"not {cfg.model!r}")
+    if verbose:
+        enable_verbose()
+    tele = (telemetry if telemetry is not None
+            else Telemetry(enabled=bool(cfg.telemetry or cfg.trace_out
+                                        or cfg.telemetry_out)))
+    tracer = tele.tracer
     fixed_names = (tuple(cfg.fixed_kernels) if cfg.selector == "fixed"
                    else None)
     sampler = make_sampler(graph, cfg)
@@ -368,6 +396,10 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     # total budget the padded payloads see: sampled edges + GCN self-loops
     pad_budget = sampler.edge_budget + (sampler.node_budget
                                         if cfg.model == "gcn" else 0)
+    if plan_cache is not None:
+        # a pre-built cache re-homes its instruments into this run's
+        # telemetry so the result views and exports see one registry
+        plan_cache.attach_telemetry(tele)
     cache = plan_cache or PlanCache(pairs, dtype=np.float32,
                                     hw=sel_mod.default_hw(),
                                     max_entries=cfg.cache_entries,
@@ -378,7 +410,8 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
                                     probe_budget_s=cfg.probe_budget_s,
                                     adapt_budget_k=cfg.adapt_budget_k,
                                     max_slack_changes=(
-                                        cfg.max_ladder_recompiles))
+                                        cfg.max_ladder_recompiles),
+                                    telemetry=tele)
     skel_cache = (SkeletonCache(cfg.skeleton_cache_entries)
                   if cfg.skeleton_cache_entries > 0 else None)
 
@@ -387,13 +420,25 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     opt = gnn._adam_init(params)
 
     ckpt = (ckpt_mod.CheckpointManager(cfg.checkpoint_dir,
-                                       keep=cfg.checkpoint_keep)
+                                       keep=cfg.checkpoint_keep,
+                                       telemetry=tele)
             if cfg.checkpoint_dir and cfg.checkpoint_every > 0 else None)
     retry_policy = (ft.RetryPolicy(max_retries=cfg.retry_max,
-                                   base_delay_s=cfg.retry_base_delay_s)
+                                   base_delay_s=cfg.retry_base_delay_s,
+                                   tracer=tracer if tele.enabled else None)
                     if cfg.retry_max > 0 else None)
-    fault = dict(retries=0, quarantined=0, recoveries=0,
-                 nonfinite_skips=0, checkpoints=0, resumed_at=-1)
+    # fault-tolerance counters live in the run's metrics registry; the
+    # MinibatchResult.faults view is assembled from them at the end
+    fault = {k: tele.metrics.counter(f"faults.{k}")
+             for k in ("retries", "quarantined", "recoveries",
+                       "nonfinite_skips", "checkpoints")}
+    f_resumed = tele.metrics.gauge("faults.resumed_at")
+    f_resumed.set(-1)
+
+    def fault_view() -> dict:
+        out = {k: c.value for k, c in fault.items()}
+        out["resumed_at"] = f_resumed.value
+        return out
 
     # canonical preserved signature per step-fn key (= plan.layers): the
     # bins fix_shapes stamps on the traced Decomposed are static jit
@@ -488,15 +533,16 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         step) — plus the fixed selector's payloads, which involve no
         shared-state decision."""
         t0 = time.perf_counter()
-        slack = cache.bell_slack if cfg.adapt_budget_k else None
-        skel, inv_deg = skeleton_for(batch, slack)
-        c = _InFlight(batch=batch, skel=skel, inv_deg=inv_deg, slack=slack,
-                      sample_s=sample_s, prepare_s=0.0)
-        if fixed_names is not None and not cfg.adapt_budget_k:
-            c.dec = skel.materialize(fixed_names)
-            c.plan = KernelPlan.make(c.dec, fixed_names,
-                                     n_layers=cfg.n_layers,
-                                     epilogues=epilogues)
+        with tracer.span("build", cat="host"):
+            slack = cache.bell_slack if cfg.adapt_budget_k else None
+            skel, inv_deg = skeleton_for(batch, slack)
+            c = _InFlight(batch=batch, skel=skel, inv_deg=inv_deg,
+                          slack=slack, sample_s=sample_s, prepare_s=0.0)
+            if fixed_names is not None and not cfg.adapt_budget_k:
+                c.dec = skel.materialize(fixed_names)
+                c.plan = KernelPlan.make(c.dec, fixed_names,
+                                         n_layers=cfg.n_layers,
+                                         epilogues=epilogues)
         c.prepare_s += time.perf_counter() - t0
         return c
 
@@ -512,54 +558,56 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         runs here too — the sync loop pays it at the same point, and
         steady-state misses are rare."""
         t0 = time.perf_counter()
-        if cfg.adapt_budget_k:
-            slack = cache.bell_slack
-            if slack != c.slack:    # ladder stepped while c was in flight
-                c.slack = slack
-                c.skel, c.inv_deg = skeleton_for(c.batch, slack)
-                c.dec = c.plan = None
-        if fixed_names is not None:
-            if c.dec is None:       # adapt_budget_k defers the build here
-                c.dec = c.skel.materialize(fixed_names)
-                c.plan = KernelPlan.make(c.dec, fixed_names,
-                                         n_layers=cfg.n_layers,
-                                         epilogues=epilogues)
-            c.hit = True
-        else:
-            # signature/anchor read tier stats only, so the skeleton is
-            # consumed directly — no payload-free Decomposed on the hot path
-            c.plan = cache.lookup(c.skel)
-            c.hit = c.plan is not None
-            if not c.hit:
-                c.dec = c.skel.materialize(MB_KERNELS)
-                c.plan, _ = cache.plan_for(c.dec)
-            elif cfg.adapt_budget_k:
-                # the spill-feedback stream steps the slack ladder, so it
-                # must observe batches in order too: the committed
-                # payloads materialize here while the autotuner is live
-                # (with it off — the default — a hit's payloads race in
-                # the finish stage)
-                c.dec = c.skel.materialize(plan_payload_keys(c.plan))
-        if c.dec is not None:
-            # committed capped-bell payloads feed the budget-K autotuner
-            cache.observe_bell(c.dec)
-        c.sig = sig_of_layers.setdefault(c.plan.layers,
-                                         cache.signature(c.skel))
-        get_step_fn(c.plan)  # step-fn (and reported-plan) order pinned here
-        if (ckpt is not None and gi is not None
-                and (gi + 1) % cfg.checkpoint_every == 0):
-            # capture the cache/plan snapshot HERE, inside the index-ordered
-            # stage: at consume-time of batch gi the prefetching pipeline
-            # has already resolved batches gi+1..gi+depth, whose cache
-            # decisions must not leak into batch gi's checkpoint.  The
-            # consumer pairs this snapshot with its own params/opt/losses
-            # when it commits batch gi.
-            with compile_lock:
-                plans = [first_plan[k] for k in step_fns]
-                sigs = [sig_of_layers[k] for k in step_fns]
-            with snap_lock:
-                pending_snaps[gi] = dict(cache=cache.state_dict(),
-                                         plans=plans, sigs=sigs)
+        with tracer.span("resolve", cat="host"):
+            if cfg.adapt_budget_k:
+                slack = cache.bell_slack
+                if slack != c.slack:   # ladder stepped while c was in flight
+                    c.slack = slack
+                    c.skel, c.inv_deg = skeleton_for(c.batch, slack)
+                    c.dec = c.plan = None
+            if fixed_names is not None:
+                if c.dec is None:      # adapt_budget_k defers the build here
+                    c.dec = c.skel.materialize(fixed_names)
+                    c.plan = KernelPlan.make(c.dec, fixed_names,
+                                             n_layers=cfg.n_layers,
+                                             epilogues=epilogues)
+                c.hit = True
+            else:
+                # signature/anchor read tier stats only, so the skeleton is
+                # consumed directly — no payload-free Decomposed on the hot
+                # path
+                c.plan = cache.lookup(c.skel)
+                c.hit = c.plan is not None
+                if not c.hit:
+                    c.dec = c.skel.materialize(MB_KERNELS)
+                    c.plan, _ = cache.plan_for(c.dec)
+                elif cfg.adapt_budget_k:
+                    # the spill-feedback stream steps the slack ladder, so
+                    # it must observe batches in order too: the committed
+                    # payloads materialize here while the autotuner is live
+                    # (with it off — the default — a hit's payloads race in
+                    # the finish stage)
+                    c.dec = c.skel.materialize(plan_payload_keys(c.plan))
+            if c.dec is not None:
+                # committed capped-bell payloads feed the budget-K autotuner
+                cache.observe_bell(c.dec)
+            c.sig = sig_of_layers.setdefault(c.plan.layers,
+                                             cache.signature(c.skel))
+            get_step_fn(c.plan)  # step-fn (and reported-plan) order pinned
+            if (ckpt is not None and gi is not None
+                    and (gi + 1) % cfg.checkpoint_every == 0):
+                # capture the cache/plan snapshot HERE, inside the
+                # index-ordered stage: at consume-time of batch gi the
+                # prefetching pipeline has already resolved batches
+                # gi+1..gi+depth, whose cache decisions must not leak into
+                # batch gi's checkpoint.  The consumer pairs this snapshot
+                # with its own params/opt/losses when it commits batch gi.
+                with compile_lock:
+                    plans = [first_plan[k] for k in step_fns]
+                    sigs = [sig_of_layers[k] for k in step_fns]
+                with snap_lock:
+                    pending_snaps[gi] = dict(cache=cache.state_dict(),
+                                             plans=plans, sigs=sigs)
         c.prepare_s += time.perf_counter() - t0
         return c
 
@@ -568,21 +616,22 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         and (async) stage device transfers + AOT-compile, so the
         consumer's dispatch never pays a host->device copy or a compile."""
         t0 = time.perf_counter()
-        if c.dec is None:
-            # tier i materializes only the payloads the plan dispatches
-            # on tier i (per-subgraph keep sets)
-            c.dec = c.skel.materialize(plan_payload_keys(c.plan))
-        # only the payloads this plan dispatches cross the jit boundary;
-        # the keep sets are a function of the plan, so batches sharing a
-        # step function share one treedef
-        fixed = fix_shapes(c.dec, pad_budget, keep=plan_payload_keys(c.plan),
-                           stats=c.sig)
-        args = (fixed, c.batch.features, c.batch.labels,
-                c.batch.target_mask, c.inv_deg)
-        fn = get_step_fn(c.plan)
-        if stage:
-            args = jax.device_put(args)
-            fn = warm_compile(fn, c.plan, args)
+        with tracer.span("finish", cat="host"):
+            if c.dec is None:
+                # tier i materializes only the payloads the plan dispatches
+                # on tier i (per-subgraph keep sets)
+                c.dec = c.skel.materialize(plan_payload_keys(c.plan))
+            # only the payloads this plan dispatches cross the jit
+            # boundary; the keep sets are a function of the plan, so
+            # batches sharing a step function share one treedef
+            fixed = fix_shapes(c.dec, pad_budget,
+                               keep=plan_payload_keys(c.plan), stats=c.sig)
+            args = (fixed, c.batch.features, c.batch.labels,
+                    c.batch.target_mask, c.inv_deg)
+            fn = get_step_fn(c.plan)
+            if stage:
+                args = jax.device_put(args)
+                fn = warm_compile(fn, c.plan, args)
         c.prepare_s += time.perf_counter() - t0
         return _Prepared(c.batch, c.plan, args, c.hit,
                          c.sample_s, c.prepare_s, fn)
@@ -631,9 +680,9 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
             for plan, sig in zip(aux["plans"], aux["sigs"]):
                 sig_of_layers[plan.layers] = sig
                 get_step_fn(plan)
-            fault["resumed_at"] = start_i
-            if verbose:
-                print(f"resumed from {cfg.resume_from} at batch {start_i}")
+            f_resumed.set(start_i)
+            _log.info("resumed from %s at batch %d",
+                      cfg.resume_from, start_i)
     n_new = max(steps - start_i, 0)
     t_sample, t_prepare, t_step, t_iter = [], [], [], []
     dropped = 0
@@ -667,7 +716,7 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
             slack = cache.bell_slack if cfg.adapt_budget_k else None
             skel, inv_deg = skeleton_for(batch, slack)
             sig = cache.signature(skel)
-            fault["quarantined"] += len(cache.quarantine(sig, bad))
+            fault["quarantined"].inc(len(cache.quarantine(sig, bad)))
             dec = skel.materialize(MB_KERNELS)
             new_plan, _ = cache.plan_for(dec)
             if new_plan.layers == plan.layers:
@@ -692,7 +741,10 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
             try:
                 out = fn(params, opt, *args)
                 out[2].block_until_ready()
-                fault["recoveries"] += 1
+                fault["recoveries"].inc()
+                tele.audit.degrade(from_layers=item.plan.layers,
+                                   to_layers=new_plan.layers,
+                                   error=str(exc))
                 return new_plan, out
             except Exception as deeper:     # another broken kernel in the
                 plan, exc = new_plan, deeper  # fallback plan: escalate
@@ -707,21 +759,26 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         t_prepare.append(item.prepare_s)
         t0 = time.perf_counter()
         plan = item.plan
-        if isinstance(item.step, _CompileFailed):
-            plan, out = recover_step(item, item.step.exc)
-        elif plan.layers in failed_steps:
-            plan, out = recover_step(item, failed_steps[plan.layers])
-        else:
-            try:
-                out = item.step(params, opt, *item.args)
-                out[2].block_until_ready()
-            except Exception as exc:
-                plan, out = recover_step(item, exc)
-        params, opt, loss, finite = out
-        loss.block_until_ready()
-        t_step.append(time.perf_counter() - t0)
+        with tracer.span("device_step", cat="device", index=gi,
+                         hit=item.hit):
+            if isinstance(item.step, _CompileFailed):
+                plan, out = recover_step(item, item.step.exc)
+            elif plan.layers in failed_steps:
+                plan, out = recover_step(item, failed_steps[plan.layers])
+            else:
+                try:
+                    out = item.step(params, opt, *item.args)
+                    out[2].block_until_ready()
+                except Exception as exc:
+                    plan, out = recover_step(item, exc)
+            params, opt, loss, finite = out
+            loss.block_until_ready()
+        dt = time.perf_counter() - t0
+        t_step.append(dt)
+        # the measured side of the per-plan calibration report
+        tele.audit.observe_step(plan.layers, dt)
         if not bool(finite):
-            fault["nonfinite_skips"] += 1
+            fault["nonfinite_skips"].inc()
         losses.append(float(loss))
         if ckpt is not None:
             with snap_lock:
@@ -733,22 +790,22 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
                 aux = dict(cursor=gi + 1, losses=list(losses),
                            hit_history=list(hit_history), **snap)
                 ckpt.save(gi + 1, dict(params=params, opt=opt), aux=aux)
-                fault["checkpoints"] += 1
+                fault["checkpoints"].inc()
         if fault_plan is not None:
             fault_plan.on_committed(gi)
-        if verbose and i % 10 == 0:
+        if i % 10 == 0 and _log.isEnabledFor(logging.INFO):
             cs = cache.stats
             sk = (f" skel[h={skel_cache.hits} m={skel_cache.misses}]"
                   if skel_cache is not None else "")
             bk = (f" bellK[slack={cs['bell_slack']:.2f} "
                   f"spill={cs['spill_frac']:.3f}]"
                   if "bell_slack" in cs else "")
-            print(f"batch {i:4d} loss {float(loss):.4f} "
-                  f"cache_hit={item.hit} plan={plan.layers[0]} "
-                  f"cache[h={cs['hits']} nh={cs['near_hits']} "
-                  f"m={cs['misses']} ev={cs['evictions']} "
-                  f"pr={cs['probes']} rate={cs['hit_rate']:.2f}]"
-                  f"{sk}{bk}")
+            _log.info(f"batch {i:4d} loss {float(loss):.4f} "
+                      f"cache_hit={item.hit} plan={plan.layers[0]} "
+                      f"cache[h={cs['hits']} nh={cs['near_hits']} "
+                      f"m={cs['misses']} ev={cs['evictions']} "
+                      f"pr={cs['probes']} rate={cs['hit_rate']:.2f}]"
+                      f"{sk}{bk}")
 
     def build_with_faults(ticket):
         """Sampler build + the harness's per-batch hooks — the unit the
@@ -756,9 +813,10 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         the skeleton build, so a retried item never double-counts the
         skeleton/plan caches)."""
         t0 = time.perf_counter()
-        batch = sampler.build(ticket)
-        if fault_plan is not None:
-            batch = fault_plan.on_built(ticket.index, batch)
+        with tracer.span("sample", cat="host", index=ticket.index):
+            batch = sampler.build(ticket)
+            if fault_plan is not None:
+                batch = fault_plan.on_built(ticket.index, batch)
         return build_batch(batch, time.perf_counter() - t0)
 
     pipe_stats = None
@@ -773,7 +831,8 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
                 prefetch_depth=cfg.prefetch_depth,
                 workers=cfg.pipeline_workers,
                 name=f"{cfg.sampler}-{cfg.model}",
-                retry=retry_policy, retryable=ft.default_transient)
+                retry=retry_policy, retryable=ft.default_transient,
+                telemetry=tele)
             try:
                 for i in range(n_new):
                     it0 = time.perf_counter()
@@ -782,10 +841,10 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
             finally:
                 pipe_stats = pipe.stats
                 pipe.close()
-            fault["retries"] += pipe_stats["retries"]
+            fault["retries"].inc(pipe_stats["retries"])
         else:
             def on_retry(attempt):
-                fault["retries"] += 1
+                fault["retries"].inc()
 
             for i in range(n_new):
                 it0 = time.perf_counter()
@@ -814,15 +873,16 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
             loop_seconds=loop_s,
             efficiency_pct=100.0 * busy / max(steady, 1e-12),
             # robustness counters ride the pipeline stats into bench JSON
-            retries=fault["retries"], quarantined=fault["quarantined"],
-            nonfinite_skips=fault["nonfinite_skips"])
-        if verbose:
-            print(f"pipeline: depth={pipe_stats['depth']} "
-                  f"workers={pipe_stats['workers']} "
-                  f"ready_mean={pipe_stats['ready_mean']:.1f} "
-                  f"wait_full={pipe_stats['wait_full_s']*1e3:.1f}ms "
-                  f"wait_empty={pipe_stats['wait_empty_s']*1e3:.1f}ms "
-                  f"efficiency={pipe_stats['efficiency_pct']:.0f}%")
+            retries=fault["retries"].value,
+            quarantined=fault["quarantined"].value,
+            nonfinite_skips=fault["nonfinite_skips"].value)
+        _log.info("pipeline: depth=%d workers=%d ready_mean=%.1f "
+                  "wait_full=%.1fms wait_empty=%.1fms efficiency=%.0f%%",
+                  pipe_stats["depth"], pipe_stats["workers"],
+                  pipe_stats["ready_mean"],
+                  pipe_stats["wait_full_s"] * 1e3,
+                  pipe_stats["wait_empty_s"] * 1e3,
+                  pipe_stats["efficiency_pct"])
 
     # snapshot before the eval loop below adds its own (mostly-hit)
     # lookups and step-fn seeds: the reported rate and plans list are the
@@ -844,6 +904,14 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         correct += int((pred[tm] == batch.labels[tm]).sum())
         total += int(tm.sum())
 
+    if tele.enabled and (cfg.trace_out or cfg.telemetry_out):
+        tele.export(trace_out=cfg.trace_out or None,
+                    jsonl_out=cfg.telemetry_out or None)
+        if cfg.trace_out:
+            _log.info("wrote Chrome trace to %s", cfg.trace_out)
+        if cfg.telemetry_out:
+            _log.info("wrote telemetry JSONL to %s", cfg.telemetry_out)
+
     med = lambda ts, skip=0: float(np.median(ts[skip:])) if ts[skip:] else 0.0
     return MinibatchResult(
         losses=losses, accuracy=correct / max(total, 1),
@@ -857,4 +925,5 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         dropped_edges=dropped, plan_cache=cache,
         skeleton_hits=skel_cache.hits if skel_cache else 0,
         skeleton_misses=skel_cache.misses if skel_cache else 0,
-        faults=dict(fault))
+        faults=fault_view(),
+        telemetry=tele.summary())

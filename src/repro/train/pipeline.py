@@ -59,7 +59,23 @@ import time
 import warnings
 from typing import Any, Callable
 
+from repro.obs import Telemetry
+
 __all__ = ["BatchPipeline", "PipelineError"]
+
+
+def _pipe_counter(key: str):
+    """Attribute <-> registry-counter bridge (``pipeline.<key>``): the
+    backpressure totals the stats view reports live in the run's metrics
+    registry.  Mutating paths already serialize on the pipeline's own
+    locks, so the read-modify-write of ``+=`` is safe."""
+    def fget(self):
+        return self._counters[key].value
+
+    def fset(self, v):
+        self._counters[key].set(v)
+
+    return property(fget, fset)
 
 
 class PipelineError(RuntimeError):
@@ -93,7 +109,16 @@ class BatchPipeline:
                  resolve_fn: Callable[[int, Any], Any] | None = None,
                  finish_fn: Callable[[int, Any], Any] | None = None,
                  retry: Any = None,
-                 retryable: Callable[[BaseException], bool] | None = None):
+                 retryable: Callable[[BaseException], bool] | None = None,
+                 telemetry: Telemetry | None = None):
+        # telemetry before the counter-backed attributes below
+        self.tele = telemetry if telemetry is not None else Telemetry()
+        m = self.tele.metrics
+        self._counters = {k: m.counter(f"pipeline.{k}")
+                          for k in ("wait_full_s", "wait_empty_s", "retries")}
+        # ready-queue depth observed at each get(): mean drives the
+        # starvation warn-once, p50/p99 ride the metrics snapshot
+        self._ready = m.histogram("pipeline.ready_depth")
         self.n_items = int(n_items)
         self.depth = max(int(prefetch_depth), 1)
         # more workers than permits can never run concurrently
@@ -124,7 +149,6 @@ class BatchPipeline:
         self._closed = False
         self.wait_full_s = 0.0     # producers blocked: every slot staged
         self.wait_empty_s = 0.0    # consumer blocked: next item not ready
-        self._ready_hist: list[int] = []
         self.starved = False       # warn-once latch (queue below half-full)
         self._threads = [
             threading.Thread(target=self._worker, daemon=True,
@@ -133,6 +157,11 @@ class BatchPipeline:
         self._live = self.workers
         for t in self._threads:
             t.start()
+
+    # registry-backed backpressure counters (see _pipe_counter)
+    wait_full_s = _pipe_counter("wait_full_s")
+    wait_empty_s = _pipe_counter("wait_empty_s")
+    retries = _pipe_counter("retries")
 
     # -- producer side ------------------------------------------------------
 
@@ -165,7 +194,9 @@ class BatchPipeline:
                     try:
                         # in-order under the lock: batch idx's sequential
                         # draw is identical to the single-threaded path
-                        ticket = self._draw_fn()
+                        with self.tele.tracer.span("draw", cat="pipeline",
+                                                   index=idx):
+                            ticket = self._draw_fn()
                     except BaseException as e:   # noqa: BLE001 — propagated
                         self._finish_turn(idx)
                         self._post(idx, False, e)
@@ -213,11 +244,12 @@ class BatchPipeline:
 
     def _await_turn(self, idx: int) -> None:
         """Block until every lower index has finished its resolve stage."""
-        with self._turn_cond:
-            while self._next_turn != idx:
-                if self._stop.is_set():
-                    raise _Cancelled()
-                self._turn_cond.wait(0.05)
+        with self.tele.tracer.span("turn_wait", cat="pipeline", index=idx):
+            with self._turn_cond:
+                while self._next_turn != idx:
+                    if self._stop.is_set():
+                        raise _Cancelled()
+                    self._turn_cond.wait(0.05)
 
     def _finish_turn(self, idx: int) -> None:
         """Mark ``idx``'s resolve slot done (idempotent, any order): failed
@@ -250,7 +282,7 @@ class BatchPipeline:
                 f"pipeline {self.name!r} already delivered all "
                 f"{self.n_items} items")
         with self._cond:
-            self._ready_hist.append(len(self._results))
+            self._ready.observe(len(self._results))
             t0 = time.perf_counter()
             while self._next_out not in self._results:
                 if self._live == 0:
@@ -269,9 +301,9 @@ class BatchPipeline:
         return payload
 
     def _maybe_warn(self) -> None:
-        if self.starved or len(self._ready_hist) < self.warn_after:
+        if self.starved or self._ready.count < self.warn_after:
             return
-        mean_ready = sum(self._ready_hist) / len(self._ready_hist)
+        mean_ready = self._ready.mean
         if mean_ready < self.depth / 2:
             self.starved = True
             warnings.warn(
@@ -308,11 +340,12 @@ class BatchPipeline:
 
     @property
     def stats(self) -> dict:
-        """Backpressure counters for MinibatchResult / benches / logs."""
-        ready = self._ready_hist
+        """Backpressure counters for MinibatchResult / benches / logs —
+        assembled from the run's metrics registry (same instruments the
+        telemetry snapshot exports), keys unchanged."""
         return dict(depth=self.depth, workers=self.workers,
                     delivered=self._next_out,
                     wait_full_s=self.wait_full_s,
                     wait_empty_s=self.wait_empty_s,
-                    ready_mean=(sum(ready) / len(ready)) if ready else 0.0,
+                    ready_mean=self._ready.mean,
                     starved=self.starved, retries=self.retries)
