@@ -38,11 +38,15 @@ DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
 MIN_US = 50.0
 # row names (the part after "<benchmark>/") whose value regresses DOWNWARD:
 # hidden overlap microseconds and device-busy percent shrink when the
-# pipeline stops overlapping prepare with compute
-HIGHER_IS_BETTER = ("pipeline_efficiency_pct", "step_overlap_us")
+# pipeline stops overlapping prepare with compute; serving throughput
+# shrinks when the read path slows down
+HIGHER_IS_BETTER = ("pipeline_efficiency_pct", "step_overlap_us",
+                    "serve_qps")
 # absolute ceilings on CURRENT rows (no baseline needed): contract gates
-# rather than drift gates
-ABS_MAX = {"telemetry_overhead_pct": 2.0}
+# rather than drift gates.  serve_warm_traces = 0 is the serving
+# warm-start contract: a warmed server never compiles in steady state.
+ABS_MAX = {"telemetry_overhead_pct": 2.0,
+           "serve_warm_traces": 0.0}
 
 
 def load_rows(bench_dir: str) -> dict:

@@ -25,7 +25,7 @@ def main() -> None:
     from benchmarks import (ablation_o123, common, density_analysis,
                             end_to_end, format_crossover, fused,
                             granularity_baselines, memory_overhead,
-                            minibatch, overhead, robustness)
+                            minibatch, overhead, robustness, serving)
 
     scale = 0.04 if args.quick else 0.08
     jobs = {
@@ -52,6 +52,10 @@ def main() -> None:
         "robustness": lambda: robustness.run(
             scale=0.03 if args.quick else 0.04,
             steps=9 if args.quick else 12),
+        "serving": lambda: serving.run(
+            scale=0.1 if args.quick else 0.15,
+            train_steps=6 if args.quick else 8,
+            seconds=0.6 if args.quick else 1.0),
         "fig12_memory_overhead": lambda: memory_overhead.run(),
     }
     only = set(args.only.split(",")) if args.only else None

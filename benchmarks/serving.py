@@ -1,0 +1,90 @@
+"""Serving benchmark: open-loop load against the in-process GNN inference
+server (repro.serve) — steady-state latency, warm-start compile count,
+and behavior under injected overload.
+
+Rows:
+  * ``serve_p50_us`` / ``serve_p99_us`` — admitted-request latency over
+    the steady-state window (arrival rate ~half of measured capacity),
+    AFTER a traffic warmup window so compiles never pollute the tail
+  * ``serve_qps``        — completed requests/second in the same window
+    (HIGHER_IS_BETTER in check_regression)
+  * ``serve_warm_traces`` — new jit traces recorded during the measured
+    steady-state window; the warm-start contract says 0 (ABS_MAX gate)
+  * ``serve_shed_pct``   — share of requests shed during the overload
+    window (arrival rate ~6x capacity): nonzero means the server sheds
+    instead of queuing unboundedly, while admitted requests keep making
+    their deadlines (``serve_over_p99_us`` reports their tail)
+  * ``serve_over_p99_us`` — admitted-request p99 during overload; the CI
+    serving-smoke job asserts it stays within the configured deadline
+
+Overload is *relative*: arrival rates are derived from the server's own
+EWMA service estimate after warmup, so the same benchmark overloads a
+fast desktop and a throttled CI runner alike.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.launch.serve import build_server, open_loop_burst
+from repro.serve import OK, ServeConfig
+
+
+def _latencies_us(futs) -> np.ndarray:
+    out = []
+    for f in futs:
+        status, value = f.result(timeout=30)
+        if status == OK:
+            out.append(value["latency_s"] * 1e6)
+    return np.asarray(out)
+
+
+def run(dataset: str = "cora", scale: float = 0.15, train_steps: int = 8,
+        deadline_ms: float = 150.0, seconds: float = 1.0,
+        verbose: bool = True) -> dict:
+    scfg = ServeConfig(deadline_s=deadline_ms / 1e3, queue_limit=32,
+                       max_batch=8, seed=0)
+    server = build_server(dataset, scale=scale, train_steps=train_steps,
+                          batch_nodes=32, fanouts=(4, 2), serve_cfg=scfg)
+    server.warmup()
+
+    with server:
+        # traffic warmup: converge the EWMA service estimate and absorb
+        # any first-signature plan selections before measuring
+        for f in open_loop_burst(server, qps=50, seconds=0.5, seed=1):
+            f.result(timeout=30)
+        est = server.stats()["est_service_s"]
+        capacity = scfg.max_batch / max(est, 1e-6)   # requests/second
+
+        traces0 = server.n_traces
+        steady_qps = max(capacity * 0.5, 20.0)
+        futs = open_loop_burst(server, qps=steady_qps, seconds=seconds,
+                               seed=2)
+        lat = _latencies_us(futs)
+        warm_traces = server.n_traces - traces0
+        qps_done = len(lat) / max(seconds, 1e-9)
+
+        over_qps = max(capacity * 6.0, 200.0)
+        over = open_loop_burst(server, qps=over_qps, seconds=seconds,
+                               seed=3)
+        over_lat = _latencies_us(over)
+    st = server.stats()
+
+    emit("serve_p50_us", float(np.percentile(lat, 50)) if len(lat) else 0.0,
+         f"steady {steady_qps:.0f} qps offered")
+    emit("serve_p99_us", float(np.percentile(lat, 99)) if len(lat) else 0.0,
+         f"{len(lat)} admitted")
+    emit("serve_qps", qps_done, "completed/s, steady window")
+    emit("serve_warm_traces", float(warm_traces),
+         "new jit traces in steady state (contract: 0)")
+    emit("serve_shed_pct", st["shed_pct"],
+         f"overload {over_qps:.0f} qps offered; shed {st['shed']}")
+    emit("serve_over_p99_us",
+         float(np.percentile(over_lat, 99)) if len(over_lat) else 0.0,
+         f"admitted p99 under overload (deadline {deadline_ms * 1e3:.0f}us)")
+    if verbose:
+        print(f"# capacity~{capacity:.0f} qps, est_service "
+              f"{est * 1e3:.1f}ms, rung {st['rung']}, "
+              f"degrades {st['degrades']}, timeouts {st['timeouts']}")
+    return dict(stats=st, steady_lat_us=lat, over_lat_us=over_lat,
+                warm_traces=warm_traces, deadline_us=deadline_ms * 1e3)

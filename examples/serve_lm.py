@@ -2,10 +2,59 @@
 batch of prompts, greedy-decode continuations.
 
   PYTHONPATH=src python examples/serve_lm.py --arch rwkv6_7b --gen 24
+
+(Previously lived in repro.launch.serve, which is now the GNN inference
+server's CLI; the LM demo moved here whole.)
 """
 import argparse
+import time
 
-from repro.launch import serve
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.launch import mesh as mesh_mod
+from repro.models import lm
+from repro.train import steps as steps_mod
+
+
+def serve_lm(arch: str, *, reduced: bool = True, batch: int = 4,
+             prompt_len: int = 16, gen: int = 16, seed: int = 0,
+             use_mesh=None, verbose: bool = True) -> dict:
+    cfg = configs.get_config(arch, reduced=reduced)
+    assert cfg.input_mode == "tokens" and cfg.family == "decoder", \
+        "serving demo drives token-mode decoder archs"
+    mesh = use_mesh or mesh_mod.host_local_mesh()
+    rng = np.random.default_rng(seed)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),
+                          jnp.int32)
+
+    params = lm.init_params(jax.random.PRNGKey(seed), cfg)
+    s_max = prompt_len + gen
+    caches = lm.init_cache(cfg, batch, s_max)
+    serve_step = jax.jit(steps_mod.make_serve_step(cfg))
+
+    toks = []
+    t0 = time.perf_counter()
+    with mesh:
+        # one-shot cache-producing prefill, then token-by-token decode
+        prefill_fn = jax.jit(lambda p, b: lm.prefill(p, cfg, b, s_max),
+                             static_argnames=())
+        logits, caches = prefill_fn(params, dict(tokens=prompts))
+        nxt = jnp.argmax(logits[:, -1:, : cfg.vocab],
+                         axis=-1).astype(jnp.int32)
+        for t in range(prompt_len, s_max):
+            toks.append(nxt)
+            nxt, logits, caches = serve_step(params, caches, nxt, t)
+    jax.block_until_ready(nxt)
+    dt = time.perf_counter() - t0
+    out = jnp.concatenate(toks, axis=1)
+    tput = batch * (prompt_len + gen) / dt
+    if verbose:
+        print(f"{arch}: generated {out.shape} in {dt:.2f}s "
+              f"({tput:.1f} tok/s incl. compile)")
+    return dict(tokens=np.asarray(out), seconds=dt, tokens_per_s=tput)
 
 
 def main():
@@ -15,8 +64,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     args = ap.parse_args()
-    out = serve.serve(args.arch, reduced=True, batch=args.batch,
-                      prompt_len=args.prompt_len, gen=args.gen)
+    out = serve_lm(args.arch, reduced=True, batch=args.batch,
+                   prompt_len=args.prompt_len, gen=args.gen)
     print("generated token ids:\n", out["tokens"])
 
 

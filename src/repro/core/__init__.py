@@ -199,4 +199,52 @@ formats.bell_budget_k(budget, n_pad, B), block payloads padded to the cap
 with masked zero-blocks, overflow edges spilled to an in-payload COO tier
 (aggregated by segment-sum unfused, by per-edge gathered transform fused).
 ELL stays full-batch-only (max-degree width is data-dependent).
+
+Online inference serving (repro.serve, driven by repro.launch.serve and
+benchmarks/serving.py) is the read path over a trained model — the same
+sampled column as mini-batch training, forward-only, under deadlines:
+
+  submit(node, deadline) -> serve.admission.AdmissionController
+      |  bounded FIFO, shed at submit time when the queue is full OR the
+      |  EWMA-predicted wait already blows the request's deadline (a shed
+      |  future resolves immediately; serving it late helps nobody)
+      v
+  collect() -- deadline-aware micro-batch: block for the first request,
+      |  coalesce arrivals until the size target (max_batch) or until
+      |  waiting longer would eat the earliest deadline's service slack,
+      |  whichever first (max_wait_s caps a lone request's wait);
+      |  requests whose slack no longer covers one service time expire
+      |  as ``timeout`` here — *before* dispatch, never after
+      v
+  serve.ego.EgoNetSampler.build -- NeighborSampler.ego_ticket: the
+      |  caller's deduped seed set through the sampler's pure fixed-
+      |  budget build (bit-identical to training batches for the same
+      |  seeds+index; a retried build reproduces its batch exactly);
+      |  transient failures absorbed by ft.RetryPolicy with decorrelated
+      |  jitter (seeded: deterministic per run index, decorrelated
+      |  across concurrent retries)
+      v
+  prepare_skeleton -> PlanCache lookup/plan_for -> fix_shapes at the
+      |  rung's pad budget -> AOT executable keyed (plan, shapes) —
+      |  compiled at warmup, which preloads a PlanCache.save/load disk
+      |  snapshot (crc-checked atomic write; corruption falls back to
+      |  cold start) and AOT-warms the full (plan x rung) cross product,
+      |  so a warm-started server records ZERO new traces in steady
+      |  state (n_traces is the observable, gated by serve_warm_traces
+      |  in CI)
+      v
+  logits -> per-request futures (status ok/shed/timeout/error)
+
+Resilience invariants (tests/test_serving.py + the CI serving-smoke
+job): an ADMITTED request that reaches dispatch is never dropped — a
+kernel fault on its batch quarantines the implicated kernels in the
+shared PlanCache and re-serves the same batch on the re-selected plan
+(the coo floor terminates escalation); overload is answered by shedding
+and by serve.degrade.DegradationLadder stepping the fanout rungs down
+to a cheaper pre-compiled shape — hysteretic (down_after <
+up_after, post-transition cooldown), so an alternating load signal
+never moves the rung; load generation in benchmarks/serving.py is
+open-loop (arrivals do not slow when the server does), with rates
+derived from the server's own measured capacity so the overload window
+overloads any machine.
 """

@@ -133,9 +133,27 @@ class RetryPolicy:
     max_retries: int = 3
     base_delay_s: float = 1.0
     backoff: float = 2.0
+    # decorrelated jitter (Brooker, "Exponential Backoff and Jitter"):
+    # each wait draws uniform(base, 3 * previous_wait) capped at
+    # max_delay_s, so concurrent callers that failed together (a burst of
+    # serving requests hitting one flaky build) spread their retries out
+    # instead of re-arriving in lockstep as a retry storm.  Off by default
+    # (plain exponential ladder, bit-reproducible timing); with it on,
+    # determinism comes from ``seed``: the Nth ``run()`` call on this
+    # policy draws from stream (seed, N), a pure function of call order —
+    # tests replay exact delay sequences, while concurrent calls still
+    # decorrelate because each holds its own stream.
+    jitter: bool = False
+    max_delay_s: float | None = None
+    seed: int | None = None
     # optional obs.Tracer: each backoff wait records a "retry.backoff" span
     # on the waiting thread (attempt + delay visible in the trace)
     tracer: object = None
+    _run_count: int = field(default=0, init=False, repr=False,
+                            compare=False)
+    _count_lock: threading.Lock = field(default_factory=threading.Lock,
+                                        init=False, repr=False,
+                                        compare=False)
 
     def _wait(self, delay, attempt, _sleep, cancel):
         if _sleep is not None:
@@ -146,9 +164,40 @@ class RetryPolicy:
         else:
             time.sleep(delay)
 
+    def _jitter_rng(self) -> np.random.Generator:
+        """One rng stream per run() call: deterministic under ``seed``
+        (stream i belongs to the i-th call, whatever thread makes it),
+        OS-entropy fresh when seed is None."""
+        with self._count_lock:
+            i = self._run_count
+            self._run_count += 1
+        if self.seed is None:
+            return np.random.default_rng()
+        return np.random.default_rng(np.random.SeedSequence((self.seed, i)))
+
+    def delays(self, rng: np.random.Generator | None = None) -> list[float]:
+        """The full backoff-delay ladder one ``run()`` would use: plain
+        exponential without jitter, decorrelated-jitter draws with it
+        (pass the rng to inspect a specific stream; tests)."""
+        cap = (self.max_delay_s if self.max_delay_s is not None
+               else self.base_delay_s * self.backoff ** self.max_retries)
+        if self.jitter and rng is None:
+            rng = self._jitter_rng()
+        out, delay = [], self.base_delay_s
+        for _ in range(self.max_retries):
+            if self.jitter:
+                delay = min(cap, float(rng.uniform(self.base_delay_s,
+                                                   3.0 * delay)))
+                out.append(delay)
+            else:
+                out.append(min(delay, cap))
+                delay *= self.backoff
+        return out
+
     def run(self, fn, *args, on_retry=None, _sleep=None, cancel=None,
             retryable=None, **kwargs):
-        """Call ``fn`` with bounded exponential-backoff retries.
+        """Call ``fn`` with bounded backoff retries (exponential, or
+        decorrelated-jitter when ``jitter=True``).
 
         ``retryable(exc) -> bool`` classifies failures; a non-retryable
         exception re-raises immediately (fatal-fails-fast).  ``cancel`` is
@@ -156,7 +205,7 @@ class RetryPolicy:
         so a shutdown mid-backoff re-raises promptly rather than pinning a
         worker thread for the rest of the delay ladder.  ``_sleep``
         overrides the wait entirely (tests)."""
-        delay = self.base_delay_s
+        ladder = iter(self.delays())
         for attempt in range(self.max_retries + 1):
             try:
                 return fn(*args, **kwargs)
@@ -169,13 +218,13 @@ class RetryPolicy:
                     raise
                 if on_retry is not None:
                     on_retry(attempt)
+                delay = next(ladder)
                 if self.tracer is not None:
                     with self.tracer.span("retry.backoff", cat="fault",
                                           attempt=attempt, delay_s=delay):
                         self._wait(delay, attempt, _sleep, cancel)
                 else:
                     self._wait(delay, attempt, _sleep, cancel)
-                delay *= self.backoff
 
 
 # ---------------------------------------------------------------------------

@@ -27,7 +27,11 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import pickle
 import threading
+import warnings
+import zlib
 from collections import OrderedDict
 
 import numpy as np
@@ -580,6 +584,56 @@ class PlanCache:
             self._spill_by_sig = {k: list(v)
                                   for k, v in state["spill_by_sig"]}
             self._spill_window = [tuple(w) for w in state["spill_window"]]
+
+    # -- disk persistence (serving warm start; launch/serve.py) -------------
+
+    _SAVE_MAGIC = b"PLANCACHE1\n"
+
+    def save(self, path: str) -> None:
+        """Persist the full :meth:`state_dict` — signatures, committed
+        plans, anchors, counters, quarantine, ladder position — so a later
+        process (the inference server's cold start) can skip selection
+        *and* reproduce this run's plans identically.  Write is atomic and
+        crc-checked, matching the CheckpointManager idioms: serialize to
+        ``path + '.tmp'`` with a magic + crc32 header, fsync, then
+        ``os.replace`` into place — a crash mid-write never leaves a
+        half-written cache where a warm start would find it."""
+        with self._lock:
+            blob = pickle.dumps(self.state_dict(),
+                                protocol=pickle.HIGHEST_PROTOCOL)
+        tmp = path + ".tmp"
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(tmp, "wb") as f:
+            f.write(self._SAVE_MAGIC)
+            f.write(zlib.crc32(blob).to_bytes(4, "big"))
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    def load(self, path: str) -> bool:
+        """Restore a :meth:`save`d snapshot; returns True on success.
+        Any failure — missing file, bad magic, crc mismatch, unpicklable
+        payload — warns and leaves the cache untouched (corruption falls
+        back to a cold start, never to a crash or a half-loaded cache)."""
+        try:
+            with open(path, "rb") as f:
+                magic = f.read(len(self._SAVE_MAGIC))
+                if magic != self._SAVE_MAGIC:
+                    raise ValueError(f"bad magic {magic!r}")
+                crc = int.from_bytes(f.read(4), "big")
+                blob = f.read()
+            if zlib.crc32(blob) != crc:
+                raise ValueError("crc mismatch")
+            state = pickle.loads(blob)
+        except FileNotFoundError:
+            return False
+        except Exception as exc:           # corrupt file: cold start
+            warnings.warn(f"PlanCache.load({path!r}): {exc}; "
+                          "starting cold", stacklevel=2)
+            return False
+        self.load_state_dict(state)
+        return True
 
     def _store(self, sig: tuple, plan: KernelPlan, anchor: tuple) -> None:
         self._entries[sig] = (plan, anchor)

@@ -346,6 +346,31 @@ class NeighborSampler:
         while self._n_drawn < n:
             self.draw()
 
+    def ego_ticket(self, seeds, index: int) -> DrawTicket:
+        """Ticket for an *ego-net query* (serving): expand the caller's own
+        seed set instead of consuming the training epoch stream.
+
+        Seeds are validated, deduped and sorted — :meth:`build` assumes a
+        duplicate-free seed set (a duplicate would emit its sampled
+        in-edges twice and overflow the edge budget), and sorting makes
+        the batch a pure function of the seed *set*, not the caller's
+        ordering.  ``index`` picks the per-query rng stream, so the same
+        (seeds, index) pair reproduces the same :class:`SampledBatch`
+        bit-for-bit on any thread — the property the micro-batcher's
+        retries rely on.  At most ``batch_nodes`` seeds fit one batch
+        (fewer is fine: padding absorbs the slack)."""
+        seeds = np.unique(np.asarray(seeds, np.int64))
+        if seeds.size == 0:
+            raise ValueError("ego_ticket needs at least one seed node")
+        if seeds[0] < 0 or seeds[-1] >= self.graph.n:
+            raise ValueError(
+                f"seed ids must lie in [0, {self.graph.n}); got "
+                f"[{seeds[0]}, {seeds[-1]}]")
+        if seeds.size > self.batch_nodes:
+            raise ValueError(
+                f"{seeds.size} seeds exceed batch_nodes={self.batch_nodes}")
+        return DrawTicket(int(index), seeds)
+
     def build(self, ticket: DrawTicket) -> SampledBatch:
         """Fanout expansion + padding for one ticket: thread-safe (reads
         only the immutable CSR/ordering arrays; randomness streams off

@@ -1,0 +1,22 @@
+"""Resilient online GNN inference serving (the AdaptGear read path).
+
+Answering ego-net queries over a trained model, with the robustness
+envelope a public endpoint needs: deadline-aware micro-batching,
+admission control with explicit load shedding, a hysteretic
+graceful-degradation ladder over pre-compiled fanout rungs, kernel-fault
+quarantine through the shared PlanCache, and persisted-plan warm starts
+(zero steady-state compiles).  See serve/server.py for the dataflow and
+the serving-contract section in repro.core for the invariants.
+"""
+from repro.serve.admission import (ERROR, OK, PENDING, SHED, TIMEOUT,
+                                   AdmissionController, Request, ServeFuture)
+from repro.serve.degrade import DegradationLadder
+from repro.serve.ego import EgoNetSampler, default_rungs
+from repro.serve.server import InferenceServer, ServeConfig
+
+__all__ = [
+    "AdmissionController", "DegradationLadder", "EgoNetSampler",
+    "InferenceServer", "Request", "ServeConfig", "ServeFuture",
+    "default_rungs",
+    "PENDING", "OK", "SHED", "TIMEOUT", "ERROR",
+]

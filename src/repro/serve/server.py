@@ -1,0 +1,508 @@
+"""Resilient in-process GNN inference server (the AdaptGear read path).
+
+Dataflow per micro-batch (the contract documented in repro.core):
+
+    submit() -> AdmissionController (bounded queue, predictive shed)
+            -> collect()            (micro-batch: flush on size | deadline)
+            -> EgoNetSampler.build  (fixed-budget padded SampledBatch,
+                                     ft.RetryPolicy w/ decorrelated jitter,
+                                     FaultPlan injection point)
+            -> prepare_skeleton -> PlanCache lookup/plan_for -> fix_shapes
+            -> AOT executable       (one per (plan, rung shapes) — compiled
+                                     at warmup, zero compiles steady state)
+            -> logits -> per-request futures
+
+Robustness properties:
+
+* **bounded everything** — the queue sheds at capacity and predictively
+  (admission.py); an admitted request is never dropped afterwards: a
+  kernel fault on its batch quarantines the implicated kernels in the
+  shared PlanCache, re-selects next-best, and serves the same batch on
+  the degraded plan (the XLA ``coo`` floor guarantees termination).
+* **graceful degradation** — sustained overload steps the fanout ladder
+  down to a cheaper pre-compiled shape (degrade.py) instead of queuing;
+  calm steps back up, with hysteresis so the rung never flaps.
+* **cold-start robustness** — :meth:`InferenceServer.warmup` preloads a
+  :meth:`PlanCache.load` snapshot (plans bit-identical to the run that
+  saved them) and AOT-compiles every (rung, plan) executable up front,
+  so a warm-started server records zero new traces in steady state
+  (``n_traces`` is the observable).
+* **observability** — per-request latency histograms (p50/p99), queue
+  wait, shed/timeout/degrade counters, and spans over every stage ride
+  the run's ``repro.obs`` Telemetry.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.core import gnn, selector as sel_mod
+from repro.distributed import fault_tolerance as ft
+from repro.graphs import graph as graph_mod
+from repro.kernels.registry import REGISTRY
+from repro.obs import Telemetry, get_logger
+from repro.sampling.plan_cache import (MB_KERNELS, PlanCache, fix_shapes,
+                                       plan_payload_keys)
+from repro.serve.admission import (ERROR, OK, SHED, AdmissionController,
+                                   Request)
+from repro.serve.degrade import DegradationLadder
+from repro.serve.ego import EgoNetSampler, default_rungs
+from repro.train.gnn_steps import make_infer_step, prepare_skeleton
+
+__all__ = ["ServeConfig", "InferenceServer"]
+
+_log = get_logger("repro.serve")
+
+
+@dataclass
+class ServeConfig:
+    """Serving knobs (the model/sampling knobs stay on GNNConfig)."""
+    deadline_s: float = 0.25      # default per-request deadline
+    queue_limit: int = 64         # admission bound (requests)
+    max_batch: int = 16           # micro-batch size flush target (seeds)
+    max_wait_s: float = 0.01      # coalescing cap: a partial batch never
+    #                               waits longer than this for company
+    rungs: tuple = ()             # fanout ladder; () = derived from
+    #                               cfg.fanouts by repeated halving
+    down_after: int = 2           # ladder hysteresis (degrade.py)
+    up_after: int = 6
+    cooldown: int = 3
+    ewma_alpha: float = 0.3       # service-time estimate smoothing
+    est_service_s: float = 0.02   # pre-warmup service estimate
+    retry_max: int = 2            # transient build retries (0 = off)
+    retry_base_delay_s: float = 0.002
+    plan_cache_path: str = ""     # PlanCache.save/load snapshot for warmup
+    seed: int = 0                 # retry-jitter determinism
+
+
+class _CompileFailed:
+    """Memoized AOT-lowering failure for a (plan, shapes) key: in-flight
+    batches sharing the broken plan reuse the verdict and go straight to
+    quarantine instead of re-tracing (mirrors train.gnn_steps)."""
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
+class InferenceServer:
+    """In-process ego-net inference over a trained model.
+
+    ``plan_cache`` may be the training run's cache (shared quarantine +
+    committed plans); otherwise a fresh one is built and optionally
+    preloaded from ``serve_cfg.plan_cache_path`` at :meth:`warmup`.
+    ``fault_plan`` injects deterministic faults on the request path
+    (sampler-build exceptions retried, kernel faults quarantined) —
+    kernel compile/execute faults additionally need the registry patched
+    via ``with fault_plan.activate(): ...`` around the serving calls,
+    exactly as in training."""
+
+    def __init__(self, graph: graph_mod.Graph, cfg: gnn.GNNConfig, params,
+                 serve_cfg: ServeConfig | None = None,
+                 plan_cache: PlanCache | None = None,
+                 fault_plan: "ft.FaultPlan | None" = None,
+                 telemetry: Telemetry | None = None,
+                 clock=time.monotonic):
+        if cfg.model not in ("gcn", "gin", "sage"):
+            raise ValueError(f"serving supports gcn/gin/sage, "
+                             f"not {cfg.model!r}")
+        self.cfg = cfg
+        self.scfg = serve_cfg or ServeConfig()
+        self.params = params
+        self.fault_plan = fault_plan
+        self.clock = clock
+        self.tele = telemetry if telemetry is not None else Telemetry()
+        m = self.tele.metrics
+        rungs = self.scfg.rungs or default_rungs(cfg.fanouts)
+        self.ego = EgoNetSampler(graph, cfg, rungs)
+
+        in_dim = graph.features.shape[-1]
+        pairs = gnn.agg_width_pairs(cfg, in_dim, graph.n_classes)
+        epilogues = gnn.layer_epilogues(cfg, in_dim, graph.n_classes)
+        if plan_cache is not None:
+            plan_cache.attach_telemetry(self.tele)
+        self.cache = plan_cache or PlanCache(
+            pairs, dtype=np.float32, hw=sel_mod.default_hw(),
+            max_entries=cfg.cache_entries, probe_every=0,
+            edge_budget=self.ego.pad_budget(0), epilogues=epilogues,
+            telemetry=self.tele)
+
+        self.ladder = DegradationLadder(
+            len(self.ego), down_after=self.scfg.down_after,
+            up_after=self.scfg.up_after, cooldown=self.scfg.cooldown,
+            metrics=m)
+        self._est_service = float(self.scfg.est_service_s)
+        self.admission = AdmissionController(
+            self.scfg.queue_limit, self._estimate_wait, clock=clock,
+            metrics=m)
+        self.retry = (ft.RetryPolicy(
+            max_retries=self.scfg.retry_max,
+            base_delay_s=self.scfg.retry_base_delay_s,
+            jitter=True, seed=self.scfg.seed,
+            tracer=self.tele.tracer if self.tele.enabled else None)
+            if self.scfg.retry_max > 0 else None)
+
+        # jit/AOT machinery — same shape as the training consumer:
+        # plan.layers -> jitted infer fn; (layers, treedef, shapes) -> AOT
+        # executable; failures memoized so broken plans never re-trace
+        self._counters = dict(traces=0)
+        self._infer_fns: dict[tuple, object] = {}
+        self._compiled: dict[tuple, object] = {}
+        self._failed_compiles: dict[tuple, _CompileFailed] = {}
+        self._failed_steps: dict[tuple, BaseException] = {}
+        self._sig_of_layers: dict[tuple, tuple] = {}
+        self._compile_lock = threading.Lock()
+        aval = lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype)
+        self._warm_params = jax.tree.map(aval, params)
+
+        self._c_batches = m.counter("serve.batches")
+        self._c_errors = m.counter("serve.errors")
+        self._c_retries = m.counter("serve.retries")
+        self._c_quar = m.counter("serve.quarantined")
+        self._c_recov = m.counter("serve.recoveries")
+        self._c_shed = m.counter("serve.shed")        # shared w/ admission
+        self._c_timeouts = m.counter("serve.timeouts")
+        self._h_latency = m.histogram("serve.latency_s", window=4096)
+        self._h_service = m.histogram("serve.service_s")
+        self._h_bsize = m.histogram("serve.batch_size")
+        self._g_qlen = m.gauge("serve.queue_len")
+        self._last_pain = 0
+
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # -- load estimation ----------------------------------------------------
+
+    def _estimate_wait(self, queue_len: int) -> float:
+        """Expected seconds until a request arriving behind ``queue_len``
+        others is served: whole micro-batches ahead of it, each one EWMA
+        service time (admission's predictive-shed input)."""
+        batches_ahead = queue_len // max(self.scfg.max_batch, 1) + 1
+        return batches_ahead * self._est_service
+
+    @property
+    def n_traces(self) -> int:
+        return self._counters["traces"]
+
+    # -- plan resolution + AOT ----------------------------------------------
+
+    def _infer_fn(self, plan):
+        fn = self._infer_fns.get(plan.layers)
+        if fn is None:
+            with self._compile_lock:
+                fn = self._infer_fns.get(plan.layers)
+                if fn is None:
+                    fn = self._infer_fns[plan.layers] = make_infer_step(
+                        self.cfg, plan, self._counters)
+        return fn
+
+    def _executable(self, plan, args):
+        leaves, treedef = jax.tree_util.tree_flatten(args)
+        skey = (plan.layers, treedef,
+                tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+        fn = self._infer_fn(plan)
+        with self._compile_lock:
+            failed = self._failed_compiles.get(skey)
+            if failed is not None:
+                return failed
+            exe = self._compiled.get(skey)
+            if exe is None:
+                try:
+                    exe = self._compiled[skey] = fn.lower(
+                        self._warm_params, *args).compile()
+                except Exception as exc:
+                    failed = self._failed_compiles[skey] = \
+                        _CompileFailed(exc)
+                    return failed
+            return exe
+
+    def _resolve(self, rung: int, batch):
+        """PlanCache resolution + fixed-shape padding for one batch:
+        returns (plan, args, skel) where args is the infer tail
+        ``(fixed_dec, x, inv_deg)`` staged on device."""
+        skel, inv_deg = prepare_skeleton(batch, self.cfg)
+        plan = self.cache.lookup(skel)
+        if plan is None:
+            dec = skel.materialize(MB_KERNELS)
+            plan, _ = self.cache.plan_for(dec)
+        else:
+            dec = skel.materialize(plan_payload_keys(plan))
+        # canonical signature per step-fn key, as in training: the sig is
+        # static jit metadata, so every batch sharing a compiled fn must
+        # stamp the same value
+        csig = self._sig_of_layers.setdefault(plan.layers,
+                                              self.cache.signature(skel))
+        fixed = fix_shapes(dec, self.ego.pad_budget(rung),
+                           keep=plan_payload_keys(plan), stats=csig)
+        args = jax.device_put((fixed, batch.features, inv_deg))
+        return plan, args, skel
+
+    # -- kernel-fault recovery (quarantine + plan degradation) --------------
+
+    def _recover(self, rung: int, batch, skel, plan, exc: BaseException):
+        """Forward-only twin of the training loop's recover_step: drain
+        poisoned effect tokens, quarantine the implicated kernels for
+        this signature in the shared PlanCache, re-select among the
+        survivors, rebuild the payloads, and run the degraded plan —
+        escalating until a plan runs (the never-quarantined ``coo`` floor
+        terminates the loop).  Failures that implicate no kernel re-raise
+        unchanged: real bugs fail fast, they don't degrade."""
+        for _ in range(len(MB_KERNELS)):
+            ft.drain_effect_tokens()
+            self._failed_steps.setdefault(plan.layers, exc)
+            used = {k for layer in plan.layers for k in layer}
+            named = ft.fault_kernel_from(exc)
+            bad = ({named} if named is not None and named in used
+                   else {k for k in used if REGISTRY.get(k).pallas})
+            bad.discard("coo")
+            if not bad:
+                raise exc
+            sig = self.cache.signature(skel)
+            self._c_quar.inc(len(self.cache.quarantine(sig, bad)))
+            dec = skel.materialize(MB_KERNELS)
+            new_plan, _ = self.cache.plan_for(dec)
+            if new_plan.layers == plan.layers:
+                raise exc       # quarantine changed nothing: not a kernel
+            csig = self._sig_of_layers.setdefault(new_plan.layers, sig)
+            fixed = fix_shapes(dec, self.ego.pad_budget(rung),
+                               keep=plan_payload_keys(new_plan), stats=csig)
+            _, inv_deg = prepare_skeleton(batch, self.cfg)
+            args = jax.device_put((fixed, batch.features, inv_deg))
+            exe = self._executable(new_plan, args)
+            if isinstance(exe, _CompileFailed):
+                plan, exc = new_plan, exe.exc
+                continue
+            try:
+                logits = exe(self.params, *args)
+                out = np.asarray(logits)      # blocks; surfaces exec faults
+                self._c_recov.inc()
+                self.tele.audit.degrade(from_layers=plan.layers,
+                                        to_layers=new_plan.layers,
+                                        error=str(exc))
+                return out
+            except Exception as deeper:
+                plan, exc = new_plan, deeper
+        raise exc
+
+    # -- the serving path ---------------------------------------------------
+
+    def _build(self, rung: int, seeds, index: int):
+        """Sampler build + fault injection, the unit the jittered retry
+        policy re-runs on a transient failure (injection precedes the
+        skeleton, so a retried batch never double-counts the cache)."""
+        def once():
+            batch = self.ego.build(rung, seeds, index)
+            if self.fault_plan is not None:
+                batch = self.fault_plan.on_built(index, batch)
+            return batch
+
+        if self.retry is None:
+            return once()
+        return self.retry.run(once, on_retry=lambda a: self._c_retries.inc(),
+                              retryable=ft.default_transient)
+
+    def _serve_batch(self, rung: int, reqs: list[Request]) -> None:
+        tracer = self.tele.tracer
+        t0 = self.clock()
+        seeds = sorted({r.node for r in reqs})
+        index = self.ego.next_index()
+        try:
+            with tracer.span("serve.batch", cat="serve", index=index,
+                             rung=rung, n=len(reqs)):
+                with tracer.span("serve.build", cat="host"):
+                    batch = self._build(rung, seeds, index)
+                with tracer.span("serve.resolve", cat="host"):
+                    plan, args, skel = self._resolve(rung, batch)
+                with tracer.span("serve.infer", cat="device",
+                                 plan=str(plan.layers[0])):
+                    if plan.layers in self._failed_steps:
+                        logits = self._recover(
+                            rung, batch, skel, plan,
+                            self._failed_steps[plan.layers])
+                    else:
+                        exe = self._executable(plan, args)
+                        if isinstance(exe, _CompileFailed):
+                            logits = self._recover(rung, batch, skel, plan,
+                                                   exe.exc)
+                        else:
+                            try:
+                                logits = np.asarray(exe(self.params, *args))
+                            except Exception as exc:
+                                logits = self._recover(rung, batch, skel,
+                                                       plan, exc)
+        except Exception as exc:
+            # permanent failure (non-transient build, recovery exhausted):
+            # the admitted requests get an explicit error, never silence
+            self._c_errors.inc(len(reqs))
+            for r in reqs:
+                r.future.finish(ERROR, exc)
+            return
+        row_of = {int(n): i for i, n in enumerate(batch.nodes) if n >= 0}
+        now = self.clock()
+        for r in reqs:
+            row = logits[row_of[r.node]]
+            r.future.finish(OK, dict(node=r.node, rung=rung,
+                                     pred=int(np.argmax(row)),
+                                     logits=row.copy(),
+                                     latency_s=now - r.t_submit))
+            self._h_latency.observe(now - r.t_submit)
+            if self.tele.enabled:
+                with tracer.span("serve.request", cat="serve", node=r.node,
+                                 latency_s=now - r.t_submit):
+                    pass
+        service = now - t0
+        self._h_service.observe(service)
+        self._h_bsize.observe(len(reqs))
+        self._c_batches.inc()
+        a = self.scfg.ewma_alpha
+        self._est_service = (1 - a) * self._est_service + a * service
+        qlen = len(self.admission)
+        self._g_qlen.set(qlen)
+        # ladder signal: shedding/expiry since the last batch, or a queue
+        # holding more than one flush's worth of backlog
+        pain = self._c_shed.value + self._c_timeouts.value
+        overloaded = (pain > self._last_pain
+                      or qlen >= max(self.scfg.queue_limit // 2, 1))
+        self._last_pain = pain
+        self.ladder.observe(overloaded)
+
+    # -- public API ---------------------------------------------------------
+
+    def submit(self, node: int, deadline_s: float | None = None):
+        """Enqueue one ego-net query; returns its :class:`ServeFuture`
+        (already finished with status ``shed`` if admission rejected)."""
+        return self.admission.submit(
+            int(node),
+            self.scfg.deadline_s if deadline_s is None else deadline_s)
+
+    def step(self) -> int:
+        """Serve one micro-batch inline (deterministic single-threaded
+        mode for tests/benchmarks — no background thread).  Returns the
+        number of requests terminated (served or expired)."""
+        rung = self.ladder.rung
+        before = self._c_timeouts.value
+        reqs = self.admission.collect(
+            min(self.scfg.max_batch, self.ego.max_seeds(rung)),
+            self._est_service, stop=self._stop,
+            max_wait_s=self.scfg.max_wait_s)
+        expired = self._c_timeouts.value - before
+        if reqs:
+            self._serve_batch(rung, reqs)
+        return len(reqs) + int(expired)
+
+    def _loop(self):
+        while not self._stop.is_set():
+            try:
+                self.step()
+            except Exception:
+                _log.exception("serving loop error")
+
+    def start(self) -> "InferenceServer":
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._loop,
+                                            name="serve-loop", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+            self._thread = None
+        for r in self.admission.drain():    # unserved stragglers: shed,
+            if r.future.finish(SHED):       # never silently dropped
+                self._c_shed.inc()
+
+    def __enter__(self) -> "InferenceServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- warm start ---------------------------------------------------------
+
+    def warmup(self, path: str | None = None, save: bool = False,
+               probe_seeds=None) -> dict:
+        """Cold-start mitigation: optionally preload a persisted PlanCache
+        snapshot (plans bit-identical to the saving run; a corrupt file
+        falls back to cold start), then AOT-compile one probe batch per
+        rung so every steady-state shape has its executable before the
+        first request arrives.  With ``save=True`` the (possibly newly
+        selected) plans are persisted back for the next cold start.
+
+        Returns ``dict(loaded, new_traces, rungs)`` — a warm-started
+        server re-warmed from its own snapshot reports steady-state
+        batches with ``n_traces`` unchanged (the acceptance observable)."""
+        path = self.scfg.plan_cache_path if path is None else path
+        loaded = bool(path) and self.cache.load(path)
+        t0 = self.n_traces
+        n = self.ego.graph.n
+        if probe_seeds is None:
+            k = min(self.scfg.max_batch, self.ego.max_seeds(0), n)
+            probe_seeds = np.unique(np.linspace(0, n - 1, k).astype(int))
+        # pass 1 — one probe per rung: commits a plan for each rung's
+        # density signature (selection happens now, not on a request)
+        probes = []
+        for rung in range(len(self.ego)):
+            batch = self.ego.build(rung, probe_seeds, self.ego.next_index())
+            self._resolve(rung, batch)
+            probes.append((rung, batch))
+        # pass 2 — the (plan x rung) cross product: a plan committed for
+        # one rung's signature can be served at any rung (loaded snapshot
+        # entries, plan drift between batches), and the AOT cache is
+        # keyed by (plan, shapes), so every pair needs its executable up
+        # front for steady state to stay compile-free
+        plans: dict[tuple, object] = {}
+        for _, p, _ in self.cache.state_dict()["entries"]:
+            plans.setdefault(p.layers, p)
+        for rung, batch in probes:
+            skel, inv_deg = prepare_skeleton(batch, self.cfg)
+            sig = self.cache.signature(skel)
+            for p in plans.values():
+                keys = plan_payload_keys(p)
+                dec = skel.materialize(keys)
+                csig = self._sig_of_layers.setdefault(p.layers, sig)
+                fixed = fix_shapes(dec, self.ego.pad_budget(rung),
+                                   keep=keys, stats=csig)
+                args = jax.device_put((fixed, batch.features, inv_deg))
+                exe = self._executable(p, args)
+                if isinstance(exe, _CompileFailed):
+                    continue    # broken kernel: request path quarantines
+                try:
+                    np.asarray(exe(self.params, *args))
+                except Exception:
+                    ft.drain_effect_tokens()   # ditto for execute faults
+
+        if save and path:
+            self.cache.save(path)
+        return dict(loaded=loaded, new_traces=self.n_traces - t0,
+                    rungs=len(self.ego))
+
+    # -- introspection ------------------------------------------------------
+
+    def stats(self) -> dict:
+        m = self.tele.metrics
+        admitted = m.counter("serve.admitted").value
+        shed = self._c_shed.value
+        return dict(
+            admitted=admitted, shed=shed,
+            timeouts=self._c_timeouts.value,
+            errors=self._c_errors.value,
+            batches=self._c_batches.value,
+            retries=self._c_retries.value,
+            quarantined=self._c_quar.value,
+            recoveries=self._c_recov.value,
+            degrades=m.counter("serve.degrades").value,
+            restores=m.counter("serve.restores").value,
+            rung=self.ladder.rung,
+            n_traces=self.n_traces,
+            est_service_s=self._est_service,
+            shed_pct=100.0 * shed / max(admitted + shed, 1),
+            latency=self._h_latency.snapshot(),
+            service=self._h_service.snapshot(),
+            batch_size=self._h_bsize.snapshot(),
+            queue_wait=m.histogram("serve.queue_wait_s").snapshot())

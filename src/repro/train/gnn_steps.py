@@ -189,6 +189,26 @@ def make_sampled_step(cfg: gnn.GNNConfig, plan, counters: dict):
     return jax.jit(step)
 
 
+def make_infer_step(cfg: gnn.GNNConfig, plan, counters: dict):
+    """jit infer(params, dec, x, inv_deg) -> logits — the serving read
+    path (src/repro/serve/): the same forward pass the train step
+    differentiates, without loss/grad/Adam.
+
+    The contract mirrors :func:`make_sampled_step`: the step is keyed by
+    the committed plan (static kernel dispatch), ``dec`` is a traced
+    argument whose :func:`fix_shapes`-padded structure never varies, and
+    ``counters['traces']`` increments per retrace — which is how the
+    server's warm-start acceptance (zero compiles after warmup) is
+    observable.  Returns the full (node_budget, n_classes) logits; the
+    caller gathers its seeds' rows host-side, so one compiled executable
+    serves every micro-batch composition."""
+    def infer(params, dec, x, inv_deg):
+        counters["traces"] += 1
+        return gnn.forward(params, cfg, dec, x, plan, inv_deg)
+
+    return jax.jit(infer)
+
+
 @dataclass
 class MinibatchResult:
     losses: list
@@ -220,6 +240,8 @@ class MinibatchResult:
     #                                the full metrics snapshot (the cache/
     #                                pipeline/faults views above are
     #                                assembled from the same registry)
+    params: Any = None           # trained model params — what the serving
+    #                              tier (repro.serve) loads a server from
 
     def hit_rate(self, warmup: int = 0) -> float:
         h = self.hit_history[warmup:]
@@ -926,4 +948,4 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
         skeleton_hits=skel_cache.hits if skel_cache else 0,
         skeleton_misses=skel_cache.misses if skel_cache else 0,
         faults=fault_view(),
-        telemetry=tele.summary())
+        telemetry=tele.summary(), params=params)

@@ -1,0 +1,407 @@
+"""Resilient online inference serving (repro.serve + satellites):
+deadline shedding, micro-batch flush triggers, hysteretic degradation,
+PlanCache disk persistence + warm starts, decorrelated retry jitter, and
+kernel-fault quarantine on the request path."""
+import os
+import threading
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import gnn
+from repro.distributed import fault_tolerance as ft
+from repro.graphs import graph as G
+from repro.sampling.plan_cache import PlanCache
+from repro.serve import (ERROR, OK, SHED, TIMEOUT, AdmissionController,
+                         DegradationLadder, InferenceServer, ServeConfig,
+                         default_rungs)
+from repro.train import gnn_steps
+
+from test_sampling import dense_community_graph
+
+
+def serve_cfg(**kw):
+    d = dict(deadline_s=5.0, queue_limit=16, max_batch=8, max_wait_s=0.002)
+    d.update(kw)
+    return ServeConfig(**d)
+
+
+def gnn_cfg(**kw):
+    d = dict(model="gcn", sampler="neighbor", batch_nodes=16,
+             fanouts=(4, 2), hidden=8, n_layers=2, comm_size=16, seed=0)
+    d.update(kw)
+    return gnn.GNNConfig(**d)
+
+
+def small_server(g=None, cfg=None, scfg=None, steps=4, **server_kw):
+    g = g if g is not None else G.synth_dataset("cora", scale=0.1, seed=0)
+    cfg = cfg or gnn_cfg()
+    res = gnn_steps.train_minibatch(g, cfg, steps=steps, eval_batches=0)
+    return InferenceServer(g, cfg, res.params, serve_cfg=scfg or serve_cfg(),
+                           plan_cache=res.plan_cache, **server_kw)
+
+
+def drive(server, futs):
+    """Single-threaded deterministic serving: step until every future
+    lands."""
+    while any(not f.done() for f in futs):
+        server.step()
+    return [f.result(0) for f in futs]
+
+
+# -- ego tickets (sampling/sampler.py satellite) ------------------------------
+
+def test_ego_ticket_dedupes_validates_and_reproduces():
+    g = G.synth_dataset("cora", scale=0.1, seed=0)
+    cfg = gnn_cfg()
+    s = gnn_steps.make_sampler(g, cfg)
+    t = s.ego_ticket([5, 3, 5, 3, 9], index=7)
+    assert t.index == 7
+    assert t.chosen.tolist() == [3, 5, 9]          # deduped, sorted
+    with pytest.raises(ValueError):
+        s.ego_ticket([], index=0)
+    with pytest.raises(ValueError):
+        s.ego_ticket([g.n], index=0)
+    with pytest.raises(ValueError):
+        s.ego_ticket([-1], index=0)
+    with pytest.raises(ValueError):
+        s.ego_ticket(list(range(cfg.batch_nodes + 1)), index=0)
+    # pure in (seed set, index): bit-identical rebuilds on any thread
+    a = s.build(s.ego_ticket([3, 5, 9], 7))
+    b = s.build(s.ego_ticket([9, 5, 3, 3], 7))
+    np.testing.assert_array_equal(a.nodes, b.nodes)
+    np.testing.assert_array_equal(a.senders, b.senders)
+    np.testing.assert_array_equal(a.features, b.features)
+    # the epoch stream is untouched by ego queries
+    assert s._n_drawn == 0
+
+
+# -- PlanCache disk persistence (satellite) -----------------------------------
+
+def trained_cache():
+    g = G.synth_dataset("cora", scale=0.1, seed=0)
+    res = gnn_steps.train_minibatch(g, gnn_cfg(), steps=5, eval_batches=0)
+    return res.plan_cache
+
+
+def test_plan_cache_save_load_bit_identical(tmp_path):
+    cache = trained_cache()
+    path = str(tmp_path / "plans.bin")
+    cache.save(path)
+    fresh = PlanCache(cache.pairs, dtype=np.float32)
+    assert fresh.load(path)
+    a, b = cache.state_dict(), fresh.state_dict()
+    assert a["entries"] == b["entries"]      # plans bit-identical
+    assert a == b                            # counters/ladder/quarantine too
+
+
+def test_plan_cache_load_missing_and_corrupt(tmp_path):
+    cache = trained_cache()
+    before = cache.state_dict()
+    assert not cache.load(str(tmp_path / "nope.bin"))   # missing: quiet
+    path = str(tmp_path / "plans.bin")
+    cache.save(path)
+    blob = open(path, "rb").read()
+    for corrupt in [b"garbage", blob[:-4], blob[:11] + b"\xff" + blob[12:]]:
+        with open(path, "wb") as f:
+            f.write(corrupt)
+        with warnings.catch_warnings(record=True) as w:
+            warnings.simplefilter("always")
+            assert not cache.load(path)                 # corrupt: cold start
+        assert any("starting cold" in str(x.message) for x in w)
+        assert cache.state_dict() == before             # cache untouched
+    assert not os.path.exists(path + ".tmp")            # atomic write
+
+
+# -- decorrelated retry jitter (satellite) ------------------------------------
+
+def test_retry_jitter_deterministic_and_decorrelated():
+    mk = lambda: ft.RetryPolicy(max_retries=4, base_delay_s=0.01,
+                                jitter=True, seed=11, max_delay_s=0.08)
+    a, b = mk(), mk()
+    s0, s1 = a.delays(), a.delays()
+    assert s0 == b.delays()              # run N is a pure function of seed
+    assert s1 == b.delays()
+    assert s0 != s1                      # concurrent runs decorrelate
+    assert all(0.01 <= d <= 0.08 for d in s0 + s1)
+    # run() consumes the same ladder the Nth delays() call would
+    waits, calls = [], dict(n=0)
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 4:
+            raise ft.TransientError("boom")
+        return "done"
+
+    c = mk()
+    expect = mk().delays()
+    assert c.run(flaky, _sleep=waits.append) == "done"
+    assert waits == expect[:3]
+
+
+def test_retry_without_jitter_unchanged():
+    p = ft.RetryPolicy(max_retries=3, base_delay_s=1.0, backoff=2.0)
+    assert p.delays() == [1.0, 2.0, 4.0]
+    assert p.delays() == [1.0, 2.0, 4.0]   # no hidden state without jitter
+    p2 = ft.RetryPolicy(max_retries=3, base_delay_s=1.0, backoff=2.0,
+                        max_delay_s=1.5)
+    assert p2.delays() == [1.0, 1.5, 1.5]
+
+
+# -- admission control + micro-batching ---------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_admission_sheds_on_full_queue_and_hopeless_deadline():
+    clk = FakeClock()
+    adm = AdmissionController(limit=2, estimate_wait=lambda q: 0.0,
+                              clock=clk)
+    f1, f2 = adm.submit(1, 1.0), adm.submit(2, 1.0)
+    f3 = adm.submit(3, 1.0)                       # queue full
+    assert f3.status == SHED and f3.done()
+    assert f1.status == f2.status == "pending"
+    slow = AdmissionController(limit=8, estimate_wait=lambda q: 0.5,
+                               clock=clk)
+    assert slow.submit(1, 0.1).status == SHED     # predicted wait > deadline
+    assert slow.submit(2, 1.0).status == "pending"
+
+
+def test_deadline_expired_requests_shed_not_served():
+    clk = FakeClock()
+    adm = AdmissionController(limit=8, estimate_wait=lambda q: 0.0,
+                              clock=clk)
+    futs = [adm.submit(i, 0.05) for i in range(3)]
+    clk.t += 1.0                                   # deadlines long gone
+    live = adm.submit(99, 5.0)
+    got = adm.collect(max_n=1, service_s=0.01)     # size flush: no wall wait
+    assert [r.node for r in got] == [99]           # expired never served
+    for f in futs:
+        assert f.status == TIMEOUT and f.done()
+    assert live.status == "pending"
+
+
+def test_microbatch_flush_on_size():
+    clk = FakeClock()
+    adm = AdmissionController(limit=32, estimate_wait=lambda q: 0.0,
+                              clock=clk)
+    futs = [adm.submit(i, 10.0) for i in range(8)]
+    t0 = time.perf_counter()
+    got = adm.collect(max_n=4, service_s=0.01)
+    assert len(got) == 4                           # size flush, no waiting
+    assert time.perf_counter() - t0 < 1.0
+    assert len(adm) == 4
+    assert all(f.status == "pending" for f in futs)
+
+
+def test_microbatch_flush_on_deadline():
+    adm = AdmissionController(limit=32, estimate_wait=lambda q: 0.0)
+    adm.submit(1, 0.08)
+    t0 = time.perf_counter()
+    got = adm.collect(max_n=8, service_s=0.02)     # never fills: must flush
+    dt = time.perf_counter() - t0                  # on deadline slack
+    assert [r.node for r in got] == [1]
+    assert dt < 0.08                               # before the deadline
+    assert dt >= 0.02                              # after some coalescing
+
+
+def test_microbatch_max_wait_caps_coalescing():
+    adm = AdmissionController(limit=32, estimate_wait=lambda q: 0.0)
+    adm.submit(1, 10.0)                            # generous deadline
+    t0 = time.perf_counter()
+    got = adm.collect(max_n=8, service_s=0.01, max_wait_s=0.02)
+    assert len(got) == 1
+    assert time.perf_counter() - t0 < 5.0          # not the whole deadline
+
+
+# -- degradation ladder hysteresis --------------------------------------------
+
+def test_ladder_steps_down_and_up_with_hysteresis():
+    lad = DegradationLadder(3, down_after=2, up_after=4, cooldown=0)
+    assert not lad.observe(True)
+    assert lad.observe(True) and lad.rung == 1      # 2 consecutive hot
+    for _ in range(3):
+        assert not lad.observe(False)
+    assert lad.observe(False) and lad.rung == 0     # 4 consecutive calm
+    assert not lad.observe(False)                   # floor: no underflow
+
+
+def test_ladder_never_flaps():
+    lad = DegradationLadder(3, down_after=2, up_after=4, cooldown=2)
+    for i in range(40):                             # alternating load:
+        assert not lad.observe(i % 2 == 0)          # never a transition
+    assert lad.rung == 0
+    # a square wave of load: cooldown damps the transition rate — a
+    # 2-rung ladder moves at most once per half-period
+    lad2 = DegradationLadder(2, down_after=2, up_after=4, cooldown=2)
+    changes = sum(lad2.observe(True) for _ in range(10))
+    assert changes == 1 and lad2.rung == 1
+    changes = sum(lad2.observe(False) for _ in range(10))
+    assert changes == 1 and lad2.rung == 0
+
+
+def test_ladder_rejects_degenerate_hysteresis():
+    with pytest.raises(ValueError):
+        DegradationLadder(3, down_after=4, up_after=4)
+    with pytest.raises(ValueError):
+        DegradationLadder(0)
+
+
+def test_default_rungs_halve_to_floor():
+    assert default_rungs((8, 4)) == ((8, 4), (4, 2), (2, 1))
+    assert default_rungs((1, 1)) == ((1, 1),)
+
+
+# -- the server end to end ----------------------------------------------------
+
+def test_server_serves_admitted_requests():
+    srv = small_server()
+    srv.warmup()
+    t0 = srv.n_traces
+    futs = [srv.submit(i * 3 % srv.ego.graph.n) for i in range(12)]
+    results = drive(srv, futs)
+    assert {s for s, _ in results} == {OK}
+    for (_, v), f in zip(results, futs):
+        assert v["logits"].shape == (srv.ego.graph.n_classes,)
+        assert v["pred"] == int(np.argmax(v["logits"]))
+    assert srv.n_traces == t0                   # warm: zero new compiles
+    st = srv.stats()
+    assert st["admitted"] == 12 and st["errors"] == 0
+
+
+def test_server_background_thread_and_stop_sheds_stragglers():
+    srv = small_server(scfg=serve_cfg(est_service_s=0.001))
+    srv.warmup()
+    with srv:
+        futs = [srv.submit(i % srv.ego.graph.n) for i in range(6)]
+        assert all(f.result(timeout=30)[0] == OK for f in futs)
+    # post-stop: anything still queued is shed, never silently dropped
+    late = srv.admission.submit(0, 5.0)
+    srv.stop()
+    assert late.status in (SHED, "pending") or late.done()
+
+
+def test_server_sheds_under_synthetic_overload():
+    # a giant service estimate makes every deep-queue arrival hopeless:
+    # the controller must shed rather than queue unboundedly
+    srv = small_server(scfg=serve_cfg(queue_limit=4, est_service_s=3.0,
+                                      deadline_s=1.0))
+    futs = [srv.submit(i % srv.ego.graph.n) for i in range(12)]
+    assert sum(f.status == SHED for f in futs) == 12   # est_wait > deadline
+    st = srv.stats()
+    assert st["shed"] == 12 and st["shed_pct"] == 100.0
+
+
+def test_warm_start_from_persisted_cache_bit_identical(tmp_path):
+    path = str(tmp_path / "plans.bin")
+    g = G.synth_dataset("cora", scale=0.1, seed=0)
+    cfg = gnn_cfg()
+    res = gnn_steps.train_minibatch(g, cfg, steps=4, eval_batches=0)
+
+    writer = InferenceServer(g, cfg, res.params, serve_cfg=serve_cfg(),
+                             plan_cache=res.plan_cache)
+    writer.warmup()
+    futs = [writer.submit(i * 5 % g.n) for i in range(10)]
+    ref = drive(writer, futs)
+    writer.cache.save(path)
+    saved = {sig: (plan, anchor)
+             for sig, plan, anchor in writer.cache.state_dict()["entries"]}
+
+    # cold process: fresh server + fresh cache, warm-started from disk
+    reader = InferenceServer(g, cfg, res.params, serve_cfg=serve_cfg())
+    warm = reader.warmup(path=path)
+    assert warm["loaded"]
+    # plans bit-identical to the writer's snapshot (warmup probes may
+    # reorder the LRU, so compare as a mapping)
+    got = {sig: (plan, anchor)
+           for sig, plan, anchor in reader.cache.state_dict()["entries"]}
+    assert got == saved
+    t0 = reader.n_traces
+    futs = [reader.submit(i * 5 % g.n) for i in range(10)]
+    out = drive(reader, futs)
+    assert reader.n_traces == t0            # steady state: zero compiles
+    # identical params + identical plans -> identical predictions
+    for (sa, va), (sb, vb) in zip(ref, out):
+        assert sa == sb == OK and va["pred"] == vb["pred"]
+        np.testing.assert_allclose(va["logits"], vb["logits"],
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_warmup_corrupt_cache_falls_back_cold(tmp_path):
+    path = str(tmp_path / "plans.bin")
+    with open(path, "wb") as f:
+        f.write(b"not a plan cache")
+    srv = small_server()
+    with warnings.catch_warnings(record=True):
+        warnings.simplefilter("always")
+        warm = srv.warmup(path=path)
+    assert not warm["loaded"]               # cold start, not a crash
+    futs = [srv.submit(0)]
+    assert drive(srv, futs)[0][0] == OK
+
+
+def test_transient_build_faults_retried_on_request_path():
+    # injections are keyed by the ego stream index: warmup consumes one
+    # probe per rung (fanouts (4, 2) halve into 3 rungs -> indices 0..2),
+    # so the first query batches land on 3 and 4 — the jittered retry
+    # policy must absorb their transient build faults without the client
+    # ever noticing
+    fp = ft.FaultPlan(worker_faults={3: 1, 4: 2})
+    srv = small_server(scfg=serve_cfg(retry_max=3, retry_base_delay_s=0.001),
+                       fault_plan=fp)
+    assert len(srv.ego) == 3
+    srv.warmup()
+    futs = [srv.submit(i % srv.ego.graph.n) for i in range(4)]
+    results = drive(srv, futs)
+    assert {s for s, _ in results} == {OK}
+    assert fp.injected_worker >= 1
+    assert srv.stats()["retries"] >= 1 and srv.stats()["errors"] == 0
+
+
+def test_kernel_fault_on_request_path_quarantines_and_degrades():
+    """An executing Pallas kernel that starts failing mid-traffic is
+    quarantined for its signature in the shared PlanCache; the SAME
+    admitted requests are then served on the degraded plan — quarantine +
+    degrade, zero dropped requests."""
+    g = dense_community_graph()
+    cfg = gnn_cfg(model="gin", batch_nodes=16, fanouts=(512, 512),
+                  comm_size=64, reorder="bfs", inter_buckets=2,
+                  selector="cost_model")
+    res = gnn_steps.train_minibatch(g, cfg, steps=3, eval_batches=0)
+    # kernel faults patch the registry, so they bake in at trace time:
+    # everything that compiles — warmup probes included — runs inside
+    # activate(), exactly as the training robustness tests do.  Both
+    # Pallas kernels these dense plans commit are broken, so recovery has
+    # to escalate down the ladder until it reaches the XLA floor.
+    fp = ft.FaultPlan(kernel_faults={"bell": "execute",
+                                     "block_diag": "execute"})
+    srv = InferenceServer(g, cfg, res.params,
+                          serve_cfg=serve_cfg(max_batch=16),
+                          plan_cache=res.plan_cache, fault_plan=fp)
+    with fp.activate():
+        srv.warmup()
+        # the fault targets must actually be on the serving plans
+        used = {k for layers in srv._infer_fns for layer in layers
+                for k in layer}
+        assert used & {"bell", "block_diag"}
+        futs = [srv.submit(i * 17 % g.n) for i in range(16)]
+        results = drive(srv, futs)
+        assert {s for s, _ in results} == {OK}      # nobody dropped
+        assert fp.kernel_trips >= 1
+        st = srv.stats()
+        assert st["quarantined"] >= 1 and st["recoveries"] >= 1
+        assert st["errors"] == 0
+        # post-quarantine traffic keeps being served (same contract)
+        futs = [srv.submit(i * 13 % g.n) for i in range(16)]
+        results = drive(srv, futs)
+        assert {s for s, _ in results} == {OK}
+    quarantined = {k for q in srv.cache.state_dict()["quarantine"].values()
+                   for k in q}
+    assert quarantined & {"bell", "block_diag"}
