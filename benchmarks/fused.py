@@ -78,6 +78,106 @@ def run(n: int = 2048, e: int = 30000, fin: int = 64, fout: int = 512,
                      **{k: v * 1e6 for k, v in tier_times.items()}))
     # epilogue-fused GIN/SAGE on the contracting profile (widths reversed)
     rows += run_models(n=n, e=e, fin=fout, fout=fin, verbose=verbose)
+    # column-condensed MXU tiles vs blocked-ELL vs dense across occupancy
+    rows += run_tcgnn(verbose=verbose)
+    return rows
+
+
+def _paired_ratio(fn_a, fn_b, x, reps: int = 5):
+    """Interleaved min-times + median paired ratio t_a/t_b (machine-load
+    noise is common-mode within a pair — same estimator as run_models)."""
+    jax.block_until_ready(fn_a(x))
+    jax.block_until_ready(fn_b(x))
+    ta_s, tb_s = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a(x))
+        ta_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b(x))
+        tb_s.append(time.perf_counter() - t0)
+    ratio = float(np.median(np.asarray(ta_s) / np.asarray(tb_s)))
+    return min(ta_s), min(tb_s), ratio
+
+
+def _occupancy_tier(n, B, cols_per_brow, edges_per_col, seed=0):
+    """One inter tier with ~cols_per_brow distinct columns per block row,
+    each ~edges_per_col/B occupied — the knob that sweeps the
+    blocked-ELL padding-waste vs condensation-occupancy crossover."""
+    from repro.core import decompose as dm
+    rng = np.random.default_rng(seed)
+    nbr = n // B
+    rows_, cols_ = [], []
+    for i in range(nbr):
+        cs = rng.choice(n, size=cols_per_brow, replace=False)
+        for c in cs:
+            rr = rng.choice(B, size=edges_per_col, replace=False) + i * B
+            rows_.extend(rr)
+            cols_.extend([c] * edges_per_col)
+    rows_ = np.asarray(rows_, np.int64)
+    cols_ = np.asarray(cols_, np.int64)
+    return dm.build_subgraph("inter0", "offdiag", n, B, rows_, cols_,
+                             np.ones(len(rows_), np.float32))
+
+
+def run_tcgnn(n: int = 512, B: int = 32, F: int = 16,
+              verbose: bool = True) -> list[dict]:
+    """tcgnn_tile vs bell vs dense across column occupancy: the crossover
+    the cost model prices.  Sparse tiers (few distinct columns) belong to
+    blocked-ELL, mid-density tiers (many half-occupied columns) to the
+    condensed tiles, near-dense block rows to a plain MXU matmul.  Rows
+    are interpret-mode paired ratios — relative kernel work, not TPU
+    wall time."""
+    from repro.core import selector as sel_mod
+    from repro.kernels.registry import REGISTRY
+    hw = sel_mod.HwModel()
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((n, F)), jnp.float32)
+    profiles = {          # cols_per_brow, edges_per_col
+        "sparse": (8, 4),
+        "mid": (100, 16),
+        "dense": (n // 2, B),
+    }
+    rows = []
+    for name, (cpb, epc) in profiles.items():
+        sub = _occupancy_tier(n, B, cpb, epc)
+        p_tc = sub.formats["tcgnn_tile"]
+        p_bell = sub.formats["bell"]
+        a_dense = np.zeros((n, n), np.float32)
+        co = sub.formats["coo"]
+        a_dense[np.asarray(co.rows), np.asarray(co.cols)] = \
+            np.asarray(co.vals)
+        a_dense = jnp.asarray(a_dense)
+        tc = jax.jit(lambda xx: REGISTRY.get("tcgnn_tile").matvec(p_tc, xx))
+        bell = jax.jit(lambda xx: REGISTRY.get("bell").matvec(p_bell, xx))
+        dense = jax.jit(lambda xx: a_dense @ xx)
+        t_bell, t_tc, r_bell = _paired_ratio(bell, tc, x)
+        t_dense, _, r_dense = _paired_ratio(dense, tc, x)
+        pick = sel_mod.select_for_subgraph(sub, F, hw=hw)
+        if verbose:
+            emit(f"tcgnn_crossover_{name}", t_tc * 1e6,
+                 f"paired bell/tcgnn={r_bell:.2f}x dense/tcgnn="
+                 f"{r_dense:.2f}x nnz={sub.stats['nnz']} "
+                 f"col_occ={sub.stats['col_occupancy']:.2f} "
+                 f"cost_model_pick={pick}")
+        rows.append(dict(profile=name, tcgnn_us=t_tc * 1e6,
+                         bell_us=t_bell * 1e6, dense_us=t_dense * 1e6,
+                         bell_over_tcgnn=r_bell, dense_over_tcgnn=r_dense,
+                         pick=pick))
+        if name == "mid":
+            # fused A @ (X W) on the condensed tiles vs fused blocked-ELL —
+            # the layer-shaped row (W folded in, (n, F) intermediate dead)
+            w = jnp.asarray(rng.standard_normal((F, F)), jnp.float32)
+            tcf = jax.jit(lambda xx: REGISTRY.get(
+                "tcgnn_tile_fused").fused_matvec(p_tc, xx, w))
+            bellf = jax.jit(lambda xx: REGISTRY.get(
+                "bell_fused").fused_matvec(p_bell, xx, w))
+            t_bf, t_tf, r_f = _paired_ratio(bellf, tcf, x)
+            if verbose:
+                emit("tcgnn_fused_mid", t_tf * 1e6,
+                     f"paired bell_fused/tcgnn_fused={r_f:.2f}x")
+            rows.append(dict(profile="mid_fused", tcgnn_us=t_tf * 1e6,
+                             bell_us=t_bf * 1e6, bell_over_tcgnn=r_f))
     return rows
 
 

@@ -167,6 +167,20 @@ def run(dataset: str = "pubmed", scale: float = 0.05, steps: int = 25,
     sage_used = sorted({k for plan in sage_res.plans
                         for layer in plan for k in layer})
 
+    # column-condensed MXU tiles in the fixed-shape mini-batch path:
+    # pin tcgnn_tile on the inter tiers (budget-capped C + COO spill keeps
+    # the payload pytree fixed) and confirm the jitted step never retraces
+    tc_cfg = gnn.GNNConfig(model="gin", sampler="cluster",
+                           reorder="louvain",
+                           clusters_per_batch=clusters_per_batch,
+                           inter_buckets=2, selector="fixed",
+                           fixed_kernels=("block_diag", "tcgnn_tile"))
+    tc_res = gnn_steps.train_minibatch(graph, tc_cfg,
+                                       steps=max(steps // 2, 6),
+                                       eval_batches=1)
+    tc_used = sorted({k for plan in tc_res.plans
+                      for layer in plan for k in layer})
+
     # budget-K autotuning: short adaptive run, slack + spill in the JSON
     adapt_cfg = gnn.GNNConfig(model="gin", sampler="cluster",
                               reorder="louvain",
@@ -268,6 +282,8 @@ def run(dataset: str = "pubmed", scale: float = 0.05, steps: int = 25,
                prepare_speedup=prep_speedup,
                sampled_step=res.step_seconds, full_step=full.step_seconds,
                sage_step=sage_res.step_seconds, sage_plans=sage_used,
+               tcgnn_step=tc_res.step_seconds, tcgnn_plans=tc_used,
+               tcgnn_traces=tc_res.n_traces,
                skeleton_hit_rate=skel_rate,
                pipeline_iter=pipe_res.iter_seconds,
                sync_iter=res.iter_seconds,
@@ -310,6 +326,10 @@ def run(dataset: str = "pubmed", scale: float = 0.05, steps: int = 25,
              "(repeated cluster tuples skip decompose_skeleton)")
         emit("sage_fused_step", sage_res.step_seconds * 1e6,
              f"traces={sage_res.n_traces} kernels={','.join(sage_used)}")
+        emit("tcgnn_selected_step", tc_res.step_seconds * 1e6,
+             f"traces={tc_res.n_traces} kernels={','.join(tc_used)} "
+             "(condensed tiles pinned on inter tiers, fixed-shape "
+             "budget-capped payload)")
         emit("budget_k_slack", ac.get("bell_slack", 0.0),
              f"spill_frac={ac.get('spill_frac', 0.0):.4f} "
              f"slack_changes={ac.get('slack_changes', 0)} "

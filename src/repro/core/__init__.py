@@ -57,8 +57,10 @@ Architecture (data flow, one arrow per module boundary):
 Adding a kernel = one KernelSpec registration (name, kinds, format builder,
 matvec / fused_matvec, cost fn) in one file — kernels/csr.py is the
 template (kernels/sell_cs.py, the degree-sorted sell-C-sigma format, is a
-second instance); decomposition, both selectors, dispatch, and the
-benchmarks pick it up with no further edits.
+second instance; kernels/tcgnn_tile.py, the column-condensed dense-tile
+format that routes mid-density tiers through the MXU, a third);
+decomposition, both selectors, dispatch, and the benchmarks pick it up
+with no further edits.
 
 Mini-batch mode (graphs too large for full-batch; repro.sampling +
 train/gnn_steps.py) prepends a sampling stage and amortizes selection with
@@ -198,7 +200,14 @@ qualifies via its budget-padded variant: K capped at
 formats.bell_budget_k(budget, n_pad, B), block payloads padded to the cap
 with masked zero-blocks, overflow edges spilled to an in-payload COO tier
 (aggregated by segment-sum unfused, by per-edge gathered transform fused).
-ELL stays full-batch-only (max-degree width is data-dependent).
+tcgnn_tile qualifies the same way: its condensed-column count C — normally
+the data-dependent max distinct columns per block row — is capped at
+tcgnn_budget_c(budget, n_pad, B) (lane-aligned, slack-scaled mean columns
+per block row under the budget), tiles and gather index padded to the cap
+with masked zero slots, and edges beyond a block row's cap spilled to the
+same in-payload COO tier; the budgeted triple replaces the uncapped
+payload pair, whose C would retrace on every batch.  ELL stays
+full-batch-only (max-degree width is data-dependent).
 
 Online inference serving (repro.serve, driven by repro.launch.serve and
 benchmarks/serving.py) is the read path over a trained model — the same

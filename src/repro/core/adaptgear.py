@@ -246,9 +246,13 @@ def init_gin_conv(key, in_dim: int, hidden: int, out_dim: int) -> Params:
 
 
 def gin_conv(params: Params, dec: Decomposed, x: jax.Array,
-             kernels: Sequence[str]) -> jax.Array:
-    """GIN layer: MLP((1+eps) x + sum-agg(x)) (Xu et al.), with the MLP's
-    first weight pushed *through* the aggregation (linearity):
+             kernels: Sequence[str],
+             structure: str = "transform_first") -> jax.Array:
+    """GIN layer: MLP((1+eps) x + sum-agg(x)) (Xu et al.), under the
+    structure the selector priced (EpilogueSpec ``structure``):
+
+    transform-first — the MLP's first weight pushed *through* the
+    aggregation (linearity):
 
         h1 = relu((1+eps) S + A (X W1) + b1),   S = X W1
         y  = h1 W2 + b2
@@ -258,7 +262,23 @@ def gin_conv(params: Params, dec: Decomposed, x: jax.Array,
     compete on ``A (X W1)``.  ``S`` is needed by the self term regardless,
     so it doubles as the unfused candidates' precomputed transform (the
     selector prices their shared-transform share at zero — EpilogueSpec
-    ``free_transform``)."""
+    ``free_transform``).
+
+    aggregate-first — when the raw input is narrower than the hidden width
+    the rewrite would *widen* the sparse pass, so aggregate raw features
+    and run the whole MLP after (same result, by the same linearity):
+
+        z  = (1+eps) X + A X
+        y  = relu(z W1 + b1) W2 + b2
+    """
+    if structure == "aggregate_first":
+        names = plan_mod.normalize_layer(dec, kernels)
+        if not any(REGISTRY.get(k).fused for k in names):
+            z = (1.0 + params["eps"]) * x + aggregate(dec, x, names)
+            h1 = jax.nn.relu(z @ params["w1"] + params["b1"])
+            return h1 @ params["w2"] + params["b2"]
+        # fused kernel names imply transform-first (A (X W1) is the only
+        # pass they implement) — a pinned fused plan overrides the spec
     s = x @ params["w1"]
     seed = (1.0 + params["eps"]) * s + params["b1"]
     h1 = jax.nn.relu(aggregate_transform(dec, x, params["w1"], kernels,

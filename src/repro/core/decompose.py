@@ -176,6 +176,7 @@ jax.tree_util.register_dataclass(
 
 
 def _tier_stats(kind: str, n_pad: int, block_size: int, rows: np.ndarray,
+                cols: np.ndarray | None = None,
                 edge_budget: int | None = None,
                 bell_slack: float | None = None) -> dict:
     """Density statistics for one edge tier — everything the selectors, the
@@ -187,7 +188,19 @@ def _tier_stats(kind: str, n_pad: int, block_size: int, rows: np.ndarray,
     n_brow = max(n_pad // block_size, 1)
     occ = (len(np.unique(np.asarray(rows) // block_size)) / n_brow
            if nnz else 0.0)
-    stats = dict(nnz=nnz, density=nnz / max(denom, 1), brow_occupancy=occ)
+    # column occupancy: distinct (block-row, column) pairs per edge, in
+    # (0, 1] — the column-condensability the tcgnn_tile kernel exploits.
+    # Near 1.0 every edge owns a distinct condensed slot (no condensation);
+    # low values mean few distinct columns absorb many edges (dense
+    # condensed tiles, little padding).  The PlanCache signature bins it so
+    # tile-condensability is visible to plan lookup.
+    col_occ = 0.0
+    if nnz and cols is not None:
+        pairs = (np.asarray(rows, np.int64) // block_size) * np.int64(n_pad
+                 ) + np.asarray(cols, np.int64)
+        col_occ = len(np.unique(pairs)) / nnz
+    stats = dict(nnz=nnz, density=nnz / max(denom, 1), brow_occupancy=occ,
+                 col_occupancy=col_occ)
     if edge_budget:
         # budget-paddable builders key off this (blocked-ELL caps K from it)
         stats["edge_budget"] = int(edge_budget)
@@ -247,7 +260,7 @@ def build_subgraph(name: str, kind: str, n_pad: int, block_size: int,
     with ``edge_budget`` set, budget-paddable variants instead (blocked-ELL
     caps its stored-block count from the budget and spills the overflow).
     """
-    stats = _tier_stats(kind, n_pad, block_size, rows, edge_budget)
+    stats = _tier_stats(kind, n_pad, block_size, rows, cols, edge_budget)
     return _materialize_subgraph(name, kind, n_pad, block_size, rows, cols,
                                  vals, stats, kernels)
 
@@ -410,7 +423,7 @@ def decompose_skeleton(graph: Graph, comm_size: int = 16,
         order = np.argsort(r, kind="stable")
         r, c, v = r[order], c[order], v[order]
         return TierEdges(name, kind, r, c, v,
-                         _tier_stats(kind, n_pad, B, r, edge_budget,
+                         _tier_stats(kind, n_pad, B, r, c, edge_budget,
                                      bell_slack))
 
     tiers = [_tier("intra", DIAG, r_in, c_in, v_in)]

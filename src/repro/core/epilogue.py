@@ -15,7 +15,12 @@ can be pushed *through* the aggregation so the fused kernels apply:
   mlp    (GIN)   Y = relu((1+eps) S + A (X W1) + b1) W2 + b2,  S = X W1
                  (the shared first-layer transform ``S`` is needed by the
                  self term anyway, so unfused aggregation candidates get
-                 it for free — ``free_transform``)
+                 it for free — ``free_transform``).  When the raw input is
+                 narrower than the MLP hidden width the rewrite widens the
+                 sparse pass, so GIN layers carry a per-layer ``structure``
+                 choice: transform-first (above) vs. aggregate-first
+                 ``Y = MLP((1+eps) X + A X)`` — priced against each other
+                 by the selector (``gin_structure_candidates``)
 
 An :class:`EpilogueSpec` is a tiny frozen (hashable) record of that shape.
 It is threaded from ``core.gnn`` through :class:`~repro.core.plan.KernelPlan`
@@ -57,19 +62,33 @@ class EpilogueSpec:
     ``out_dim``    -- mlp only: the second matmul's output width (the
                       aggregated width itself is the MLP hidden width,
                       carried separately as the layer's ``(in, agg)`` pair)
+    ``structure``  -- mlp only: "transform_first" aggregates at the MLP
+                      hidden width with W1 pushed through the aggregation;
+                      "aggregate_first" aggregates the raw features and
+                      runs the whole MLP after (cheaper sparse pass when
+                      the input is narrower than the hidden width)
+    ``hidden``     -- mlp aggregate_first only: the MLP hidden width.  The
+                      transform-first spec reads it off the layer's
+                      ``(in, agg)`` pair (agg == hidden there), but the
+                      aggregate-first pair is ``(None, in_dim)``, so the
+                      hidden width must ride the spec for the dense MLP
+                      terms to price.
     """
     kind: str
     bias: bool = True
     activation: str | None = None
     mean_norm: bool = False
     out_dim: int = 0
+    structure: str = "transform_first"
+    hidden: int = 0
 
     @property
     def free_transform(self) -> bool:
         """True when the epilogue's self term already computes the shared
         transform ``H = X W`` the unfused candidates aggregate — so the
-        selector must not surcharge them for it."""
-        return self.kind == "mlp"
+        selector must not surcharge them for it.  Aggregate-first MLP
+        layers aggregate raw features (no transform exists to share)."""
+        return self.kind == "mlp" and self.structure == "transform_first"
 
 
 def layer_epilogues(model: str, dims: list, hidden: int) -> tuple:
@@ -83,10 +102,46 @@ def layer_epilogues(model: str, dims: list, hidden: int) -> tuple:
         return tuple(EpilogueSpec(kind="dual", mean_norm=True)
                      for _ in range(n_layers))
     if model == "gin":
-        return tuple(EpilogueSpec(kind="mlp", activation="relu",
-                                  out_dim=dims[i + 1])
+        # Dec-free structure rule: aggregate-first iff the raw input is
+        # narrower than the MLP hidden width.  Kernel costs are (to first
+        # order) linear in the aggregated feature width and the dense MLP
+        # flops are identical under both orderings, so in the dec-free
+        # limit the priced comparison (gin_structure_specs + plan_layer_
+        # cost, used by the full-batch path) reduces to this width test.
+        return tuple(gin_layer_spec(dims[i], hidden, dims[i + 1],
+                                    structure=("aggregate_first"
+                                               if dims[i] < hidden
+                                               else "transform_first"))
                      for i in range(n_layers))
     return tuple(None for _ in range(n_layers))
+
+
+def gin_layer_spec(fin: int, hidden: int, out_dim: int,
+                   structure: str) -> EpilogueSpec:
+    """One GIN layer's EpilogueSpec under a chosen structure."""
+    return EpilogueSpec(kind="mlp", activation="relu", out_dim=out_dim,
+                        structure=structure,
+                        hidden=hidden if structure == "aggregate_first" else 0)
+
+
+def gin_structure_candidates(fin: int, hidden: int, out_dim: int) -> tuple:
+    """Both structure candidates for one GIN layer, as
+    ``((pair, spec), (pair, spec))`` aligned for a priced comparison:
+
+      transform-first:  pair (fin, hidden)  — W1 pushed through, fused
+                        kernels compete on A (X W1)
+      aggregate-first:  pair (None, fin)    — raw-width aggregation, the
+                        whole MLP runs after; fused kernels sit out
+
+    The caller (``core.gnn.layer_plan_inputs``) prices each with
+    ``selector.plan_layer_cost`` — which folds in ``epilogue_cost``, so the
+    identical dense MLP terms cancel and the decision is carried by the
+    sparse pass width plus fused-kernel availability."""
+    tf = ((fin, hidden), gin_layer_spec(fin, hidden, out_dim,
+                                        "transform_first"))
+    af = ((None, fin), gin_layer_spec(fin, hidden, out_dim,
+                                      "aggregate_first"))
+    return tf, af
 
 
 def epilogue_cost(spec: EpilogueSpec | None, n: int, fin: int | None,
@@ -95,9 +150,22 @@ def epilogue_cost(spec: EpilogueSpec | None, n: int, fin: int | None,
     pays alike (it cannot be avoided by kernel choice, so it never changes
     the per-subgraph ranking — it enters whole-layer totals so structures
     with different hidden widths compare honestly)."""
-    if spec is None or hw is None or fin is None or spec.kind == "linear":
+    if spec is None or hw is None or spec.kind == "linear":
         return 0.0          # the bias seeds the accumulator: no extra pass
     be = np.dtype(dtype).itemsize
+    if spec.kind == "mlp" and spec.structure == "aggregate_first":
+        # the whole MLP runs after the raw-width aggregation: here
+        # ``agg_dim`` is the raw input width (the pair is (None, in_dim))
+        # and the hidden width rides the spec.  z = (1+eps)x + agg is an
+        # elementwise pass; then relu(z W1 + b1) W2 + b2.
+        h = spec.hidden
+        flops = 2.0 * n * agg_dim * h + 2.0 * n * h * spec.out_dim
+        bytes_ = (3.0 * n * agg_dim + agg_dim * h + 2.0 * n * h
+                  + h * spec.out_dim + n * spec.out_dim) * be
+        return (max(flops / hw.peak_flops, bytes_ / hw.hbm_bw)
+                + hw.launch_overhead_s)
+    if fin is None:
+        return 0.0
     if spec.kind == "dual":
         # self matmul X W_self + the combine add into the aggregated sum
         flops = 2.0 * n * fin * agg_dim

@@ -146,14 +146,16 @@ def autotune_decomposition(g: graph_mod.Graph, cfg: GNNConfig,
     """Bucket-count autotuning: compare whole-model cost-model totals across
     candidate inter-bucket counts and commit the cheapest decomposition.
     The per-k totals land in ``dec.stats['bucket_autotune']``."""
-    pairs = agg_width_pairs(cfg, in_dim, n_classes)
-    eps = layer_epilogues(cfg, in_dim, n_classes)
     hw = sel_mod.default_hw()
     best, best_total, totals = None, None, {}
     for k in ks:
         dec = dec_mod.decompose(g, comm_size=cfg.comm_size,
                                 method=cfg.reorder, edge_vals=edge_vals,
                                 inter_buckets=k)
+        # priced per k: GIN layers may flip structure with the bucket
+        # count (the sparse-pass width tradeoff depends on the tiers)
+        pairs, eps = layer_plan_inputs(cfg, in_dim, n_classes, dec=dec,
+                                       hw=hw)
         total = sum(sel_mod.plan_layer_cost(dec, fout, hw=hw, in_dim=fin,
                                             epilogue=ep)
                     for (fin, fout), ep in zip(pairs, eps))
@@ -205,7 +207,11 @@ def agg_width_pairs(cfg: GNNConfig, in_dim: int,
     if cfg.model in ("gcn", "sage"):
         return list(zip(dims[:-1], dims[1:]))   # transform-first
     if cfg.model == "gin":
-        return [(d, cfg.hidden) for d in dims[:-1]]  # aggregate at MLP width
+        # dec-free structure rule (mirrors epilogue.layer_epilogues):
+        # aggregate raw features when they are narrower than the MLP
+        # hidden width, else push W1 through and aggregate at hidden
+        return [(None, d) if d < cfg.hidden else (d, cfg.hidden)
+                for d in dims[:-1]]
     return [(None, w) for w in dims[:-1]]       # gat aggregates raw inputs
 
 
@@ -213,6 +219,47 @@ def layer_epilogues(cfg: GNNConfig, in_dim: int, n_classes: int) -> tuple:
     """Per-layer EpilogueSpecs aligned with :func:`agg_width_pairs`."""
     dims = [in_dim] + [cfg.hidden] * (cfg.n_layers - 1) + [n_classes]
     return ep_mod.layer_epilogues(cfg.model, dims, cfg.hidden)
+
+
+def layer_plan_inputs(cfg: GNNConfig, in_dim: int, n_classes: int,
+                      dec: dec_mod.Decomposed | None = None,
+                      dtype=jnp.float32, hw=None) -> tuple[list, tuple]:
+    """``(pairs, epilogues)`` for selection — the priced front door.
+
+    Without ``dec`` this is just ``(agg_width_pairs, layer_epilogues)``:
+    GIN layers use the dec-free width rule (aggregate-first iff the raw
+    input is narrower than the MLP hidden width) — the mini-batch path
+    lives here, since structure must be fixed before any batch exists.
+
+    With ``dec`` (full-batch: the decomposition exists before selection)
+    GIN layers where ``hidden > in_dim`` are *priced*: both structure
+    candidates run through ``selector.plan_layer_cost`` — sparse pass at
+    its structure's width, fused candidates competing only under
+    transform-first, the dense MLP terms folded in via ``epilogue_cost``
+    — and the cheaper one is committed on the layer's EpilogueSpec, so
+    ``tcgnn_tile`` and friends compete under both structures."""
+    pairs = agg_width_pairs(cfg, in_dim, n_classes)
+    eps = layer_epilogues(cfg, in_dim, n_classes)
+    if dec is None or cfg.model != "gin":
+        return pairs, eps
+    hw = hw or sel_mod.default_hw()
+    dims = [in_dim] + [cfg.hidden] * (cfg.n_layers - 1) + [n_classes]
+    pairs, eps = list(pairs), list(eps)
+    for i in range(cfg.n_layers):
+        fin = dims[i]
+        if cfg.hidden <= fin:
+            continue        # transform-first narrows the pass: keep it
+        (tf_pair, tf_spec), (af_pair, af_spec) = \
+            ep_mod.gin_structure_candidates(fin, cfg.hidden, dims[i + 1])
+        tf_cost = sel_mod.plan_layer_cost(dec, tf_pair[1], dtype, hw=hw,
+                                          in_dim=tf_pair[0],
+                                          epilogue=tf_spec)
+        af_cost = sel_mod.plan_layer_cost(dec, af_pair[1], dtype, hw=hw,
+                                          in_dim=af_pair[0],
+                                          epilogue=af_spec)
+        pairs[i], eps[i] = ((af_pair, af_spec) if af_cost < tf_cost
+                            else (tf_pair, tf_spec))
+    return pairs, tuple(eps)
 
 
 def _as_plan(dec: dec_mod.Decomposed, kernels, n_layers: int) -> KernelPlan:
@@ -239,7 +286,12 @@ def forward(params: Params, cfg: GNNConfig, dec: dec_mod.Decomposed,
         if cfg.model == "gcn":
             h = adaptgear.gcn_conv(layer, dec, h, names)
         elif cfg.model == "gin":
-            h = adaptgear.gin_conv(layer, dec, h, names)
+            # structure rides the plan's EpilogueSpec (selection priced
+            # it); plans without epilogues keep the transform-first default
+            ep = plan.epilogue_for_layer(i)
+            h = adaptgear.gin_conv(layer, dec, h, names,
+                                   structure=(ep.structure if ep is not None
+                                              else "transform_first"))
         elif cfg.model == "gat":
             h = adaptgear.gat_conv(layer, dec, h)
         elif cfg.model == "sage":
@@ -394,8 +446,8 @@ def train(graph: graph_mod.Graph, cfg: GNNConfig, steps: int = 50,
     # --- kernel selection (per layer: aggregation width differs by layer;
     # transform-first layers carry their input width so fused candidates
     # compete — GCN natively, GIN/SAGE through the epilogue rewrite)
-    pairs = agg_width_pairs(cfg, x.shape[-1], graph.n_classes)
-    eps = layer_epilogues(cfg, x.shape[-1], graph.n_classes)
+    pairs, eps = layer_plan_inputs(cfg, x.shape[-1], graph.n_classes,
+                                   dec=dec, dtype=x.dtype)
     plan, probe_times = select_plan(dec, cfg, pairs, dtype=x.dtype,
                                     epilogues=eps)
 

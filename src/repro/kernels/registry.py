@@ -508,3 +508,4 @@ REGISTRY.register(KernelSpec(
 # one-file kernel registrations (import side effect registers the spec)
 from repro.kernels import csr  # noqa: E402,F401
 from repro.kernels import sell_cs  # noqa: E402,F401
+from repro.kernels import tcgnn_tile  # noqa: E402,F401

@@ -39,6 +39,7 @@ import numpy as np
 from repro.core import formats, selector as sel_mod
 from repro.core.decompose import Decomposed
 from repro.core.plan import KernelPlan
+from repro.kernels import tcgnn_tile
 from repro.kernels.registry import REGISTRY
 from repro.obs import Telemetry
 
@@ -71,12 +72,16 @@ def _counter_attr(key: str):
 # stored-block count at K = bell_budget_k(budget, n_pad, B), pads block
 # payloads to that cap with masked zero-blocks, and spills overflow edges
 # to an in-payload COO tier (padded to the budget like any other COO).
-# ELL stays out (max-degree width is data-dependent).  Fused kernels alias
-# their unfused payload, so transform-first layers keep them — GCN
+# ELL stays out (max-degree width is data-dependent).  The condensed-tile
+# kernel (tcgnn_tile) qualifies the same way bell does: its column cap
+# C = tcgnn_budget_c(budget, n_pad, B) is a function of the budget alone,
+# block rows keep their densest C columns, and overflow edges spill to the
+# in-payload COO (padded to the budget like any other COO).  Fused kernels
+# alias their unfused payload, so transform-first layers keep them — GCN
 # natively, GIN/SAGE through the epilogue rewrite (core.epilogue); the
 # fused CSR path (per-edge gathered transform) rides the CSR payload.
 MB_KERNELS = ("block_diag", "block_diag_fused", "coo", "csr", "csr_fused",
-              "bell", "bell_fused")
+              "bell", "bell_fused", "tcgnn_tile", "tcgnn_tile_fused")
 
 
 # ---------------------------------------------------------------------------
@@ -137,6 +142,12 @@ def _pad_payload(name: str, payload, budget: int):
         # budget-padded blocked-ELL (bell, bell_t, spill): the bells are
         # already shape-fixed by construction (K from the edge budget),
         # only the spill COO needs the budget pad
+        return payload[:2] + (_pad_coo(payload[2], budget),)
+    if (isinstance(payload, tuple) and len(payload) == 3
+            and all(isinstance(b, tcgnn_tile.TcgnnTile) and b.budgeted
+                    for b in payload[:2])):
+        # budget-capped condensed tiles (tc, tc_t, spill): C is a function
+        # of the edge budget (tcgnn_budget_c), only the spill COO pads
         return payload[:2] + (_pad_coo(payload[2], budget),)
     raise TypeError(
         f"payload {name!r} ({type(payload).__name__}) has no fixed-shape "
@@ -216,7 +227,15 @@ def density_signature(dec, nnz_log2_step: float = 2.0,
     is anything exposing ``n_pad`` / ``block_size`` / ``subgraphs`` with
     per-tier ``kind`` + ``stats`` (a Decomposed or a DecomposeSkeleton).
 
-    Per tier: (kind, round(log2(nnz+1)/step), ceil(occupancy * bins)).
+    Per tier: (kind, round(log2(nnz+1)/step), ceil(occupancy * bins),
+    ceil(col_occupancy * bins)).  The fourth element bins the tier's
+    column occupancy (distinct condensed columns per edge —
+    decompose._tier_stats) so tile-condensability is visible to lookup:
+    two batches alike in nnz and block-row occupancy but unlike in
+    condensability select different condensed-tile (tcgnn) costs and must
+    not share a plan.  Decompositions predating the stat bin to 0, a value
+    a real tier never produces (any edge gives col_occupancy > 0), so old
+    persisted signatures cannot alias new ones.
     Coarse on purpose: batches from one sampler differ by sampling noise,
     not by regime, and the cost-model argmin is flat across a density
     decade — finer keys only manufacture misses (hit rate is the product
@@ -225,7 +244,8 @@ def density_signature(dec, nnz_log2_step: float = 2.0,
     tiers = tuple(
         (s.kind,
          int(round(math.log2(s.stats["nnz"] + 1) / nnz_log2_step)),
-         int(math.ceil(s.stats.get("brow_occupancy", 0.0) * occ_bins)))
+         int(math.ceil(s.stats.get("brow_occupancy", 0.0) * occ_bins)),
+         int(math.ceil(s.stats.get("col_occupancy", 0.0) * occ_bins)))
         for s in dec.subgraphs)
     return (dec.n_pad, dec.block_size, tiers)
 
@@ -479,18 +499,32 @@ class PlanCache:
         and the whole point of folding it into the signature is to force
         re-selection rather than serve plans priced for the old cap."""
         tiers = tuple((s.kind, math.log2(s.stats["nnz"] + 1),
-                       s.stats.get("brow_occupancy", 0.0))
+                       s.stats.get("brow_occupancy", 0.0),
+                       s.stats.get("col_occupancy", 0.0))
                       for s in dec.subgraphs)
         return (self._dec_slack(dec) if self.adapt_budget_k else None, tiers)
 
     def _near(self, a: tuple, b: tuple) -> bool:
-        """Same minting slack, within half a quantization cell per tier."""
+        """Same minting slack, within half a quantization cell per tier.
+
+        Length-tolerant per tier: anchors minted before the column-
+        occupancy stat carry 3-element tier tuples (persisted snapshots —
+        state_dict/save round-trip them verbatim), and a legacy anchor
+        compares on the stats it has, so pre-upgrade entries keep serving
+        their plans instead of going permanently cold."""
         if a[0] != b[0] or len(a[1]) != len(b[1]):
             return False
-        return all(ka == kb
-                   and abs(la - lb) <= self.nnz_log2_step / 2
-                   and abs(oa - ob) <= 0.5 / self.occ_bins
-                   for (ka, la, oa), (kb, lb, ob) in zip(a[1], b[1]))
+        for ta, tb in zip(a[1], b[1]):
+            if ta[0] != tb[0]:
+                return False
+            if abs(ta[1] - tb[1]) > self.nnz_log2_step / 2:
+                return False
+            if abs(ta[2] - tb[2]) > 0.5 / self.occ_bins:
+                return False
+            if (len(ta) > 3 and len(tb) > 3
+                    and abs(ta[3] - tb[3]) > 0.5 / self.occ_bins):
+                return False
+        return True
 
     def select(self, dec: Decomposed,
                exclude: frozenset | None = None) -> KernelPlan:

@@ -411,6 +411,7 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
     tracer = tele.tracer
     fixed_names = (tuple(cfg.fixed_kernels) if cfg.selector == "fixed"
                    else None)
+    audited_fixed_sigs: set = set()   # one plan receipt per pinned signature
     sampler = make_sampler(graph, cfg)
     in_dim = graph.features.shape[-1]
     pairs = gnn.agg_width_pairs(cfg, in_dim, graph.n_classes)
@@ -594,6 +595,21 @@ def train_minibatch(graph: graph_mod.Graph, cfg: gnn.GNNConfig,
                                              n_layers=cfg.n_layers,
                                              epilogues=epilogues)
                 c.hit = True
+                if tele.audit.enabled:
+                    # pinned plans leave the same priced receipt as
+                    # cost-model mints (source="fixed"), once per distinct
+                    # signature — the calibration report covers every
+                    # kernel that actually ran, pinned or selected
+                    sig = cache.signature(c.dec)
+                    if sig not in audited_fixed_sigs:
+                        audited_fixed_sigs.add(sig)
+                        modeled = sel_mod.plan_modeled_costs(
+                            c.dec, c.plan.layers, cache.pairs, cache.dtype,
+                            hw=cache.hw, epilogues=cache.epilogues)
+                        tele.audit.plan(
+                            sig=sig, layers=c.plan.layers,
+                            tiers=[s.name for s in c.dec.subgraphs],
+                            modeled_s=modeled, source="fixed")
             else:
                 # signature/anchor read tier stats only, so the skeleton is
                 # consumed directly — no payload-free Decomposed on the hot

@@ -262,6 +262,39 @@ def test_telemetry_on_off_training_bit_identical(tmp_path):
     assert {"plan", "calibration", "metrics"} <= events
 
 
+def test_audit_logs_tcgnn_candidates(tmp_path):
+    """The selector-audit receipt covers the condensed-tile kernel: a
+    mini-batch run committing tcgnn_tile on the inter tiers leaves plan
+    events that name it, each with a modeled cost per (layer, tier) —
+    so calibration reports price the MXU-dense candidate like any other
+    registry kernel (telemetry-smoke CI gate)."""
+    g = small_graph(n=128, e=1200)
+    cfg = gnn.GNNConfig(model="gin", sampler="cluster", comm_size=8,
+                        clusters_per_batch=4, inter_buckets=2,
+                        reorder="bfs", selector="fixed",
+                        fixed_kernels=("block_diag", "tcgnn_tile"),
+                        telemetry=True,
+                        telemetry_out=str(tmp_path / "audit.jsonl"))
+    res = _run(cfg, g)
+    assert any("tcgnn_tile" in layer for plan in res.plans for layer in plan)
+    with open(tmp_path / "audit.jsonl") as f:
+        recs = [json.loads(line) for line in f]
+    plans = [r for r in recs if r["event"] == "plan"]
+    assert plans, "telemetry-enabled run must leave plan receipts"
+    tc_plans = [p for p in plans
+                if any("tcgnn_tile" in layer for layer in p["layers"])]
+    assert tc_plans, "audit must log the condensed-tile kernel candidate"
+    for p in tc_plans:
+        # every committed choice is priced: one modeled cost per
+        # (layer, tier), finite and positive for tcgnn_tile too
+        assert len(p["modeled_s"]) == len(p["layers"])
+        for layer, row in zip(p["layers"], p["modeled_s"]):
+            assert len(row) == len(p["tiers"])
+            for kernel, cost in zip(layer, row):
+                assert np.isfinite(cost) and cost > 0.0, (kernel, cost)
+        assert p["modeled_total_s"] > 0.0
+
+
 def test_probe_audit_records_modeled_vs_measured():
     g = small_graph(n=128, e=1200)
     cfg = gnn.GNNConfig(model="gcn", sampler="cluster", comm_size=8,

@@ -211,6 +211,67 @@ def test_density_signature_quantizes():
         dec_mod.decompose(g, comm_size=8, method="bfs", inter_buckets=2))
     for s in dec.subgraphs:
         assert 0.0 <= s.stats["brow_occupancy"] <= 1.0
+        assert 0.0 < s.stats["col_occupancy"] <= 1.0 or not s.stats["nnz"]
+
+
+def test_signature_col_occupancy_bin_distinguishes():
+    """Two decompositions alike in nnz and block-row occupancy but unlike
+    in column condensability must not share a signature (the tcgnn cost
+    crossover lives exactly on that axis)."""
+    import dataclasses as dc
+    g = small_graph(n=128, e=1000)
+    dec = dec_mod.decompose(g, comm_size=8, method="bfs", inter_buckets=2)
+
+    def with_col_occ(d, v):
+        subs = tuple(dc.replace(s, stats={**s.stats, "col_occupancy": v})
+                     for s in d.subgraphs)
+        return dc.replace(d, subgraphs=subs)
+
+    lo, hi = with_col_occ(dec, 0.2), with_col_occ(dec, 0.9)
+    assert density_signature(lo) != density_signature(hi)
+    # and each tier key carries the 4th (column-occupancy) element
+    assert all(len(t) == 4 for t in density_signature(dec)[2])
+
+
+def test_legacy_signatures_keep_hitting(tmp_path):
+    """Regression: entries minted before the column-occupancy bin (3-element
+    per-tier signature keys, 3-tuple anchors — e.g. a persisted PlanCache
+    snapshot) must keep serving their plans after the upgrade via the
+    length-tolerant near-hit path, and the flapping key re-aliases."""
+    g = small_graph(n=128, e=1000)
+    cfg = gnn.GNNConfig(model="gcn", sampler="cluster", comm_size=8,
+                        clusters_per_batch=4, inter_buckets=2,
+                        reorder="bfs")
+    sampler = gnn_steps.make_sampler(g, cfg)
+    dec, _ = gnn_steps.prepare_batch(sampler.sample(), cfg)
+    pairs = gnn.agg_width_pairs(cfg, g.features.shape[-1], g.n_classes)
+
+    cache = PlanCache(pairs)
+    plan, _ = cache.plan_for(dec)
+
+    # rewrite the minted entry into its pre-upgrade shape: strip the 4th
+    # per-tier element from both the signature key and the anchor (this is
+    # exactly what load()ing an old snapshot leaves resident)
+    sig = cache.signature(dec)
+    legacy_sig = sig[:2] + (tuple(t[:3] for t in sig[2]),)
+    assert legacy_sig != sig
+    _, anchor = cache._entries.pop(sig)
+    legacy_anchor = (anchor[0], tuple(t[:3] for t in anchor[1]))
+    cache._entries[legacy_sig] = (plan, legacy_anchor)
+
+    # save/load round-trips the legacy-shaped entry verbatim
+    path = str(tmp_path / "plans.bin")
+    cache.save(path)
+    fresh = PlanCache(pairs)
+    assert fresh.load(path)
+
+    m0 = fresh.misses                # counters ride the snapshot
+    got, hit = fresh.plan_for(dec)
+    assert hit and got.layers == plan.layers
+    assert fresh.near_hits == 1 and fresh.misses == m0
+    # the new-format signature is aliased now: next lookup is exact
+    _, hit = fresh.plan_for(dec)
+    assert hit and fresh.hits == 1
 
 
 def test_keep_empty_buckets_pins_tier_count():

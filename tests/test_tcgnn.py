@@ -1,0 +1,331 @@
+"""TC-GNN-style column-condensed MXU tiles (kernels/tcgnn_tile.py).
+
+Property tests: the condensed contraction (XLA row gather + batched Pallas
+MXU pass, with its custom VJPs) must match the dense reference for forward
+AND grads, f32 and bf16, uncapped and budget-capped with *real* spill (the
+C floor is one lane = 128 columns, so spill needs tiers wider than 128);
+the fused A @ (X W) path and the accumulating variants must agree with
+their unfused/seeded twins; budget-capped payloads must be shape-fixed
+across edge sets (the MB_KERNELS admission rule) and keep the jitted
+mini-batch step at one trace; and the cost model must prefer the
+condensed tiles over blocked-ELL on a mid-density tier whose blocks are
+mostly padding but whose columns are mostly occupied.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import decompose as dm, formats, gnn
+from repro.core import selector as sel_mod
+from repro.graphs import graph as G
+from repro.kernels import tcgnn_tile as tc_mod
+from repro.kernels.registry import REGISTRY
+from repro.sampling.plan_cache import MB_KERNELS, _pad_payload
+from repro.train import gnn_steps
+
+
+def random_tier(seed, n, nnz):
+    rng = np.random.default_rng(seed)
+    r = rng.integers(0, n, nnz)
+    c = rng.integers(0, n, nnz)
+    key = r.astype(np.int64) * n + c
+    _, keep = np.unique(key, return_index=True)
+    r, c = r[keep], c[keep]
+    v = rng.standard_normal(len(r)).astype(np.float32)
+    return formats.coo_from_edges(n, n, r, c, v), \
+        formats.coo_from_edges(n, n, c, r, v)
+
+
+def dense_of(coo: formats.COO) -> np.ndarray:
+    a = np.zeros((coo.n_rows, coo.n_cols), np.float32)
+    a[np.asarray(coo.rows), np.asarray(coo.cols)] = np.asarray(coo.vals)
+    return a
+
+
+def hub_tier(seed, n, fan, extra):
+    """Block row 0 fans out to ``fan`` distinct columns (forcing real
+    spill whenever fan > the budgeted C) + ``extra`` random edges."""
+    rng = np.random.default_rng(seed)
+    cols0 = rng.choice(n, size=fan, replace=False)
+    rows0 = rng.integers(0, 8, fan)
+    r2 = rng.integers(0, n, extra)
+    c2 = rng.integers(0, n, extra)
+    r = np.concatenate([rows0, r2])
+    c = np.concatenate([cols0, c2])
+    key = r.astype(np.int64) * n + c
+    _, keep = np.unique(key, return_index=True)
+    r, c = r[keep], c[keep]
+    v = rng.standard_normal(len(r)).astype(np.float32)
+    return formats.coo_from_edges(n, n, r, c, v), \
+        formats.coo_from_edges(n, n, c, r, v)
+
+
+BLOCKS = [8, 16, 32]
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nnz=st.integers(1, 600),
+       bi=st.integers(0, len(BLOCKS) - 1), bf16=st.booleans())
+def test_tcgnn_matches_dense_fwd_and_grad(seed, nnz, bi, bf16):
+    """Uncapped condensed tiles == dense, forward and dX, through the
+    registry dispatch (Pallas kernel + custom VJP), any block size."""
+    dtype, tol = (jnp.bfloat16, 2e-1) if bf16 else (jnp.float32, 1e-4)
+    n, F = 64, 16
+    B = BLOCKS[bi]
+    coo, coo_t = random_tier(seed, n, nnz)
+    A = dense_of(coo)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(rng.standard_normal((n, F)).astype(np.float32), dtype)
+    spec = REGISTRY.get("tcgnn_tile")
+    p = spec.build(coo, coo_t, B, dict(nnz=coo.nnz))
+    assert len(p) == 2 and not p[0].budgeted
+
+    y = np.asarray(jax.device_get(spec.matvec(p, x)), np.float32)
+    y_ref = A @ np.asarray(jax.device_get(x), np.float32)
+    np.testing.assert_allclose(y, y_ref, rtol=tol, atol=tol)
+
+    g = jax.grad(lambda xx: spec.matvec(p, xx).astype(jnp.float32).sum())(x)
+    g_ref = A.T @ np.ones((n, F), np.float32)
+    np.testing.assert_allclose(np.asarray(jax.device_get(g), np.float32),
+                               g_ref, rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), fan=st.integers(150, 230),
+       bf16=st.booleans())
+def test_tcgnn_capped_with_real_spill_matches_dense(seed, fan, bf16):
+    """Budget-capped triple with spill actually flowing (C pinned at the
+    128-lane floor, hub block row fanning past it): stored + spilled edges
+    partition the tier exactly, and fwd + dX + the fused path still match
+    dense — pad + spill is a decomposition, never an approximation."""
+    dtype, tol = (jnp.bfloat16, 2e-1) if bf16 else (jnp.float32, 1e-4)
+    n, B, Fi, Fo = 256, 8, 8, 16
+    coo, coo_t = hub_tier(seed, n, fan, 200)
+    A = dense_of(coo)
+    budget = 500                 # C = lane-ceil(2*500/32) = 128 < fan
+    assert tc_mod.tcgnn_budget_c(budget, n, B) == 128
+    spec = REGISTRY.get("tcgnn_tile")
+    p = spec.build(coo, None, B, dict(nnz=coo.nnz, edge_budget=budget))
+    assert len(p) == 3 and p[0].budgeted and p[1].budgeted
+    assert p[2].nnz > 0          # the hub really spilled
+    stored = int(np.count_nonzero(np.asarray(jax.device_get(p[0].tiles))))
+    assert stored + p[2].nnz == coo.nnz
+
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(rng.standard_normal((n, Fi)).astype(np.float32), dtype)
+    w = jnp.asarray(rng.standard_normal((Fi, Fo)).astype(np.float32), dtype)
+    xf = np.asarray(jax.device_get(x), np.float32)
+    wf = np.asarray(jax.device_get(w), np.float32)
+
+    y = np.asarray(jax.device_get(spec.matvec(p, x)), np.float32)
+    np.testing.assert_allclose(y, A @ xf, rtol=tol, atol=tol)
+    g = jax.grad(lambda xx: spec.matvec(p, xx).astype(jnp.float32).sum())(x)
+    np.testing.assert_allclose(np.asarray(jax.device_get(g), np.float32),
+                               A.T @ np.ones((n, Fi), np.float32),
+                               rtol=tol, atol=tol)
+
+    fspec = REGISTRY.get("tcgnn_tile_fused")
+    yf = np.asarray(jax.device_get(fspec.fused_matvec(p, x, w)), np.float32)
+    np.testing.assert_allclose(yf, A @ (xf @ wf), rtol=tol, atol=tol)
+    gx, gw = jax.grad(
+        lambda xx, ww: fspec.fused_matvec(p, xx, ww).astype(
+            jnp.float32).sum(), argnums=(0, 1))(x, w)
+    ones = np.ones((n, Fo), np.float32)
+    np.testing.assert_allclose(np.asarray(jax.device_get(gx), np.float32),
+                               (A.T @ ones) @ wf.T, rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(jax.device_get(gw), np.float32),
+                               xf.T @ (A.T @ ones), rtol=tol, atol=tol)
+
+
+def test_tcgnn_acc_mode_equivalence(rng):
+    """matvec_acc(p, x, y0) == matvec(p, x) + y0 (and the fused twin),
+    forward and grads — the threaded-accumulator dispatch contract."""
+    n, B, Fi, Fo = 64, 8, 8, 16
+    coo, coo_t = random_tier(5, n, 400)
+    spec = REGISTRY.get("tcgnn_tile")
+    fspec = REGISTRY.get("tcgnn_tile_fused")
+    p = spec.build(coo, coo_t, B, dict(nnz=coo.nnz))
+    x = jnp.asarray(rng.standard_normal((n, Fi)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((Fi, Fo)), jnp.float32)
+    y0 = jnp.asarray(rng.standard_normal((n, Fi)), jnp.float32)
+    z0 = jnp.asarray(rng.standard_normal((n, Fo)), jnp.float32)
+
+    np.testing.assert_allclose(
+        np.asarray(spec.matvec_acc(p, x, y0)),
+        np.asarray(spec.matvec(p, x) + y0), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(fspec.fused_matvec_acc(p, x, w, z0)),
+        np.asarray(fspec.fused_matvec(p, x, w) + z0), rtol=1e-5, atol=1e-5)
+
+    ga = jax.grad(lambda xx: spec.matvec_acc(p, xx, y0).sum())(x)
+    gb = jax.grad(lambda xx: (spec.matvec(p, xx) + y0).sum())(x)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                               rtol=1e-5, atol=1e-5)
+    gaw = jax.grad(lambda ww: fspec.fused_matvec_acc(p, x, ww, z0).sum())(w)
+    gbw = jax.grad(lambda ww: (fspec.fused_matvec(p, x, ww) + z0).sum())(w)
+    np.testing.assert_allclose(np.asarray(gaw), np.asarray(gbw),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tcgnn_capped_payload_shape_fixed_across_edge_sets():
+    """One (budget, n_pad, B) -> one treedef + leaf-shape signature, no
+    matter the batch's edges — the MB_KERNELS admission rule."""
+    n, B, budget = 256, 8, 500
+    sigs = []
+    for seed, nnz in [(0, 30), (1, 900), (2, 1)]:
+        coo, _ = random_tier(seed, n, nnz)
+        p = REGISTRY.get("tcgnn_tile").build(
+            coo, None, B, dict(nnz=coo.nnz, edge_budget=budget))
+        p = _pad_payload("tcgnn_tile", p, budget)
+        leaves, treedef = jax.tree_util.tree_flatten(p)
+        sigs.append((treedef, [(np.shape(l), np.asarray(l).dtype)
+                               for l in leaves]))
+    assert sigs[0] == sigs[1] == sigs[2]
+
+
+def test_tcgnn_uncapped_payload_rejected_by_fix_shapes():
+    """A data-dependent-C payload must not silently enter the mini-batch
+    path (it would retrace every batch)."""
+    coo, coo_t = random_tier(0, 64, 200)
+    p = REGISTRY.get("tcgnn_tile").build(coo, coo_t, 8, dict(nnz=coo.nnz))
+    with pytest.raises(TypeError, match="fixed-shape"):
+        _pad_payload("tcgnn_tile", p, 500)
+
+
+def test_tcgnn_budget_c_bounds():
+    assert tc_mod.tcgnn_budget_c(0, 256, 8) == 128          # lane floor
+    assert tc_mod.tcgnn_budget_c(10**9, 256, 8) == 256      # <= lane-pad(n)
+    c1 = tc_mod.tcgnn_budget_c(1000, 1024, 8)
+    c2 = tc_mod.tcgnn_budget_c(4000, 1024, 8)
+    assert 128 <= c1 <= c2 <= 1024                          # monotone
+    assert c1 % 128 == 0 and c2 % 128 == 0                  # lane aligned
+
+
+def mid_density_tier(n=512, B=32, cols_per_brow=100, edges_per_col=16,
+                     seed=0):
+    """The regime the condensed tiles own: block rows touching ~100
+    distinct columns, each column half-occupied — blocked-ELL stores a
+    mostly-empty (B, B) block per touched block column, while the
+    condensed tile stores exactly the occupied columns."""
+    rng = np.random.default_rng(seed)
+    nbr = n // B
+    rows, cols = [], []
+    for i in range(nbr):
+        cs = rng.choice(n, size=cols_per_brow, replace=False)
+        for c in cs:
+            rr = rng.choice(B, size=edges_per_col, replace=False) + i * B
+            rows.extend(rr)
+            cols.extend([c] * edges_per_col)
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    vals = np.ones(len(rows), np.float32)
+    return dm.build_subgraph("inter0", "offdiag", n, B, rows, cols, vals)
+
+
+def test_cost_model_selects_tcgnn_on_mid_density_tier():
+    """The acceptance tier: the cost model prefers the condensed tiles
+    over blocked-ELL (and every other candidate) where column occupancy
+    is high but block occupancy is low."""
+    sub = mid_density_tier()
+    hw = sel_mod.HwModel()       # deterministic: never the CPU fallback
+    pick = sel_mod.select_for_subgraph(sub, 16, hw=hw)
+    assert pick == "tcgnn_tile"
+    c_tc = sel_mod.candidate_cost(sub, "tcgnn_tile", 16, hw=hw)
+    c_bell = sel_mod.candidate_cost(sub, "bell", 16, hw=hw)
+    assert c_tc < c_bell
+    # the signature the PlanCache keys on sees the column occupancy
+    assert 0.0 < sub.stats["col_occupancy"] <= 1.0
+
+
+def test_tcgnn_competes_in_both_selector_modes():
+    """Registered for real: present in the full-sweep candidate set (both
+    specs), in MB_KERNELS, and probed by the feedback selector."""
+    assert "tcgnn_tile" in MB_KERNELS and "tcgnn_tile_fused" in MB_KERNELS
+    sub = mid_density_tier(n=128, B=8, cols_per_brow=20, edges_per_col=4)
+    names = {s.name for s in REGISTRY.candidates_for(sub,
+                                                     include_fused=True)}
+    assert {"tcgnn_tile", "tcgnn_tile_fused"} <= names
+
+
+def test_no_retrace_with_tcgnn_in_mb_kernels():
+    """Trace-counter contract: committing tcgnn_tile in the mini-batch
+    plan keeps the jitted step at exactly one trace across batches (fixed
+    selector pins the plan so the count isolates payload-shape
+    stability)."""
+    rng = np.random.default_rng(0)
+    n = 128
+    src = rng.integers(0, n, 1500).astype(np.int32)
+    dst = rng.integers(0, n, 1500).astype(np.int32)
+    key = src.astype(np.int64) * n + dst
+    _, keep = np.unique(key, return_index=True)
+    src, dst = src[keep], dst[keep]
+    feats = rng.standard_normal((n, 5)).astype(np.float32)
+    labels = rng.integers(0, 3, n).astype(np.int32)
+    g = G.Graph(n, src, dst, feats, labels, 3)
+    cfg = gnn.GNNConfig(model="gin", sampler="cluster", comm_size=8,
+                        clusters_per_batch=4, inter_buckets=2,
+                        reorder="bfs", selector="fixed",
+                        fixed_kernels=("block_diag", "tcgnn_tile"))
+    res = gnn_steps.train_minibatch(g, cfg, steps=6, eval_batches=1)
+    assert res.n_traces == 1
+    assert res.plans == [(("block_diag", "tcgnn_tile", "tcgnn_tile"),)
+                         * cfg.n_layers]
+    assert np.isfinite(res.losses).all()
+
+
+@pytest.mark.parametrize("B", BLOCKS)
+@pytest.mark.parametrize("bf16", [False, True])
+def test_tcgnn_matches_dense_deterministic(B, bf16):
+    """Non-hypothesis twin of the uncapped property test (runs on
+    machines without hypothesis): fwd + dX, one seed per (block size,
+    dtype)."""
+    dtype, tol = (jnp.bfloat16, 2e-1) if bf16 else (jnp.float32, 1e-4)
+    n, F = 64, 16
+    coo, coo_t = random_tier(7, n, 450)
+    A = dense_of(coo)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((n, F)).astype(np.float32), dtype)
+    spec = REGISTRY.get("tcgnn_tile")
+    p = spec.build(coo, coo_t, B, dict(nnz=coo.nnz))
+    y = np.asarray(jax.device_get(spec.matvec(p, x)), np.float32)
+    np.testing.assert_allclose(y, A @ np.asarray(jax.device_get(x),
+                                                 np.float32),
+                               rtol=tol, atol=tol)
+    g = jax.grad(lambda xx: spec.matvec(p, xx).astype(jnp.float32).sum())(x)
+    np.testing.assert_allclose(np.asarray(jax.device_get(g), np.float32),
+                               A.T @ np.ones((n, F), np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("bf16", [False, True])
+def test_tcgnn_capped_spill_deterministic(bf16):
+    """Non-hypothesis twin of the capped-with-real-spill property test."""
+    dtype, tol = (jnp.bfloat16, 2e-1) if bf16 else (jnp.float32, 1e-4)
+    n, B, Fi, Fo = 256, 8, 8, 16
+    coo, _ = hub_tier(3, n, 200, 200)
+    A = dense_of(coo)
+    spec = REGISTRY.get("tcgnn_tile")
+    p = spec.build(coo, None, B, dict(nnz=coo.nnz, edge_budget=500))
+    assert p[2].nnz > 0
+    stored = int(np.count_nonzero(np.asarray(jax.device_get(p[0].tiles))))
+    assert stored + p[2].nnz == coo.nnz
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((n, Fi)).astype(np.float32), dtype)
+    w = jnp.asarray(rng.standard_normal((Fi, Fo)).astype(np.float32), dtype)
+    xf = np.asarray(jax.device_get(x), np.float32)
+    wf = np.asarray(jax.device_get(w), np.float32)
+    y = np.asarray(jax.device_get(spec.matvec(p, x)), np.float32)
+    np.testing.assert_allclose(y, A @ xf, rtol=tol, atol=tol)
+    fspec = REGISTRY.get("tcgnn_tile_fused")
+    yf = np.asarray(jax.device_get(fspec.fused_matvec(p, x, w)), np.float32)
+    np.testing.assert_allclose(yf, A @ (xf @ wf), rtol=tol, atol=tol)
+    gx, gw = jax.grad(
+        lambda xx, ww: fspec.fused_matvec(p, xx, ww).astype(
+            jnp.float32).sum(), argnums=(0, 1))(x, w)
+    ones = np.ones((n, Fo), np.float32)
+    np.testing.assert_allclose(np.asarray(jax.device_get(gx), np.float32),
+                               (A.T @ ones) @ wf.T, rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(jax.device_get(gw), np.float32),
+                               xf.T @ (A.T @ ones), rtol=tol, atol=tol)
